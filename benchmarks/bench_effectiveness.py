@@ -1,0 +1,48 @@
+"""Paper Table 4: %% of queries answered by DL alone, BL alone, and DBL,
+plus query batch latency.  DL answers positives (+ Thm1/2 negatives);
+BL answers containment negatives; DBL combines both; the remainder falls
+through to the pruned BFS."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import query as Q
+from .common import DEFAULT_DATASETS, csv_row, load, random_queries, timed
+
+
+def run_one(name: str, *, scale: float, n_queries: int) -> dict:
+    bg = load(name, scale=scale)
+    idx = bg.index()
+    u, v = random_queries(bg, n_queries)
+    uj, vj = jnp.asarray(u), jnp.asarray(v)
+
+    stats = Q.label_stats(idx.packed, uj, vj)
+    dl = float(np.asarray(stats["dl"]).mean())
+    bl = float(np.asarray(stats["bl"]).mean())
+    dbl = float(np.asarray(stats["dbl"]).mean())
+
+    def label_pass():
+        Q.label_verdicts(idx.packed, uj, vj).block_until_ready()
+
+    t_label = timed(label_pass)
+    t_full = timed(lambda: idx.query(u, v, bfs_chunk=64, max_iters=64),
+                   repeats=1)
+    return {"dataset": name, "dl%": 100 * dl, "bl%": 100 * bl,
+            "dbl%": 100 * dbl, "label_ms": 1e3 * t_label,
+            "full_ms": 1e3 * t_full}
+
+
+def main(scale: float = 0.15, n_queries: int = 100_000, datasets=None):
+    rows = []
+    print("dataset,dl%,bl%,dbl%,label_ms,full_ms")
+    for name in datasets or DEFAULT_DATASETS:
+        r = run_one(name, scale=scale, n_queries=n_queries)
+        rows.append(r)
+        print(f"{r['dataset']},{r['dl%']:.1f},{r['bl%']:.1f},"
+              f"{r['dbl%']:.1f},{r['label_ms']:.1f},{r['full_ms']:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

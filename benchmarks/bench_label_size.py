@@ -1,0 +1,30 @@
+"""Paper Table 5: query performance vs DL / BL label sizes (bits)."""
+from __future__ import annotations
+
+from .common import csv_row, load, random_queries, timed
+
+SIZES = (16, 32, 64, 128, 256)
+
+
+def main(scale: float = 0.1, n_queries: int = 20_000,
+         datasets=("LJ", "Email", "Wiki", "Twitter")):
+    rows = []
+    print("dataset,axis," + ",".join(str(s) for s in SIZES))
+    for name in datasets:
+        bg = load(name, scale=scale)
+        u, v = random_queries(bg, n_queries)
+        for axis in ("bl", "dl"):
+            times = []
+            for s in SIZES:
+                kw = {"k_prime": s} if axis == "bl" else {"k": s}
+                idx = bg.index(**kw)
+                t = timed(lambda: idx.query(u, v, bfs_chunk=64,
+                                            max_iters=64), repeats=1)
+                times.append(1e3 * t)
+            rows.append((name, axis, times))
+            print(f"{name},{axis}," + ",".join(f"{t:.1f}" for t in times))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

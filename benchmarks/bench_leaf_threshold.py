@@ -1,0 +1,28 @@
+"""Paper Fig 3: generalized BL leaf selection M(u) <= r sweep."""
+from __future__ import annotations
+
+from .common import load, random_queries, timed
+
+THRESHOLDS = (0, 1, 4, 16, 64)
+
+
+def main(scale: float = 0.1, n_queries: int = 20_000,
+         datasets=("Email", "Wiki", "Web")):
+    rows = []
+    print("dataset," + ",".join(f"r={r}" for r in THRESHOLDS))
+    for name in datasets:
+        bg = load(name, scale=scale)
+        u, v = random_queries(bg, n_queries)
+        times = []
+        for r in THRESHOLDS:
+            idx = bg.index(leaf_r=r)
+            t = timed(lambda: idx.query(u, v, bfs_chunk=64, max_iters=64),
+                      repeats=1)
+            times.append(1e3 * t)
+        rows.append((name, times))
+        print(name + "," + ",".join(f"{t:.1f}" for t in times))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Paper Table 3: landmark-selection heuristics (A=max, B=min, C=sum,
+D=betweenness-proxy, ours=product) -> query time for a fixed batch."""
+from __future__ import annotations
+
+from .common import DEFAULT_DATASETS, load, random_queries, timed
+
+METHODS = {"A_max": "max", "B_min": "min", "C_sum": "sum",
+           "D_betweenness": "betweenness", "ours_product": "product"}
+
+
+def main(scale: float = 0.1, n_queries: int = 20_000, datasets=None):
+    print("dataset," + ",".join(METHODS))
+    rows = []
+    for name in datasets or DEFAULT_DATASETS:
+        bg = load(name, scale=scale)
+        u, v = random_queries(bg, n_queries)
+        times = []
+        for label, method in METHODS.items():
+            idx = bg.index(selection=method)
+            t = timed(lambda: idx.query(u, v, bfs_chunk=64, max_iters=64),
+                      repeats=1)
+            times.append(1e3 * t)
+        rows.append((name, times))
+        print(name + "," + ",".join(f"{t:.1f}" for t in times))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

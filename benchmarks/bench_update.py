@@ -1,0 +1,77 @@
+"""Paper Figs 4 & 5: edge-insertion throughput.
+
+DBL label maintenance (Alg 3, batched) vs:
+- DAG recompute (DAGGER's job: SCC condensation after general updates);
+- IP-lite label maintenance (same MIN-monoid engine; the synthetic-update
+  regime of Fig 5 — IP's published numbers exclude DAG maintenance, so the
+  honest comparison is label-update vs label-update, with the DAG cost
+  shown separately);
+- B-BFS has no index to update (query-only baseline, bench_parallel.py).
+
+General updates (Fig 4): random new edges, including SCC-merging ones —
+DBL needs no DAG so its cost is the pruned propagation only.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.baselines.dag_maintain import scc_condense_numpy
+from repro.baselines.ip_lite import IPIndex
+from repro.core import make_graph
+from .common import DEFAULT_DATASETS, load, timed
+
+
+def main(scale: float = 0.1, n_insert: int = 1000, batch: int = 100,
+         datasets=None):
+    rows = []
+    print("dataset,dbl_ms_per_batch,ip_lite_ms_per_batch,"
+          "dag_recompute_ms,dbl_speedup_vs_dag")
+    for name in datasets or DEFAULT_DATASETS:
+        bg = load(name, scale=scale)
+        rng = np.random.default_rng(7)
+        ns = rng.integers(0, bg.n, n_insert).astype(np.int32)
+        nd = rng.integers(0, bg.n, n_insert).astype(np.int32)
+
+        # --- DBL batched Alg 3
+        idx = bg.index(m_extra=n_insert)
+        state = {"i": idx, "off": 0}
+
+        def dbl_batch():
+            off = state["off"] % (n_insert - batch)
+            state["i"] = state["i"].insert_edges(ns[off:off + batch],
+                                                 nd[off:off + batch],
+                                                 max_iters=64)
+            state["i"].packed.dl_in.block_until_ready()
+            state["off"] += batch
+
+        t_dbl = timed(dbl_batch, repeats=3, warmup=1)
+
+        # --- IP-lite (synthetic-update analogue)
+        g = make_graph(bg.src, bg.dst, bg.n, m_cap=len(bg.src) + n_insert)
+        ip = IPIndex.build(g, n_cap=bg.n, k=8, max_iters=64)
+        ip_state = {"i": ip, "off": 0}
+
+        def ip_batch():
+            off = ip_state["off"] % (n_insert - batch)
+            ip_state["i"] = ip_state["i"].insert_edges(
+                ns[off:off + batch], nd[off:off + batch], max_iters=64)
+            ip_state["i"].label_in.block_until_ready()
+            ip_state["off"] += batch
+
+        t_ip = timed(ip_batch, repeats=3, warmup=1)
+
+        # --- DAG recompute (what DAGGER must maintain on general updates)
+        all_src = np.concatenate([bg.src, ns[:batch]])
+        all_dst = np.concatenate([bg.dst, nd[:batch]])
+        t_dag = timed(lambda: scc_condense_numpy(bg.n, all_src, all_dst),
+                      repeats=1, warmup=0)
+
+        speedup = t_dag / t_dbl
+        rows.append((name, t_dbl, t_ip, t_dag, speedup))
+        print(f"{name},{1e3 * t_dbl:.1f},{1e3 * t_ip:.1f},"
+              f"{1e3 * t_dag:.1f},{speedup:.1f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

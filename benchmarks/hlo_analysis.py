@@ -1,0 +1,209 @@
+"""Post-SPMD HLO text analyzer for the roofline.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE (verified in this
+repo's probes), so scanned-layer models would be undercounted by ~L x.  This
+module parses ``compiled.as_text()`` instead:
+
+- builds the computation call graph (ENTRY -> fusion `calls=` / while
+  `body=/condition=` / `to_apply=`), with while trip counts taken from XLA's
+  own ``backend_config={"known_trip_count":{"n":..}}`` annotation;
+- every op's cost is scaled by the product of trip counts on its call path;
+- dot FLOPs from operand/result shapes (2·M·N·K, batched), via a per-
+  computation symbol table (all shapes are post-partition = per device);
+- collective bytes per device with a ring-model: all-gather / reduce-scatter
+  move payload ~= shard x (group-1), all-reduce ~= 2x, all-to-all and
+  collective-permute ~= result bytes.
+
+Everything returned is PER-DEVICE, matching the roofline terms
+(benchmarks/roofline.py divides by per-chip peak rates).
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+"
+                    r"([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\((.*?)\)\s+->")
+_CALL_RE = re.compile(r"(?:calls|to_apply)=%([\w.\-]+)")
+_WHILE_RE = re.compile(r"condition=%([\w.\-]+),\s*body=%([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[\\"]*:\s*{[\\"]*n[\\"]*:\s*[\\"]*(\d+)')
+_GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_info(type_str: str):
+    """'f32[16,256]{1,0}' -> (bytes, dims). Tuples: sum of element bytes."""
+    total = 0
+    dims_out = None
+    for m in _TYPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        d = [int(x) for x in dims.split(",") if x] if dims else []
+        n = 1
+        for x in d:
+            n *= x
+        total += n * _DTYPE_BYTES[dt]
+        if dims_out is None:
+            dims_out = d
+    return total, (dims_out or [])
+
+
+def _parse_computations(text: str):
+    comps: dict[str, list[dict]] = {}
+    cur = None
+    for line in text.splitlines():
+        m = _COMP_RE.match(line.strip())
+        if m and line.rstrip().endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+            # register params: "p: f32[..], p2: (s32[], ..)"
+            header = m.group(2)
+            for pm in re.finditer(r"([\w.\-]+):\s*([^,()]+(?:\([^)]*\))?)",
+                                  header):
+                b, dims = _shape_info(pm.group(2))
+                comps[cur].append({"name": pm.group(1), "op": "parameter",
+                                   "bytes": b, "dims": dims, "line": ""})
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        om = _OP_RE.match(line)
+        if om:
+            name, type_str, op, rest = om.groups()
+            b, dims = _shape_info(type_str)
+            comps[cur].append({"name": name, "op": op, "bytes": b,
+                               "dims": dims, "line": line})
+    return comps
+
+
+def analyze_hlo(text: str) -> dict:
+    comps = _parse_computations(text)
+    # symbol tables
+    sym = {c: {o["name"]: o for o in ops} for c, ops in comps.items()}
+
+    # call graph with multipliers
+    edges: dict[str, list[tuple[str, float]]] = defaultdict(list)
+    for c, ops in comps.items():
+        for o in ops:
+            line = o["line"]
+            if o["op"] == "while":
+                wm = _WHILE_RE.search(line)
+                tm = _TRIP_RE.search(line)
+                trip = float(tm.group(1)) if tm else 1.0
+                if wm:
+                    edges[wm.group(1)].append((c, 1.0))       # condition
+                    edges[wm.group(2)].append((c, trip))      # body x trip
+            else:
+                for cm in _CALL_RE.finditer(line):
+                    edges[cm.group(1)].append((c, 1.0))
+
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_RE.match(line)
+            entry = m.group(1)
+            break
+
+    mult: dict[str, float] = {}
+
+    def multiplier(c: str, seen=()) -> float:
+        if c == entry:
+            return 1.0
+        if c in mult:
+            return mult[c]
+        if c in seen:
+            return 1.0
+        total = 0.0
+        for parent, factor in edges.get(c, []):
+            total += multiplier(parent, seen + (c,)) * factor
+        mult[c] = total if total else 1.0
+        return mult[c]
+
+    # dots
+    dot_flops = 0.0
+    conv_flops = 0.0
+    for c, ops in comps.items():
+        mul = multiplier(c)
+        for o in ops:
+            if o["op"] == "dot":
+                lhs_m = re.search(r"dot\(%?([\w.\-]+),", o["line"])
+                k = 1
+                cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}",
+                               o["line"])
+                if lhs_m and cm and lhs_m.group(1) in sym[c]:
+                    ldims = sym[c][lhs_m.group(1)]["dims"]
+                    for ci in cm.group(1).split(","):
+                        if ci and int(ci) < len(ldims):
+                            k *= ldims[int(ci)]
+                n = 1
+                for d in o["dims"]:
+                    n *= d
+                dot_flops += 2.0 * n * k * mul
+            elif o["op"] == "convolution":
+                n = 1
+                for d in o["dims"]:
+                    n *= d
+                conv_flops += 2.0 * n * mul  # lower bound (no kernel dims)
+
+    # collectives
+    coll_bytes: dict[str, float] = defaultdict(float)
+    coll_count: dict[str, float] = defaultdict(float)
+    for c, ops in comps.items():
+        mul = multiplier(c)
+        for o in ops:
+            op = o["op"]
+            if op.rstrip("-start") in COLLECTIVES or op in COLLECTIVES:
+                base = op.replace("-start", "")
+                if base not in COLLECTIVES:
+                    continue
+                gm = _GROUP_RE.search(o["line"])
+                group = int(gm.group(2)) if gm else 1
+                b = o["bytes"]
+                if base == "all-gather":
+                    payload = b * max(group - 1, 1) / max(group, 1)
+                elif base == "reduce-scatter":
+                    payload = b * max(group - 1, 1)
+                elif base == "all-reduce":
+                    payload = 2.0 * b * max(group - 1, 1) / max(group, 1)
+                else:  # all-to-all, collective-permute
+                    payload = b
+                coll_bytes[base] += payload * mul
+                coll_count[base] += mul
+
+    trips = {}
+    for c, ops in comps.items():
+        for o in ops:
+            if o["op"] == "while":
+                tm = _TRIP_RE.search(o["line"])
+                if tm:
+                    trips[o["name"]] = int(tm.group(1))
+
+    return {
+        "dot_flops_per_device": dot_flops,
+        "conv_flops_per_device": conv_flops,
+        "collective_bytes_per_device": dict(coll_bytes),
+        "total_collective_bytes_per_device": sum(coll_bytes.values()),
+        "collective_counts": dict(coll_count),
+        "while_trip_counts": trips,
+        "n_computations": len(comps),
+    }
+
+
+if __name__ == "__main__":
+    import sys
+    with open(sys.argv[1]) as f:
+        print(json.dumps(analyze_hlo(f.read()), indent=1))

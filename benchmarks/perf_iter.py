@@ -1,0 +1,107 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb driver: lower one cell with config overrides, report the
+three roofline terms + memory, for hypothesis -> change -> measure loops.
+
+  PYTHONPATH=src python -m benchmarks.perf_iter --arch arctic-480b \
+      --shape train_4k --override moe_token_shard=all [--layers 2] [--tag x]
+
+--layers N probes a depth-reduced model (per-layer behaviour iterates ~10x
+faster; the winning change is then re-validated on the full config and
+written to out/dryrun_opt/).
+"""
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+
+
+def parse_override(s: str):
+    k, v = s.split("=", 1)
+    for cast in (int, float):
+        try:
+            return k, cast(v)
+        except ValueError:
+            pass
+    if v in ("True", "False"):
+        return k, v == "True"
+    return k, v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--override", action="append", default=[])
+    ap.add_argument("--layers", type=int, default=0)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="out/perf")
+    args = ap.parse_args()
+
+    import jax
+    import repro.launch.cells as C
+    from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                                   make_production_mesh)
+    from benchmarks.hlo_analysis import analyze_hlo
+
+    overrides = dict(parse_override(s) for s in args.override)
+    orig_get = C.get_config
+
+    def patched(arch):
+        cfg, smoke, family = orig_get(arch)
+        if arch == args.arch:
+            kw = dict(overrides)
+            if args.layers:
+                if family == "lm":
+                    kw["n_layers"] = args.layers
+                elif family == "gnn":
+                    kw["n_layers"] = args.layers
+                    if hasattr(cfg, "n_blocks"):
+                        kw["n_blocks"] = min(cfg.n_blocks, args.layers)
+            cfg = dataclasses.replace(cfg, **kw)
+        return cfg, smoke, family
+
+    C.get_config = patched
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multipod"))
+    cell = C.build_cell(args.arch, args.shape, mesh)
+    t0 = time.perf_counter()
+    with mesh:
+        comp = jax.jit(cell.fn, donate_argnums=cell.donate
+                       ).lower(*cell.args).compile()
+    compile_s = time.perf_counter() - t0
+    ma = comp.memory_analysis()
+    hlo = analyze_hlo(comp.as_text())
+    peak = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+    flops = hlo["dot_flops_per_device"]
+    coll = hlo["total_collective_bytes_per_device"]
+    ca = comp.cost_analysis() or {}
+    scale = max(flops / max(ca.get("flops", 1.0), 1.0), 1.0)
+    mem_bytes = ca.get("bytes accessed", 0.0) * scale
+    rec = {
+        "arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+        "overrides": overrides, "layers": args.layers, "tag": args.tag,
+        "compile_s": round(compile_s, 1),
+        "t_compute_ms": 1e3 * flops / PEAK_FLOPS_BF16,
+        "t_memory_ms": 1e3 * mem_bytes / HBM_BW,
+        "t_collective_ms": 1e3 * coll / ICI_BW,
+        "peak_GiB": peak / 2**30,
+        "coll_GB": {k: round(v / 1e9, 2)
+                    for k, v in hlo["collective_bytes_per_device"].items()},
+        "model_flops": cell.meta.get("model_flops"),
+    }
+    print(json.dumps(rec, indent=1))
+    os.makedirs(args.out, exist_ok=True)
+    name = f"{args.arch}__{args.shape}__{args.mesh}"
+    if args.layers:
+        name += f"__L{args.layers}"
+    if args.tag:
+        name += f"__{args.tag}"
+    with open(os.path.join(args.out, name + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""§Roofline: three-term model per (arch x shape x mesh) from the dry-run
+artifacts (out/dryrun/*.json).
+
+  compute term    = dot_flops_per_device / PEAK_FLOPS_BF16
+  memory term     = bytes_accessed_per_device / HBM_BW
+  collective term = collective_bytes_per_device / ICI_BW
+
+The dominant term is the step-time lower bound; fraction-of-roofline for
+the compute term is MODEL_FLOPS / (chips * dot_flops) — how much of the
+compiled compute is "useful" (catches remat/redundant-gather waste).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+def load_records(out_dir: str = "out/dryrun") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def terms(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    hlo = rec["hlo"]
+    cost = rec.get("cost", {})
+    chips = rec.get("n_devices") or 256
+    flops_dev = hlo["dot_flops_per_device"] + hlo.get(
+        "conv_flops_per_device", 0.0)
+    # bytes accessed: cost_analysis undercounts scan bodies like flops does;
+    # scale by the flop undercount ratio as a first-order correction.
+    ca_flops = max(cost.get("flops", 0.0), 1.0)
+    scale = max(flops_dev / ca_flops, 1.0)
+    bytes_dev = cost.get("bytes accessed", 0.0) * scale
+    coll_dev = hlo["total_collective_bytes_per_device"]
+
+    t_compute = flops_dev / PEAK_FLOPS_BF16
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    dominant = max(
+        (("compute", t_compute), ("memory", t_memory),
+         ("collective", t_coll)), key=lambda kv: kv[1])
+    model_flops = rec["meta"].get("model_flops", 0.0)
+    useful = model_flops / max(flops_dev * chips, 1.0)
+    bound = max(t_compute, t_memory, t_coll)
+    mfu_bound = (model_flops / (chips * PEAK_FLOPS_BF16)) / max(bound, 1e-12)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant[0],
+        "useful_flops_ratio": useful,
+        "roofline_fraction": mfu_bound,
+        "peak_bytes_per_device": rec["memory"]["peak_bytes_per_device"],
+    }
+
+
+def table(out_dir: str = "out/dryrun", mesh: str | None = None):
+    rows = []
+    for rec in load_records(out_dir):
+        t = terms(rec)
+        if t and (mesh is None or t["mesh"] == mesh):
+            rows.append(t)
+    return rows
+
+
+def main():
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "out/dryrun"
+    rows = table(out_dir)
+    print("arch,shape,mesh,t_compute_ms,t_memory_ms,t_collective_ms,"
+          "dominant,useful_flops,roofline_frac,peak_GiB/dev")
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        print(f"{r['arch']},{r['shape']},{r['mesh']},"
+              f"{1e3 * r['t_compute_s']:.2f},{1e3 * r['t_memory_s']:.2f},"
+              f"{1e3 * r['t_collective_s']:.2f},{r['dominant']},"
+              f"{r['useful_flops_ratio']:.2f},"
+              f"{r['roofline_fraction']:.2f},"
+              f"{r['peak_bytes_per_device'] / 2**30:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Benchmark driver: one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--scale 0.1] [--quick]
+
+Prints ``name,us_per_call,derived`` CSV rows per section.  Roofline rows
+(from dry-run artifacts, if present) are appended at the end.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.1)
+    ap.add_argument("--quick", action="store_true",
+                    help="small datasets + fewer queries (CI-sized)")
+    args = ap.parse_args()
+
+    scale = 0.03 if args.quick else args.scale
+    nq = 5_000 if args.quick else 50_000
+    datasets = ("Email", "Wiki") if args.quick else None
+
+    from . import (bench_effectiveness, bench_label_size,
+                   bench_leaf_threshold, bench_parallel, bench_selection,
+                   bench_update)
+
+    t0 = time.time()
+    print("== Table 4: DL/BL/DBL effectiveness ==")
+    bench_effectiveness.main(scale=scale, n_queries=nq, datasets=datasets)
+
+    print("\n== Table 3: landmark selection heuristics ==")
+    bench_selection.main(scale=scale, n_queries=nq // 2,
+                         datasets=datasets or ("LJ", "Email", "Wiki",
+                                               "Pokec"))
+
+    print("\n== Table 5: label size sweep ==")
+    bench_label_size.main(scale=scale, n_queries=nq // 2,
+                          datasets=datasets or ("LJ", "Email", "Wiki",
+                                                "Twitter"))
+
+    print("\n== Fig 3: leaf threshold sweep ==")
+    bench_leaf_threshold.main(scale=scale, n_queries=nq // 2,
+                              datasets=datasets or ("Email", "Wiki", "Web"))
+
+    print("\n== Figs 4-5: update throughput vs baselines ==")
+    bench_update.main(scale=scale, n_insert=400 if args.quick else 1000,
+                      batch=50 if args.quick else 100, datasets=datasets)
+
+    print("\n== Fig 6 / Table 7: parallel query paths ==")
+    bench_parallel.main(scale=scale, n_queries=nq,
+                        datasets=datasets or ("LJ", "Email", "Wiki",
+                                              "Reddit"))
+
+    print("\n== §Perf 4.0: DBL engine (pruned update / packed queries) ==")
+    from . import bench_dbl_perf
+    bench_dbl_perf.main(scale=scale,
+                        datasets=datasets or ("LJ", "Email", "Reddit"))
+
+    print("\n== §Roofline (from dry-run artifacts, if present) ==")
+    try:
+        from .roofline import main as roofline_main
+        roofline_main()
+    except Exception as e:  # artifacts may not exist yet
+        print(f"(skipped: {e})")
+
+    print(f"\ntotal bench time: {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Train a language model end-to-end with the full substrate (data pipeline,
+AdamW, checkpointing, restart).  On TPU use --arch <full config>; on this
+CPU container the default is a ~10M-param tinyllama-shaped config so a few
+hundred steps finish in minutes.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+
+import jax
+
+from repro.configs import tinyllama_11b
+from repro.models.transformer import model as M
+from repro.train import checkpoint as ckpt
+from repro.train.data import lm_batches
+from repro.train.loop import init_state, make_train_step, run
+from repro.train.optim import cosine_schedule
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    # ~10M params: tinyllama shape at d_model 256
+    cfg = tinyllama_11b.CONFIG.scaled(
+        n_layers=4, d_model=256, n_heads=8, n_kv_heads=2, d_head=32,
+        d_ff=688, vocab=8_192, dtype="float32", param_dtype="float32",
+        seq_parallel=False, optimizer="adamw")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    n = sum(p.size for p in jax.tree.leaves(params))
+    print(f"training {n / 1e6:.1f}M params for {args.steps} steps")
+
+    state = init_state(jax.random.PRNGKey(1), params)
+    step_fn = make_train_step(
+        lambda p, b, r: M.loss_fn(p, cfg, b["tokens"], b["targets"]),
+        optimizer="adamw",
+        lr_schedule=cosine_schedule(3e-4, 20, args.steps))
+    hook = ckpt.checkpoint_hook(args.ckpt_dir, every=50, blocking=False)
+    data = lm_batches(cfg, batch=args.batch, seq=args.seq)
+    state = run(state, step_fn, data, n_steps=args.steps, hooks=[hook],
+                log_every=20)
+    hook.wait()
+    print(f"final checkpoint at step {ckpt.latest_step(args.ckpt_dir)}")
+
+
+if __name__ == "__main__":
+    main()

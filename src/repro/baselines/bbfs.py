@@ -1,0 +1,73 @@
+"""Bidirectional BFS baseline (paper Table 7, "B-BFS").
+
+No index at all: expand the smaller of the forward frontier from u and the
+backward frontier from v each round; meet-in-the-middle detection.  Batched
+as Q lanes of (n_cap, Q) planes like the DBL pruned BFS, so the comparison
+against DBL isolates exactly the value of the labels.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph, edge_mask
+
+
+@functools.partial(jax.jit, static_argnames=("n_cap", "max_iters"))
+def bbfs_chunk(g: Graph, u: jax.Array, v: jax.Array, *, n_cap: int,
+               max_iters: int = 256) -> jax.Array:
+    qc = u.shape[0]
+    live = edge_mask(g)
+    ids = jnp.arange(n_cap, dtype=jnp.int32)
+    f_seen = ids[:, None] == u[None, :]   # forward-visited (n, Q)
+    b_seen = ids[:, None] == v[None, :]   # backward-visited
+    f_frontier, b_frontier = f_seen, b_seen
+    hit = (u == v)
+
+    def cond(state):
+        f_fr, b_fr, _, _, hit, it = state
+        alive = (f_fr.any(axis=0) & b_fr.any(axis=0) & ~hit).any()
+        return jnp.logical_and(alive, it < max_iters)
+
+    def body(state):
+        f_fr, b_fr, f_seen, b_seen, hit, it = state
+        fwd_smaller = f_fr.sum() <= b_fr.sum()
+
+        def fwd(_):
+            contrib = (f_fr[g.src] & live[:, None]).astype(jnp.uint8)
+            nxt = jax.ops.segment_max(contrib, g.dst,
+                                      num_segments=n_cap).astype(jnp.bool_)
+            nxt = nxt & ~f_seen & ~hit[None, :]
+            return nxt, b_fr, f_seen | nxt, b_seen
+
+        def bwd(_):
+            contrib = (b_fr[g.dst] & live[:, None]).astype(jnp.uint8)
+            nxt = jax.ops.segment_max(contrib, g.src,
+                                      num_segments=n_cap).astype(jnp.bool_)
+            nxt = nxt & ~b_seen & ~hit[None, :]
+            return f_fr, nxt, f_seen, b_seen | nxt
+
+        f_fr, b_fr, f_seen, b_seen = jax.lax.cond(fwd_smaller, fwd, bwd, None)
+        hit = hit | (f_seen & b_seen).any(axis=0)
+        return f_fr, b_fr, f_seen, b_seen, hit, it + 1
+
+    _, _, _, _, hit, _ = jax.lax.while_loop(
+        cond, body, (f_frontier, b_frontier, f_seen, b_seen, hit, jnp.int32(0)))
+    return hit
+
+
+def query(g: Graph, u, v, *, n_cap: int, chunk: int = 64,
+          max_iters: int = 256) -> np.ndarray:
+    u = np.asarray(u, np.int32)
+    v = np.asarray(v, np.int32)
+    out = np.zeros(u.shape[0], bool)
+    for lo in range(0, u.size, chunk):
+        uu = np.pad(u[lo:lo + chunk], (0, max(0, chunk - (u.size - lo))))
+        vv = np.pad(v[lo:lo + chunk], (0, max(0, chunk - (v.size - lo))))
+        hit = np.asarray(bbfs_chunk(g, jnp.asarray(uu), jnp.asarray(vv),
+                                    n_cap=n_cap, max_iters=max_iters))
+        out[lo:lo + chunk] = hit[:min(chunk, u.size - lo)]
+    return out

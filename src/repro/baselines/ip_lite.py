@@ -1,0 +1,151 @@
+"""IP-lite: independent-permutation (k-min-wise) reachability labels [24].
+
+IP's label for u is the k smallest hash values over Des(u) (resp. Anc(u)).
+``u → v`` implies Des(v) ⊆ Des(u) and Anc(u) ⊆ Anc(v), hence
+
+    label_out(u) ≤ label_out(v)   and   label_in(v) ≤ label_in(u)   (elementwise)
+
+— violations certify non-reachability (like BL); positives fall back to a
+label-pruned search (IP uses DFS; here BFS lanes, same engine as DBL).
+
+Faithfulness scope: full IP additionally keeps per-vertex "level" labels and
+relies on DAGGER for SCC maintenance; those numbers are represented by the
+dag_maintain proxy.  IP-lite is the *dynamic-label* essence running on the
+same MIN-monoid fixpoint as DBL, which makes Fig-5-style update comparisons
+apples-to-apples.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph, edge_mask, insert_edges
+from repro.core.propagate import propagate
+
+_BIG = jnp.iinfo(jnp.int32).max
+
+
+def _hashes(n_cap: int, k: int, seed: int = 0x9E3779B9) -> jax.Array:
+    """(n_cap, k) int32 independent vertex hashes (k "permutations")."""
+    ids = jnp.arange(n_cap, dtype=jnp.uint32)[:, None]
+    js = jnp.arange(k, dtype=jnp.uint32)[None, :]
+    x = ids * jnp.uint32(2654435761) ^ (js * jnp.uint32(40503) + jnp.uint32(seed))
+    x ^= x >> jnp.uint32(15)
+    x *= jnp.uint32(2246822519)
+    x ^= x >> jnp.uint32(13)
+    return (x >> jnp.uint32(1)).astype(jnp.int32)  # non-negative
+
+
+class IPIndex(NamedTuple):
+    graph: Graph
+    label_in: jax.Array   # (n_cap, k) int32 — min-hash over Anc(v)
+    label_out: jax.Array  # (n_cap, k) int32 — min-hash over Des(v)
+
+    @property
+    def n_cap(self) -> int:
+        return self.label_in.shape[0]
+
+    @staticmethod
+    def build(g: Graph, *, n_cap: int, k: int = 8,
+              max_iters: int = 256) -> "IPIndex":
+        h = _hashes(n_cap, k)
+        valid = jnp.arange(n_cap, dtype=jnp.int32) < g.n
+        seed = jnp.where(valid[:, None], h, _BIG)
+        live = edge_mask(g)
+        frontier = valid
+        lin, _ = propagate(seed, g.src, g.dst, live, frontier, n_cap=n_cap,
+                           monoid="min", max_iters=max_iters)
+        lout, _ = propagate(seed, g.src, g.dst, live, frontier, n_cap=n_cap,
+                            monoid="min", max_iters=max_iters, reverse=True)
+        return IPIndex(g, lin, lout)
+
+    def insert_edges(self, new_src, new_dst, *, max_iters: int = 256
+                     ) -> "IPIndex":
+        new_src = jnp.asarray(new_src, jnp.int32)
+        new_dst = jnp.asarray(new_dst, jnp.int32)
+        return _ip_insert(self, new_src, new_dst, n_cap=self.n_cap,
+                          max_iters=max_iters)
+
+    def query(self, u, v, *, chunk: int = 64, max_iters: int = 256):
+        u = np.asarray(u, np.int32)
+        v = np.asarray(v, np.int32)
+        verd = np.asarray(ip_verdicts(self, jnp.asarray(u), jnp.asarray(v)))
+        out = verd == 1
+        unknown = np.flatnonzero(verd == -1)
+        for lo in range(0, unknown.size, chunk):
+            idx = unknown[lo:lo + chunk]
+            pad = chunk - idx.size
+            uu = jnp.asarray(np.pad(u[idx], (0, pad)))
+            vv = jnp.asarray(np.pad(v[idx], (0, pad)))
+            hit = np.asarray(ip_pruned_bfs(self, uu, vv, n_cap=self.n_cap,
+                                           max_iters=max_iters))
+            out[idx] = hit[:idx.size]
+        return out
+
+
+@functools.partial(jax.jit, static_argnames=("n_cap", "max_iters"))
+def _ip_insert(idx: IPIndex, new_src, new_dst, *, n_cap: int, max_iters: int):
+    g2 = insert_edges(idx.graph, new_src, new_dst)
+    live = edge_mask(g2)
+    lin = idx.label_in
+    lout = idx.label_out
+    # seed: min-combine endpoint labels across the new edges
+    seeded_in = lin.at[new_dst].min(lin[new_src])
+    fr_in = jnp.any(seeded_in != lin, axis=-1)
+    lin2, _ = propagate(seeded_in, g2.src, g2.dst, live, fr_in, n_cap=n_cap,
+                        monoid="min", max_iters=max_iters)
+    seeded_out = lout.at[new_src].min(lout[new_dst])
+    fr_out = jnp.any(seeded_out != lout, axis=-1)
+    lout2, _ = propagate(seeded_out, g2.src, g2.dst, live, fr_out,
+                         n_cap=n_cap, monoid="min", max_iters=max_iters,
+                         reverse=True)
+    return IPIndex(g2, lin2, lout2)
+
+
+@jax.jit
+def ip_verdicts(idx: IPIndex, u, v) -> jax.Array:
+    """0 = certified unreachable, 1 = trivially reachable (u==v), -1 unknown."""
+    ok_out = jnp.all(idx.label_out[u] <= idx.label_out[v], axis=-1)
+    ok_in = jnp.all(idx.label_in[v] <= idx.label_in[u], axis=-1)
+    same = u == v
+    return jnp.where(same, jnp.int8(1),
+                     jnp.where(ok_out & ok_in, jnp.int8(-1), jnp.int8(0)))
+
+
+@functools.partial(jax.jit, static_argnames=("n_cap", "max_iters"))
+def ip_pruned_bfs(idx: IPIndex, u, v, *, n_cap: int, max_iters: int = 256):
+    """BFS lanes pruned by the min-hash test: admit x only if the labels
+    do not already rule out x → v."""
+    g = idx.graph
+    live = edge_mask(g)
+    # x -> v requires label_out(x) <= label_out(v) and label_in(v) <= label_in(x)... no:
+    # x→v ⟹ Des(v) ⊆ Des(x) ⟹ label_out(x) ≤ label_out(v).
+    admit = jnp.all(idx.label_out[:, None, :] <= idx.label_out[v][None, :, :],
+                    axis=-1)  # (n, Q)
+    ids = jnp.arange(n_cap, dtype=jnp.int32)
+    frontier = ids[:, None] == u[None, :]
+    visited = frontier
+    hit = jnp.zeros(u.shape, jnp.bool_)
+    lanes = jnp.arange(u.shape[0])
+
+    def cond(state):
+        fr, _, hit, it = state
+        return jnp.logical_and(fr.any(), jnp.logical_and(~hit.all(),
+                                                         it < max_iters))
+
+    def body(state):
+        fr, vis, hit, it = state
+        contrib = (fr[g.src] & live[:, None]).astype(jnp.uint8)
+        nxt = jax.ops.segment_max(contrib, g.dst,
+                                  num_segments=n_cap).astype(jnp.bool_)
+        nxt = nxt & admit & ~vis & ~hit[None, :]
+        hit = hit | nxt[v, lanes]
+        return nxt, vis | nxt, hit, it + 1
+
+    _, _, hit, _ = jax.lax.while_loop(cond, body,
+                                      (frontier, visited, hit, jnp.int32(0)))
+    return hit

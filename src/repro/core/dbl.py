@@ -1,0 +1,95 @@
+"""DBLIndex — the public API of the paper's contribution.
+
+    idx = DBLIndex.build(g, n_cap=..., k=64, k_prime=64)
+    ans = idx.query(u, v)                  # Alg 2
+    idx = idx.insert_edges(src, dst)       # Alg 3 (batched)
+
+The index is a pytree (usable under jit / pjit / checkpointing).  Bool planes
+are the mutable source of truth; packed uint32 words are kept in sync and feed
+the query path + Pallas kernels.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import bitset
+from . import graph as G
+from . import labels as L
+from . import query as Q
+from . import select as S
+from . import update as U
+
+
+class DBLIndex(NamedTuple):
+    graph: G.Graph
+    landmarks: jax.Array        # (k,) int32
+    dl_in: jax.Array            # (n_cap, k)  uint8 plane
+    dl_out: jax.Array
+    bl_in: jax.Array            # (n_cap, k') uint8 plane
+    bl_out: jax.Array
+    packed: Q.PackedLabels      # uint32 word views
+
+    # ---- static helpers -------------------------------------------------
+    @property
+    def n_cap(self) -> int:
+        return self.dl_in.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.dl_in.shape[1]
+
+    @property
+    def k_prime(self) -> int:
+        return self.bl_in.shape[1]
+
+    # ---- construction (Alg 1) -------------------------------------------
+    @staticmethod
+    def build(g: G.Graph, *, n_cap: int, k: int = 64, k_prime: int = 64,
+              selection: str = "product", leaf_r: int = 0,
+              max_iters: int = 256) -> "DBLIndex":
+        landmarks = S.select_landmarks(g, n_cap=n_cap, k=k, method=selection)
+        dl_in, dl_out = L.build_dl(g, landmarks, n_cap=n_cap, k=k,
+                                   max_iters=max_iters)
+        sources, sinks = S.leaf_masks(g, n_cap=n_cap, leaf_r=leaf_r)
+        bl_in, bl_out = L.build_bl(g, sources, sinks, n_cap=n_cap,
+                                   k_prime=k_prime, max_iters=max_iters)
+        packed = Q.pack_labels(dl_in, dl_out, bl_in, bl_out)
+        return DBLIndex(g, landmarks, dl_in, dl_out, bl_in, bl_out, packed)
+
+    # ---- queries (Alg 2) --------------------------------------------------
+    def query(self, u, v, *, bfs_chunk: int = 64, max_iters: int = 256,
+              return_stats: bool = False):
+        return Q.query(self.graph, self.packed, u, v, n_cap=self.n_cap,
+                       bfs_chunk=bfs_chunk, max_iters=max_iters,
+                       return_stats=return_stats)
+
+    def label_verdicts(self, u, v):
+        return Q.label_verdicts(self.packed, jnp.asarray(u, jnp.int32),
+                                jnp.asarray(v, jnp.int32))
+
+    # ---- updates (Alg 3) --------------------------------------------------
+    def insert_edges(self, new_src, new_dst, *, max_iters: int = 256
+                     ) -> "DBLIndex":
+        new_src = jnp.asarray(new_src, jnp.int32)
+        new_dst = jnp.asarray(new_dst, jnp.int32)
+        g2, dl_in, dl_out, bl_in, bl_out, _ = U.insert_and_update(
+            self.graph, self.dl_in, self.dl_out, self.bl_in, self.bl_out,
+            new_src, new_dst, n_cap=self.n_cap, max_iters=max_iters)
+        packed = Q.pack_labels(dl_in, dl_out, bl_in, bl_out)
+        return DBLIndex(g2, self.landmarks, dl_in, dl_out, bl_in, bl_out,
+                        packed)
+
+    # ---- introspection ----------------------------------------------------
+    def label_bytes(self) -> int:
+        return sum(int(w.size) * 4 for w in self.packed)
+
+    def density(self) -> dict:
+        return {
+            "dl_in": float(bitset.popcount(self.packed.dl_in).mean()),
+            "dl_out": float(bitset.popcount(self.packed.dl_out).mean()),
+            "bl_in": float(bitset.popcount(self.packed.bl_in).mean()),
+            "bl_out": float(bitset.popcount(self.packed.bl_out).mean()),
+        }

@@ -1,0 +1,90 @@
+"""Insert-only dynamic directed graph with static capacities (jit-friendly).
+
+Edges live in fixed-capacity arrays padded beyond ``m``; every consumer masks
+with ``edge_mask(g)``.  Vertices are ``0..n-1`` inside a capacity ``n_cap``.
+This mirrors the paper's insert-only setting (Section 1): deletions are out of
+scope and handled lazily by applications.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Graph(NamedTuple):
+    src: jax.Array  # (m_cap,) int32, padded with 0 beyond m
+    dst: jax.Array  # (m_cap,) int32
+    n: jax.Array    # () int32 — current number of vertices
+    m: jax.Array    # () int32 — current number of edges
+
+    @property
+    def n_cap(self) -> int:
+        return -1  # capacities are shape-derived; see helpers below
+
+    @property
+    def m_cap(self) -> int:
+        return self.src.shape[0]
+
+
+def make_graph(src, dst, n: int, *, n_cap: int | None = None,
+               m_cap: int | None = None) -> Graph:
+    """Build a Graph from edge arrays (numpy or jnp), with optional headroom."""
+    src = np.asarray(src, dtype=np.int32)
+    dst = np.asarray(dst, dtype=np.int32)
+    m = int(src.shape[0])
+    m_cap = int(m_cap or m)
+    assert m_cap >= m, (m_cap, m)
+    s = np.zeros(m_cap, dtype=np.int32)
+    d = np.zeros(m_cap, dtype=np.int32)
+    s[:m] = src
+    d[:m] = dst
+    del n_cap  # vertex capacity is carried by label plane shapes, not the graph
+    return Graph(jnp.asarray(s), jnp.asarray(d), jnp.int32(n), jnp.int32(m))
+
+
+def edge_mask(g: Graph) -> jax.Array:
+    """(m_cap,) bool — True for live edges."""
+    return jnp.arange(g.src.shape[0], dtype=jnp.int32) < g.m
+
+
+def degrees(g: Graph, n_cap: int) -> tuple[jax.Array, jax.Array]:
+    """(in_degree, out_degree), each (n_cap,) int32."""
+    live = edge_mask(g).astype(jnp.int32)
+    out_deg = jax.ops.segment_sum(live, g.src, num_segments=n_cap)
+    in_deg = jax.ops.segment_sum(live, g.dst, num_segments=n_cap)
+    return in_deg, out_deg
+
+
+def insert_edges(g: Graph, new_src: jax.Array, new_dst: jax.Array,
+                 new_n: jax.Array | None = None) -> Graph:
+    """Append a batch of edges at positions m..m+b (b = static batch size).
+
+    The caller must ensure m + b <= m_cap; in release mode overflow wraps into
+    padding and is caught by ``assert_capacity`` in tests/drivers.
+    """
+    b = new_src.shape[0]
+    idx = g.m + jnp.arange(b, dtype=jnp.int32)
+    src = g.src.at[idx].set(new_src.astype(jnp.int32), mode="drop")
+    dst = g.dst.at[idx].set(new_dst.astype(jnp.int32), mode="drop")
+    n = g.n if new_n is None else jnp.maximum(g.n, jnp.int32(new_n))
+    nmax = jnp.maximum(new_src.max(), new_dst.max()).astype(jnp.int32) + 1
+    n = jnp.maximum(n, nmax)
+    return Graph(src, dst, n, g.m + jnp.int32(b))
+
+
+def reverse(g: Graph) -> Graph:
+    return Graph(g.dst, g.src, g.n, g.m)
+
+
+def to_networkx(g: Graph):
+    import networkx as nx
+    G = nx.DiGraph()
+    n = int(g.n)
+    m = int(g.m)
+    G.add_nodes_from(range(n))
+    G.add_edges_from(zip(np.asarray(g.src[:m]).tolist(),
+                         np.asarray(g.dst[:m]).tolist()))
+    return G

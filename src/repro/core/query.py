@@ -1,0 +1,137 @@
+"""Query processing (paper Algorithm 2), batched.
+
+Phase 1 — label verdicts over packed words (the ρ > 95% fast path):
+  +1  reachable    (Lemma 1:   DL_out(u) ∩ DL_in(v) ≠ ∅, or u == v)
+   0  unreachable  (Lemma 2:   BL containment violated;
+                    Theorem 1: DL says v→u but not u→v;
+                    Theorem 2: u or v is landmark-covered and DL said no)
+  -1  unknown      → phase 2.
+
+Phase 2 — batched pruned BFS: Alg 2 lines 14-24 with the two per-vertex
+pruning tests (lines 20/22) hoisted into a per-query *admit plane*, legal
+because labels are read-only during query processing.  Queries run as lanes
+of a (n_cap, Q_chunk) frontier plane.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bitset
+from .graph import Graph, edge_mask
+
+
+class PackedLabels(NamedTuple):
+    dl_in: jax.Array   # (n_cap, Wk)  uint32
+    dl_out: jax.Array  # (n_cap, Wk)  uint32
+    bl_in: jax.Array   # (n_cap, Wk') uint32
+    bl_out: jax.Array  # (n_cap, Wk') uint32
+
+
+def pack_labels(dl_in, dl_out, bl_in, bl_out) -> PackedLabels:
+    return PackedLabels(bitset.pack(dl_in), bitset.pack(dl_out),
+                        bitset.pack(bl_in), bitset.pack(bl_out))
+
+
+@jax.jit
+def label_verdicts(p: PackedLabels, u: jax.Array, v: jax.Array) -> jax.Array:
+    """(Q,) int8 verdicts from labels only (Alg 2 lines 6-13)."""
+    dlo_u, dli_v = p.dl_out[u], p.dl_in[v]
+    dlo_v, dli_u = p.dl_out[v], p.dl_in[u]
+    pos = bitset.intersect_any(dlo_u, dli_v) | (u == v)
+    bl_neg = (~bitset.subset(p.bl_in[u], p.bl_in[v])
+              | ~bitset.subset(p.bl_out[v], p.bl_out[u]))
+    thm1 = bitset.intersect_any(dlo_v, dli_u)
+    thm2 = (bitset.intersect_any(dlo_u, dli_u)
+            | bitset.intersect_any(dlo_v, dli_v))
+    neg = ~pos & (bl_neg | thm1 | thm2)
+    return jnp.where(pos, jnp.int8(1), jnp.where(neg, jnp.int8(0), jnp.int8(-1)))
+
+
+@jax.jit
+def label_stats(p: PackedLabels, u: jax.Array, v: jax.Array) -> dict:
+    """Per-mechanism answer masks (paper Table 4 columns)."""
+    dlo_u, dli_v = p.dl_out[u], p.dl_in[v]
+    dlo_v, dli_u = p.dl_out[v], p.dl_in[u]
+    pos = bitset.intersect_any(dlo_u, dli_v) | (u == v)
+    thm1 = ~pos & bitset.intersect_any(dlo_v, dli_u)
+    thm2 = ~pos & (bitset.intersect_any(dlo_u, dli_u)
+                   | bitset.intersect_any(dlo_v, dli_v))
+    bl_neg = (~bitset.subset(p.bl_in[u], p.bl_in[v])
+              | ~bitset.subset(p.bl_out[v], p.bl_out[u]))
+    dl_only = pos | thm1 | thm2
+    bl_only = bl_neg
+    return {"dl": dl_only, "bl": ~pos & bl_only, "dbl": dl_only | (~pos & bl_neg)}
+
+
+def _admit_plane(p: PackedLabels, u: jax.Array, v: jax.Array,
+                 n_cap: int) -> jax.Array:
+    """(n_cap, Qc) bool — vertices x admissible in query q's BFS.
+
+    admit = BL_Contain(x, v_q) ∧ ¬DL_Intersec(u_q, x)   (Alg 2 lines 20/22).
+    """
+    c1 = bitset.subset(p.bl_in[:, None, :], p.bl_in[v][None, :, :])
+    c2 = bitset.subset(p.bl_out[v][None, :, :], p.bl_out[:, None, :])
+    d = bitset.intersect_any(p.dl_out[u][None, :, :], p.dl_in[:, None, :])
+    return c1 & c2 & ~d
+
+
+@functools.partial(jax.jit, static_argnames=("n_cap", "max_iters"))
+def pruned_bfs(g: Graph, p: PackedLabels, u: jax.Array, v: jax.Array,
+               *, n_cap: int, max_iters: int = 256) -> jax.Array:
+    """(Qc,) bool — resolve unknown queries by label-pruned BFS lanes."""
+    qc = u.shape[0]
+    live = edge_mask(g)
+    admit = _admit_plane(p, u, v, n_cap)          # (n_cap, Qc)
+    ids = jnp.arange(n_cap, dtype=jnp.int32)
+    frontier = ids[:, None] == u[None, :]          # (n_cap, Qc)
+    visited = frontier
+    hit = jnp.zeros((qc,), jnp.bool_)
+    lanes = jnp.arange(qc)
+
+    def cond(state):
+        frontier, _, hit, it = state
+        return jnp.logical_and(frontier.any(),
+                               jnp.logical_and(~hit.all(), it < max_iters))
+
+    def body(state):
+        frontier, visited, hit, it = state
+        contrib = (frontier[g.src] & live[:, None]).astype(jnp.uint8)
+        nxt = jax.ops.segment_max(contrib, g.dst,
+                                  num_segments=n_cap).astype(jnp.bool_)
+        nxt = nxt & admit & ~visited & ~hit[None, :]
+        hit = hit | nxt[v, lanes]
+        visited = visited | nxt
+        return nxt, visited, hit, it + 1
+
+    _, _, hit, _ = jax.lax.while_loop(
+        cond, body, (frontier, visited, hit, jnp.int32(0)))
+    return hit
+
+
+def query(g: Graph, p: PackedLabels, u, v, *, n_cap: int,
+          bfs_chunk: int = 64, max_iters: int = 256,
+          return_stats: bool = False):
+    """Full Alg 2 over a query batch. Host-side driver: label fast path in one
+    jit call, unknowns resolved in fixed-size BFS chunks (jit reuse)."""
+    u = jnp.asarray(u, jnp.int32)
+    v = jnp.asarray(v, jnp.int32)
+    verdicts = np.asarray(label_verdicts(p, u, v))
+    answers = verdicts == 1
+    unknown = np.flatnonzero(verdicts == -1)
+    for lo in range(0, unknown.size, bfs_chunk):
+        idx = unknown[lo:lo + bfs_chunk]
+        pad = bfs_chunk - idx.size
+        uu = jnp.asarray(np.pad(np.asarray(u)[idx], (0, pad)), jnp.int32)
+        vv = jnp.asarray(np.pad(np.asarray(v)[idx], (0, pad)), jnp.int32)
+        hit = np.asarray(pruned_bfs(g, p, uu, vv, n_cap=n_cap,
+                                    max_iters=max_iters))
+        answers[idx] = hit[:idx.size]
+    if return_stats:
+        rho = 1.0 - unknown.size / max(1, verdicts.size)
+        return answers, {"rho": rho, "n_bfs": int(unknown.size)}
+    return answers

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+- dbl_query: fused label-verdict kernel (the ρ>95% query fast path)
+- bfs_prune: fused admit-plane kernel feeding the pruned-BFS lanes
+
+Both are validated against pure-jnp oracles (ref.py) in interpret mode; on
+real TPUs set interpret=False.
+"""
+from .dbl_query.ops import query_verdicts  # noqa: F401
+from .bfs_prune.ops import admit_plane  # noqa: F401

@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: fused BFS admit-plane (Alg 2 lines 20/22 hoisted).
+
+For a chunk of Q unresolved queries, computes admit[x, q] for all vertices x
+without ever materializing the (n, Q, W) broadcast the naive jnp version
+needs: the word loop is unrolled in registers/VMEM, so HBM traffic is
+(W·n + W·Q) words in + n·Q bytes out — the information-theoretic minimum.
+
+Grid (n_blocks, q_blocks); each step holds (W, NB) vertex-plane blocks and
+(W, QB) query blocks in VMEM and emits one (NB, QB) admit tile.  The vertex
+planes are re-streamed once per query block — q_blocks is kept small (queries
+are chunked upstream) so the total traffic stays ~one pass over the planes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _make_kernel(wd: int, wb: int):
+    def kernel(blin_all, blout_all, dlin_all, blin_v, blout_v, dlo_u, out):
+        z = jnp.uint32(0)
+        bia, boa, dia = blin_all[...], blout_all[...], dlin_all[...]
+        biv, bov, dou = blin_v[...], blout_v[...], dlo_u[...]
+        nb = bia.shape[1]
+        qb = biv.shape[1]
+        c1 = jnp.ones((nb, qb), jnp.bool_)
+        c2 = jnp.ones((nb, qb), jnp.bool_)
+        for w in range(wb):  # static unroll: W is k'/32 (tiny)
+            c1 &= (bia[w, :, None] & ~biv[w, None, :]) == z
+            c2 &= (bov[w, None, :] & ~boa[w, :, None]) == z
+        d = jnp.zeros((nb, qb), jnp.bool_)
+        for w in range(wd):
+            d |= (dou[w, None, :] & dia[w, :, None]) != z
+        out[...] = (c1 & c2 & ~d).astype(jnp.int8)
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("n_block", "q_block", "interpret"))
+def bfs_admit_plane(blin_all, blout_all, dlin_all, blin_v, blout_v, dlo_u,
+                    *, n_block: int = 1024, q_block: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """word-major inputs: *_all (W, n); per-query (W, Q). -> (n, Q) int8."""
+    wb, n = blin_all.shape
+    wd = dlin_all.shape[0]
+    q = blin_v.shape[1]
+    assert n % n_block == 0 and q % q_block == 0, (n, n_block, q, q_block)
+    grid = (n // n_block, q // q_block)
+
+    return pl.pallas_call(
+        _make_kernel(wd, wb),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((wb, n_block), lambda i, j: (0, i)),
+            pl.BlockSpec((wb, n_block), lambda i, j: (0, i)),
+            pl.BlockSpec((wd, n_block), lambda i, j: (0, i)),
+            pl.BlockSpec((wb, q_block), lambda i, j: (0, j)),
+            pl.BlockSpec((wb, q_block), lambda i, j: (0, j)),
+            pl.BlockSpec((wd, q_block), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((n_block, q_block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, q), jnp.int8),
+        interpret=interpret,
+    )(blin_all, blout_all, dlin_all, blin_v, blout_v, dlo_u)

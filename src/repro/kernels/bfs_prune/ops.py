@@ -1,0 +1,39 @@
+"""Jit'd wrapper: packed labels + query ids -> (n_cap, Qc) admit plane."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.query import PackedLabels
+from .bfs_prune import bfs_admit_plane
+
+
+def _pad_axis(x, mult, axis):
+    rem = (-x.shape[axis]) % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("n_block", "q_block", "interpret"))
+def admit_plane(p: PackedLabels, u: jax.Array, v: jax.Array,
+                *, n_block: int = 1024, q_block: int = 128,
+                interpret: bool = True) -> jax.Array:
+    """Returns (n_cap, Qc) bool admit plane for the pruned-BFS lanes."""
+    n = p.bl_in.shape[0]
+    q = u.shape[0]
+    blin_all = _pad_axis(p.bl_in.T, n_block, 1)
+    blout_all = _pad_axis(p.bl_out.T, n_block, 1)
+    dlin_all = _pad_axis(p.dl_in.T, n_block, 1)
+    blin_v = _pad_axis(p.bl_in[v].T, q_block, 1)
+    blout_v = _pad_axis(p.bl_out[v].T, q_block, 1)
+    dlo_u = _pad_axis(p.dl_out[u].T, q_block, 1)
+    out = bfs_admit_plane(blin_all, blout_all, dlin_all,
+                          blin_v, blout_v, dlo_u,
+                          n_block=n_block, q_block=q_block,
+                          interpret=interpret)
+    return out[:n, :q].astype(jnp.bool_)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the bfs_prune admit-plane kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def admit_ref(blin_all, blout_all, dlin_all, blin_v, blout_v, dlo_u):
+    """Inputs word-major: *_all (W, n); per-query (W, Q). -> (n, Q) bool.
+
+    admit[x, q] = BL_Contain(x, v_q) ∧ ¬DL_Intersec(u_q, x)
+                = BL_in(x) ⊆ BL_in(v_q)
+                ∧ BL_out(v_q) ⊆ BL_out(x)
+                ∧ DL_out(u_q) ∩ DL_in(x) = ∅      (Alg 2 lines 20/22)
+    """
+    z = jnp.uint32(0)
+    c1 = jnp.all((blin_all[:, :, None] & ~blin_v[:, None, :]) == z, axis=0)
+    c2 = jnp.all((blout_v[:, None, :] & ~blout_all[:, :, None]) == z, axis=0)
+    d = jnp.any((dlo_u[:, None, :] & dlin_all[:, :, None]) != z, axis=0)
+    return c1 & c2 & ~d

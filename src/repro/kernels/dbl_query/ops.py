@@ -1,0 +1,43 @@
+"""Jit'd public wrapper: gather + word-major transpose + Pallas verdict kernel.
+
+The row gathers stay in XLA (TPU has a native gather); the kernel fuses the
+bitwise verdict so no (Q, W) intermediates round-trip through HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.query import PackedLabels
+from .dbl_query import dbl_query_verdicts
+
+
+def _pad_to(x, mult, axis):
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("q_block", "interpret"))
+def query_verdicts(p: PackedLabels, u: jax.Array, v: jax.Array,
+                   *, q_block: int = 512, interpret: bool = True) -> jax.Array:
+    """(Q,) int32 verdicts; same contract as core.query.label_verdicts."""
+    q = u.shape[0]
+    streams = [p.dl_out[u], p.dl_in[v], p.dl_out[v], p.dl_in[u],
+               p.bl_in[u], p.bl_in[v], p.bl_out[v], p.bl_out[u]]
+    # word-major (W, Q), pad Q to a block multiple
+    streams = [_pad_to(s.T, q_block, 1) for s in streams]
+    same = _pad_to((u == v).astype(jnp.int32), q_block, 0)
+    # note arg order: kernel wants (dlo_u, dli_v, dlo_v, dli_u,
+    #                               blin_u, blin_v, blout_u, blout_v)
+    dlo_u, dli_v, dlo_v, dli_u, blin_u, blin_v, blout_v, blout_u = streams
+    out = dbl_query_verdicts(dlo_u, dli_v, dlo_v, dli_u,
+                             blin_u, blin_v, blout_u, blout_v, same,
+                             q_block=q_block, interpret=interpret)
+    return out[:q]

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the dbl_query verdict kernel.
+
+Layout note: the kernel consumes *word-major* streams ``(W, Q)`` (last dim =
+queries = TPU lanes).  The reference mirrors that contract exactly so the
+kernel test is a drop-in comparison.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def verdict_ref(dlo_u, dli_v, dlo_v, dli_u,
+                blin_u, blin_v, blout_u, blout_v, same):
+    """All label inputs (W, Q) uint32; ``same`` (Q,) bool (u == v).
+
+    Returns (Q,) int32: +1 reachable / 0 unreachable / -1 unknown.
+    Implements Alg 2 lines 6-13 (Lemma 1, Lemma 2, Theorem 1, Theorem 2).
+    """
+    pos = jnp.any(dlo_u & dli_v, axis=0) | same
+    bl_neg = (jnp.any(blin_u & ~blin_v, axis=0)
+              | jnp.any(blout_v & ~blout_u, axis=0))
+    thm1 = jnp.any(dlo_v & dli_u, axis=0)
+    thm2 = jnp.any(dlo_u & dli_u, axis=0) | jnp.any(dlo_v & dli_v, axis=0)
+    neg = ~pos & (bl_neg | thm1 | thm2)
+    return jnp.where(pos, jnp.int32(1),
+                     jnp.where(neg, jnp.int32(0), jnp.int32(-1)))

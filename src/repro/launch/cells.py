@@ -1,0 +1,422 @@
+"""Dry-run cell builders: (arch x shape x mesh) -> lowerable (fn, args, meta).
+
+Every cell returns ShapeDtypeStruct arguments carrying NamedShardings — no
+device allocation happens; ``jax.jit(fn).lower(*args).compile()`` is the
+whole proof (launch/dryrun.py).  ``meta`` carries analytic MODEL_FLOPS and
+shape bookkeeping for the roofline (benchmarks/roofline.py).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.shapes import (GNN_SHAPES, LM_SHAPES, LONG_CONTEXT_OK,
+                                  REC_SHAPES)
+from repro.train.loop import init_state, make_train_step
+from repro.train.optim import cosine_schedule
+from . import sharding as SH
+from .mesh import mesh_axes
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: str
+    fn: Callable
+    args: tuple            # ShapeDtypeStructs (with shardings)
+    donate: tuple          # argnums to donate
+    meta: dict
+
+
+def _sds(tree_shapes, tree_shardings):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        tree_shapes, tree_shardings)
+
+
+class SkipCell(Exception):
+    pass
+
+
+# ----------------------------------------------------------------- LM cells
+def _lm_model_flops(cfg, tokens: int, seq: int, *, train: bool,
+                    decode: bool = False) -> float:
+    """Analytic MODEL_FLOPS: 6·N_active·D for train, 2·N_active·D for
+    inference forward, plus the attention term (local layers see
+    min(seq, window) keys)."""
+    n_act = cfg.params_active
+    mult = 6 if train else 2
+    flops = mult * n_act * tokens
+    # attention scores+values: 2 matmuls * 2 flops = 12 per (q, k) pair bwd-incl
+    att_mult = 12 if train else 4
+    if cfg.layer_pattern == "local_global":
+        w = min(cfg.window, seq)
+        kv_len = (seq + w) / 2 if not decode else (seq + w) / 2
+    else:
+        kv_len = seq
+    if decode:
+        flops += att_mult * cfg.n_layers * cfg.n_heads * cfg.d_head \
+            * tokens * kv_len
+    else:
+        flops += att_mult * cfg.n_layers * cfg.n_heads * cfg.d_head \
+            * tokens * kv_len / 2  # causal halves the pairs
+    return float(flops)
+
+
+def build_lm_cell(arch: str, shape_name: str, mesh) -> Cell:
+    cfg, _, family = get_config(arch)
+    assert family == "lm"
+    shape = LM_SHAPES[shape_name]
+    if shape_name == "long_500k" and arch not in LONG_CONTEXT_OK:
+        raise SkipCell(
+            f"{arch} is pure full-attention; long_500k needs sub-quadratic "
+            "attention state (DESIGN.md §4)")
+    from repro.models.transformer import model as M
+
+    ax = mesh_axes(mesh)
+    dp, model_ax = ax["dp"], ax["model"]
+    rng = jax.random.PRNGKey(0)
+    b, s = shape.global_batch, shape.seq_len
+
+    import numpy as _np
+    n_dp = int(_np.prod([dict(zip(mesh.axis_names,
+                                  mesh.devices.shape))[a] for a in dp]))
+    n_tp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+
+    def _ok(dim, n):
+        return dim >= n and dim % n == 0
+
+    def constrain(x, kind):
+        if kind == "moe_call":
+            if cfg.moe is None or cfg.moe_impl != "shard_map":
+                return x  # identity -> model falls back to pjit moe_ffn
+            from repro.models.transformer.model import _act
+            from repro.models.transformer.moe_sharded import moe_ffn_sharded
+            mp, flat = x
+            if flat.shape[0] % (n_dp * n_tp) != 0:
+                return x
+            return moe_ffn_sharded(mp, flat, cfg.moe, _act(cfg.act),
+                                   mesh=mesh, dp_axes=dp, tp_axis="model")
+        if kind == "layer_params":  # x is the per-layer param pytree
+            def assign(path, leaf):
+                spec = SH.lm_layer_param_spec(SH._path_str(path),
+                                              leaf.shape, dp, model_ax)
+                spec = SH._shard_ok(spec, leaf.shape, mesh)
+                return jax.lax.with_sharding_constraint(
+                    leaf, NamedSharding(mesh, spec))
+            return jax.tree_util.tree_map_with_path(assign, x)
+        if kind == "residual" and cfg.seq_parallel and x.ndim == 3 \
+                and _ok(x.shape[1], n_tp) and _ok(x.shape[0], n_dp):
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(dp, model_ax, None)))
+        if kind == "logits" and x.ndim == 3 and _ok(x.shape[0], n_dp) \
+                and _ok(x.shape[-1], n_tp):
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(dp, None, model_ax)))
+        if kind == "moe_tokens" and x.ndim == 2:
+            tok_axes = (dp + ("model",)) if cfg.moe_token_shard == "all" \
+                else dp
+            n_tok = n_dp * (n_tp if cfg.moe_token_shard == "all" else 1)
+            if _ok(x.shape[0], n_tok):
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, P(tok_axes, None)))
+            return x
+        if kind == "moe_buf" and x.ndim == 3 and _ok(x.shape[0], n_tp):
+            # experts -> model (EP), capacity -> data (otherwise every DP
+            # replica redundantly computes all experts: observed 16x flops)
+            cap_ax = dp if _ok(x.shape[1], n_dp) else None
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(model_ax, cap_ax, None)))
+        return x
+
+    if shape.kind == "train":
+        state_shapes = jax.eval_shape(
+            lambda r: init_state(r, M.init_params(r, cfg), cfg.optimizer),
+            rng)
+        state_sh = SH.lm_state_shardings(state_shapes, mesh)
+        batch_shapes = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "targets": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+        tok_sh = SH.lm_batch_shardings(mesh, kind="train")
+        batch_sh = {"tokens": tok_sh, "targets": tok_sh}
+
+        step = make_train_step(
+            lambda p, bt, r: M.loss_fn(p, cfg, bt["tokens"], bt["targets"],
+                                       constrain=constrain),
+            optimizer=cfg.optimizer,
+            lr_schedule=cosine_schedule(3e-4, 100, 10_000), jit=False,
+            state_shardings=state_sh)
+        meta = {
+            "model_flops": _lm_model_flops(cfg, b * s, s, train=True),
+            "tokens": b * s, "params": cfg.params_dense,
+            "params_active": cfg.params_active,
+        }
+        return Cell(arch, shape_name, step,
+                    (_sds(state_shapes, state_sh), _sds(batch_shapes,
+                                                        batch_sh)),
+                    donate=(0,), meta=meta)
+
+    params_shapes = jax.eval_shape(lambda r: M.init_params(r, cfg), rng)
+    params_sh = SH.lm_state_shardings(params_shapes, mesh)
+
+    if shape.kind == "prefill":
+        tokens = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        tok_sh = SH.lm_batch_shardings(mesh, kind="prefill")
+
+        def fn(params, tokens):
+            return M.prefill(params, cfg, tokens, s_cache=s,
+                             constrain=constrain)
+
+        meta = {"model_flops": _lm_model_flops(cfg, b * s, s, train=False),
+                "tokens": b * s, "params": cfg.params_dense,
+                "params_active": cfg.params_active}
+        return Cell(arch, shape_name, fn,
+                    (_sds(params_shapes, params_sh),
+                     jax.ShapeDtypeStruct(tokens.shape, tokens.dtype,
+                                          sharding=tok_sh)),
+                    donate=(), meta=meta)
+
+    # decode: one new token against an s-long cache
+    long_ctx = b == 1
+    cache_shapes = jax.eval_shape(lambda: M.init_cache(cfg, b, s))
+    cache_sh = SH.lm_cache_shardings(mesh, cache_shapes,
+                                     long_context=long_ctx)
+    token = jax.ShapeDtypeStruct((b,), jnp.int32)
+    tok_sh = (SH.lm_batch_shardings(mesh, kind="decode") if _ok(b, n_dp)
+              else NamedSharding(mesh, P()))  # B=1 long-context: replicate
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def fn(params, cache, token, pos):
+        return M.decode_step(params, cfg, cache, token, pos)
+
+    meta = {"model_flops": _lm_model_flops(cfg, b, s, train=False,
+                                           decode=True),
+            "tokens": b, "params": cfg.params_dense,
+            "params_active": cfg.params_active,
+            "kv_cache_bytes": sum(int(np.prod(c.shape)) * 2
+                                  for c in jax.tree.leaves(cache_shapes))}
+    return Cell(arch, shape_name, fn,
+                (_sds(params_shapes, params_sh),
+                 _sds(cache_shapes, cache_sh),
+                 jax.ShapeDtypeStruct(token.shape, token.dtype,
+                                      sharding=tok_sh),
+                 jax.ShapeDtypeStruct(pos.shape, pos.dtype,
+                                      sharding=NamedSharding(mesh, P()))),
+                donate=(1,), meta=meta)
+
+
+# ---------------------------------------------------------------- GNN cells
+_GNN_CLASSES = {"full_graph_sm": 7, "ogb_products": 47, "minibatch_lg": 41,
+                "molecule": 16}
+
+
+def _gnn_module(family: str):
+    from repro.models.gnn import dimenet, mace, nequip, pna
+    return {"pna": pna, "nequip": nequip, "mace": mace,
+            "dimenet": dimenet}[family]
+
+
+def build_gnn_cell(arch: str, shape_name: str, mesh) -> Cell:
+    cfg, _, family = get_config(arch)
+    assert family == "gnn"
+    shape = GNN_SHAPES[shape_name]
+    mod = _gnn_module(cfg.family)
+    cfg = cfg.scaled(n_classes=_GNN_CLASSES[shape_name])
+
+    def pad512(x: int) -> int:
+        return ((x + 511) // 512) * 512
+
+    if shape.kind == "minibatch":
+        seeds = shape.batch_nodes
+        e0 = seeds * shape.fanout[0]
+        e1 = e0 * shape.fanout[1]
+        n = seeds + e0 + e1
+        m = e0 + e1
+    elif shape.kind == "batched":
+        n = shape.batch_graphs * shape.n_nodes
+        m = shape.batch_graphs * shape.n_edges
+    else:
+        n, m = shape.n_nodes, shape.n_edges
+    n_orig, m_orig = n, m
+    # pad to even 512-way tiling (padded nodes/edges are masked by
+    # edge_valid / routed to the dump segment; see sharding._shard_ok)
+    n, m = pad512(n), pad512(m)
+    d_feat = shape.d_feat
+    needs_geom = cfg.family in ("nequip", "mace", "dimenet")
+    n_trip = pad512(4 * m) if cfg.family == "dimenet" else 0
+
+    batch_shapes: dict[str, Any] = {
+        "edge_index": jax.ShapeDtypeStruct((2, m), jnp.int32),
+        "edge_valid": jax.ShapeDtypeStruct((m,), jnp.bool_),
+        "species": jax.ShapeDtypeStruct((n,), jnp.int32),
+    }
+    if d_feat:
+        batch_shapes["node_feat"] = jax.ShapeDtypeStruct((n, d_feat),
+                                                         jnp.float32)
+    if needs_geom:
+        batch_shapes["positions"] = jax.ShapeDtypeStruct((n, 3), jnp.float32)
+    if n_trip:
+        batch_shapes["triplet_in"] = jax.ShapeDtypeStruct((n_trip,),
+                                                          jnp.int32)
+        batch_shapes["triplet_out"] = jax.ShapeDtypeStruct((n_trip,),
+                                                           jnp.int32)
+        batch_shapes["triplet_valid"] = jax.ShapeDtypeStruct((n_trip,),
+                                                             jnp.bool_)
+    if shape.kind == "batched":
+        batch_shapes["graph_ids"] = jax.ShapeDtypeStruct((n,), jnp.int32)
+        batch_shapes["energy_target"] = jax.ShapeDtypeStruct(
+            (shape.batch_graphs,), jnp.float32)
+    else:
+        batch_shapes["labels"] = jax.ShapeDtypeStruct((n,), jnp.int32)
+
+    rng = jax.random.PRNGKey(0)
+    state_shapes = jax.eval_shape(
+        lambda r: init_state(r, mod.init_params(r, cfg, d_feat=d_feat),
+                             "adamw"), rng)
+    state_sh = SH.gnn_shardings(state_shapes, mesh)
+    batch_sh = SH.gnn_batch_shardings(batch_shapes, mesh,
+                                      axes=cfg.shard_axes)
+
+    def loss(p, bt, r):
+        if shape.kind == "batched":
+            bt = dict(bt)
+            bt["n_graphs"] = shape.batch_graphs
+        return mod.loss_fn(p, cfg, bt)
+
+    step = make_train_step(loss, optimizer="adamw",
+                           lr_schedule=cosine_schedule(1e-3, 10, 1000),
+                           jit=False, state_shardings=state_sh)
+    # analytic flops: message MLPs over edges dominate for pna/dimenet;
+    # tensor products over edges for nequip/mace
+    d = cfg.d_hidden
+    if cfg.family == "pna":
+        mf = 6 * m * (2 * d * d + d * d) + 6 * n * (13 * d * d)
+    elif cfg.family == "dimenet":
+        mf = cfg.n_blocks * (6 * n_trip * cfg.n_bilinear * d * d
+                             + 6 * m * 3 * d * d)
+    else:
+        n_paths = 19 if cfg.l_max == 2 else 4
+        tp = sum(1 for _ in range(n_paths))
+        layers = cfg.n_layers
+        mf = layers * 6 * m * n_paths * d * 25  # CG contract ~ (2l+1)^2 ops
+        mf += layers * 6 * n * (cfg.l_max + 1) * d * d * 5
+        if cfg.family == "mace":
+            mf += layers * 6 * n * 19 * d * 125  # B2/B3 tensor powers
+    meta = {"model_flops": float(mf), "n_nodes": n_orig, "n_edges": m_orig,
+            "n_nodes_padded": n, "n_edges_padded": m,
+            "params": sum(int(np.prod(x.shape))
+                          for x in jax.tree.leaves(state_shapes.params))}
+    return Cell(arch, shape_name, step,
+                (_sds(state_shapes, state_sh), _sds(batch_shapes, batch_sh)),
+                donate=(0,), meta=meta)
+
+
+# -------------------------------------------------------------- RecSys cells
+def build_recsys_cell(arch: str, shape_name: str, mesh) -> Cell:
+    cfg, _, family = get_config(arch)
+    assert family == "recsys"
+    from repro.models.recsys import mind
+    shape = REC_SHAPES[shape_name]
+    rng = jax.random.PRNGKey(0)
+    d = cfg.embed_dim
+
+    if shape.kind == "train":
+        b = shape.batch
+        state_shapes = jax.eval_shape(
+            lambda r: init_state(r, mind.init_params(r, cfg), "adamw"), rng)
+        state_sh = SH.recsys_state_shardings(state_shapes, mesh)
+        batch_shapes = {
+            "hist": jax.ShapeDtypeStruct((b, cfg.hist_len), jnp.int32),
+            "hist_mask": jax.ShapeDtypeStruct((b, cfg.hist_len),
+                                              jnp.float32),
+            "target": jax.ShapeDtypeStruct((b,), jnp.int32),
+            "negatives": jax.ShapeDtypeStruct((cfg.n_neg,), jnp.int32),
+        }
+        batch_sh = SH.recsys_batch_shardings(batch_shapes, mesh)
+        step = make_train_step(lambda p, bt, r: mind.loss_fn(p, cfg, bt),
+                               optimizer="adamw",
+                               lr_schedule=cosine_schedule(1e-3, 100, 10000),
+                               jit=False, state_shardings=state_sh)
+        mf = 6 * b * (cfg.hist_len * d * d                 # S-matrix
+                      + cfg.capsule_iters * cfg.hist_len
+                      * cfg.n_interests * d * 2
+                      + (cfg.n_neg + 1) * d)
+        meta = {"model_flops": float(mf), "batch": b,
+                "table_bytes": cfg.n_items * d * 4}
+        return Cell(arch, shape_name, step,
+                    (_sds(state_shapes, state_sh),
+                     _sds(batch_shapes, batch_sh)),
+                    donate=(0,), meta=meta)
+
+    params_shapes = jax.eval_shape(lambda r: mind.init_params(r, cfg), rng)
+    params_sh = SH.recsys_state_shardings(params_shapes, mesh)
+    ax = mesh_axes(mesh)
+    dp = ax["dp"]
+
+    if shape.kind == "serve":
+        b = shape.batch
+        hist = jax.ShapeDtypeStruct(
+            (b, cfg.hist_len), jnp.int32,
+            sharding=NamedSharding(mesh, P(dp, None)))
+        mask = jax.ShapeDtypeStruct(
+            (b, cfg.hist_len), jnp.float32,
+            sharding=NamedSharding(mesh, P(dp, None)))
+
+        def fn(params, hist, mask):
+            return mind.interests(params, cfg, hist, mask)
+
+        mf = 2 * b * (cfg.hist_len * d * d
+                      + cfg.capsule_iters * cfg.hist_len * cfg.n_interests
+                      * d * 2)
+        meta = {"model_flops": float(mf), "batch": b,
+                "table_bytes": cfg.n_items * d * 4}
+        return Cell(arch, shape_name, fn, (_sds(params_shapes, params_sh),
+                                           hist, mask),
+                    donate=(), meta=meta)
+
+    # retrieval: 1 user x n_candidates (padded to even 512-way tiling)
+    b, c = shape.batch, ((shape.n_candidates + 511) // 512) * 512
+    hist = jax.ShapeDtypeStruct((b, cfg.hist_len), jnp.int32,
+                                sharding=NamedSharding(mesh, P()))
+    mask = jax.ShapeDtypeStruct((b, cfg.hist_len), jnp.float32,
+                                sharding=NamedSharding(mesh, P()))
+    cands = jax.ShapeDtypeStruct(
+        (c,), jnp.int32, sharding=NamedSharding(mesh, P(ax["all"])))
+
+    def fn(params, hist, mask, cands):
+        return mind.retrieval_scores(params, cfg, hist, mask, cands)
+
+    mf = 2 * b * cfg.n_interests * c * d
+    meta = {"model_flops": float(mf), "batch": b, "candidates": c,
+            "table_bytes": cfg.n_items * d * 4}
+    return Cell(arch, shape_name, fn,
+                (_sds(params_shapes, params_sh), hist, mask, cands),
+                donate=(), meta=meta)
+
+
+# -------------------------------------------------------------------- table
+def build_cell(arch: str, shape_name: str, mesh) -> Cell:
+    _, _, family = get_config(arch)
+    builder = {"lm": build_lm_cell, "gnn": build_gnn_cell,
+               "recsys": build_recsys_cell}[family]
+    return builder(arch, shape_name, mesh)
+
+
+def all_cells() -> list[tuple[str, str]]:
+    from repro.configs import ARCH_IDS
+    out = []
+    for arch in ARCH_IDS:
+        _, _, family = get_config(arch)
+        shapes = {"lm": LM_SHAPES, "gnn": GNN_SHAPES,
+                  "recsys": REC_SHAPES}[family]
+        for s in shapes:
+            out.append((arch, s))
+    return out

@@ -1,0 +1,171 @@
+"""Rule-based sharding assignment (path + shape -> PartitionSpec).
+
+LM scheme (DESIGN.md §6): FSDP over the data axes x TP over model:
+  embed (V,d)           -> (model, dp)
+  attn wq/wk/wv (L,d,E) -> (None, dp, model)      [heads on model]
+  attn wo (L,E,d)       -> (None, model, dp)
+  mlp w1/w3 (L,d,f)     -> (None, dp, model)
+  mlp w2 (L,f,d)        -> (None, model, dp)
+  MoE experts (L,E,d,f) -> (None, model, dp, None) [EP on model]
+  norms/scalars         -> replicated
+Optimizer states inherit the matching param spec (Adafactor's factored
+moments drop the reduced axis).  GNN/recsys params are small -> replicated,
+except huge embedding tables -> row-sharded over every axis.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .mesh import mesh_axes
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+def lm_param_spec(path: str, shape: tuple, dp, model) -> P:
+    nd = len(shape)
+    if "embed" in path and nd == 2:                 # (V, d)
+        return P(model, dp)
+    if "unembed" in path:                           # (d, V)
+        return P(dp, model)
+    if any(s in path for s in ("router",)):         # (L, d, E)
+        return P(None, dp, None)
+    if any(s in path for s in ("w1", "w3")) and nd == 4:   # (L, E, d, f)
+        return P(None, model, dp, None)
+    if "w2" in path and nd == 4:                    # (L, E, f, d)
+        return P(None, model, None, dp)
+    if any(s in path for s in ("wq", "wk", "wv", "shared_w1", "shared_w3",
+                               "dense_w1", "dense_w3")) and nd == 3:
+        return P(None, dp, model)                   # (L, d, out)
+    if any(s in path for s in ("wo", "w2", "shared_w2", "dense_w2")) \
+            and nd == 3:
+        return P(None, model, dp)                   # (L, in, d)
+    if any(s in path for s in ("w1", "w3")) and nd == 3:
+        return P(None, dp, model)
+    if any(s in path for s in ("bq", "bk", "bv")) and nd == 2:
+        return P(None, model)
+    return P()                                       # norms, scalars
+
+
+def lm_layer_param_spec(path: str, shape: tuple, dp, model) -> P:
+    """Per-layer slice spec (stacked spec with the leading L axis dropped).
+    Used by the in-scan-body constraint that pins the bwd grad accumulator
+    (DESIGN.md §6 / EXPERIMENTS.md §Perf)."""
+    spec = lm_param_spec(path, (1,) + tuple(shape), dp, model)
+    return P(*tuple(spec)[1:]) if len(spec) > 0 else P()
+
+
+def _shard_ok(spec: P, shape: tuple, mesh) -> P:
+    """Drop axis assignments whose mesh extent does not evenly divide the
+    dimension (jit in_shardings requires even tiling; dry-run cells pad
+    their shapes to multiples of 512 so real cells keep full sharding)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is None:
+            out.append(None)
+            continue
+        n = np.prod([sizes[a] for a in (ax if isinstance(ax, tuple) else (ax,))])
+        out.append(ax if (dim >= n and dim % n == 0) else None)
+    return P(*out)
+
+
+def lm_state_shardings(state_shapes: Any, mesh) -> Any:
+    """Shardings for a TrainState-shaped pytree of ShapeDtypeStructs."""
+    ax = mesh_axes(mesh)
+    dp, model = ax["dp"], ax["model"]
+
+    def assign(path, leaf):
+        spec = lm_param_spec(_path_str(path), leaf.shape, dp, model)
+        # factored optimizer moments: reduced rank -> trim trailing axes
+        while len(spec) > len(leaf.shape):
+            spec = P(*tuple(spec)[:len(leaf.shape)])
+        spec = _shard_ok(spec, leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(assign, state_shapes)
+
+
+def lm_batch_shardings(mesh, *, kind: str) -> Any:
+    ax = mesh_axes(mesh)
+    dp = ax["dp"]
+    if kind in ("train", "prefill"):
+        return NamedSharding(mesh, P(dp, None))        # tokens (B, S)
+    if kind == "decode":
+        return NamedSharding(mesh, P(dp))              # token (B,)
+    raise ValueError(kind)
+
+
+def lm_cache_shardings(mesh, cache_shapes, *, long_context: bool) -> Any:
+    """KV caches (L, B, S, KV, dh): batch->dp normally; seq->dp when B == 1
+    (long-context decode shards the sequence instead)."""
+    ax = mesh_axes(mesh)
+    dp, model = ax["dp"], ax["model"]
+
+    def assign(path, leaf):
+        if long_context:
+            spec = P(None, None, dp, model, None)
+        else:
+            spec = P(None, dp, None, model, None)
+        spec = _shard_ok(spec, leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(assign, cache_shapes)
+
+
+def gnn_shardings(state_shapes: Any, mesh) -> Any:
+    """GNN params are small: replicate everything (grads all-reduce)."""
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), state_shapes)
+
+
+def gnn_batch_shardings(batch_shapes: Any, mesh, *, axes: str = "all") -> Any:
+    """Node/edge/triplet arrays: leading dim sharded over every axis
+    (axes="all") or the data axes only (axes="dp" — replicates the tiny
+    model compute across the model axis, shrinking collective groups)."""
+    ax = mesh_axes(mesh)["all"] if axes == "all" else mesh_axes(mesh)["dp"]
+
+    def assign(path, leaf):
+        p = _path_str(path)
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        if p.endswith("edge_index"):                   # (2, m)
+            return NamedSharding(mesh, _shard_ok(P(None, ax), leaf.shape,
+                                                 mesh))
+        spec = P(ax, *(None,) * (leaf.ndim - 1))
+        return NamedSharding(mesh, _shard_ok(spec, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(assign, batch_shapes)
+
+
+def recsys_state_shardings(state_shapes: Any, mesh) -> Any:
+    ax = mesh_axes(mesh)["all"]
+
+    def assign(path, leaf):
+        if "item_embed" in _path_str(path) and leaf.ndim >= 1:
+            spec = P(ax, *(None,) * (leaf.ndim - 1))   # row-sharded table
+            return NamedSharding(mesh, _shard_ok(spec, leaf.shape, mesh))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(assign, state_shapes)
+
+
+def recsys_batch_shardings(batch_shapes: Any, mesh) -> Any:
+    ax = mesh_axes(mesh)
+    dp = ax["dp"]
+
+    def assign(path, leaf):
+        p = _path_str(path)
+        if p.endswith("negatives") or p.endswith("candidates"):
+            return NamedSharding(mesh, P())            # shared across batch
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        spec = P(dp, *(None,) * (leaf.ndim - 1))
+        return NamedSharding(mesh, _shard_ok(spec, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(assign, batch_shapes)

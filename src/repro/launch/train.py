@@ -1,0 +1,85 @@
+"""Production training launcher.
+
+    python -m repro.launch.train --arch tinyllama-1.1b --steps 100 \
+        --batch 8 --seq 256 --smoke          # CPU-scale run
+    python -m repro.launch.train --arch gemma2-27b --mesh pod ...  # on TPU
+
+On real multi-host TPU, set REPRO_COORD_ADDR / REPRO_NUM_PROC /
+REPRO_PROC_ID (see launch/run_multipod.sh) and jax.distributed is
+initialized before anything touches devices.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def maybe_init_distributed():
+    if os.environ.get("REPRO_COORD_ADDR"):
+        import jax
+        jax.distributed.initialize(
+            coordinator_address=os.environ["REPRO_COORD_ADDR"],
+            num_processes=int(os.environ["REPRO_NUM_PROC"]),
+            process_id=int(os.environ["REPRO_PROC_ID"]))
+
+
+def main():
+    maybe_init_distributed()
+    import jax
+    from repro.configs import get_config
+    from repro.models.transformer import model as M
+    from repro.train import checkpoint as ckpt
+    from repro.train.data import lm_batches
+    from repro.train.loop import init_state, make_train_step, run
+    from repro.train.optim import cosine_schedule
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-scale)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--grad-codec", default=None)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    full, smoke, family = get_config(args.arch)
+    assert family == "lm", "train.py drives LM archs; see examples/ for GNN"
+    cfg = smoke if args.smoke else full
+
+    rng = jax.random.PRNGKey(0)
+    params = M.init_params(rng, cfg)
+    state = init_state(jax.random.PRNGKey(1), params, cfg.optimizer)
+    n_params = sum(p.size for p in jax.tree.leaves(params))
+    print(f"{cfg.name}: {n_params/1e6:.1f}M params, optimizer={cfg.optimizer}")
+
+    if args.resume and args.ckpt_dir and ckpt.latest_step(args.ckpt_dir):
+        state = ckpt.restore(args.ckpt_dir, state)
+        print(f"resumed from step {int(state.step)}")
+
+    step_fn = make_train_step(
+        lambda p, b, r: M.loss_fn(p, cfg, b["tokens"], b["targets"]),
+        optimizer=cfg.optimizer,
+        lr_schedule=cosine_schedule(args.lr, 20, args.steps * 2),
+        accum=args.accum, grad_codec=args.grad_codec)
+
+    hooks = []
+    if args.ckpt_dir:
+        hooks.append(ckpt.checkpoint_hook(args.ckpt_dir, args.ckpt_every))
+    data = lm_batches(cfg, batch=args.batch, seq=args.seq,
+                      accum=args.accum)
+    state = run(state, step_fn, data, n_steps=args.steps, hooks=hooks,
+                log_every=10)
+    for h in hooks:
+        if hasattr(h, "wait"):
+            h.wait()
+    print(f"done at step {int(state.step)}")
+
+
+if __name__ == "__main__":
+    main()

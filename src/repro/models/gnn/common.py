@@ -1,0 +1,121 @@
+"""Shared GNN utilities: masked segment aggregation, input embeddings,
+edge geometry, triplet construction (DimeNet), Legendre polynomials."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def masked_dst(edge_index, edge_valid, n):
+    """Route invalid edges to a dump segment n (callers use n+1 segments)."""
+    return jnp.where(edge_valid, edge_index[1], n)
+
+
+def multi_aggregate(msg, edge_index, edge_valid, n):
+    """(mean, max, min, std) over valid in-edges; empty segments -> 0."""
+    d = masked_dst(edge_index, edge_valid, n)
+    ones = jnp.where(edge_valid, 1.0, 0.0)
+    cnt = jax.ops.segment_sum(ones, d, num_segments=n + 1)[:n]
+    safe = jnp.maximum(cnt, 1.0)[:, None]
+    msg_m = msg * ones[:, None]
+    s = jax.ops.segment_sum(msg_m, d, num_segments=n + 1)[:n]
+    mean = s / safe
+    s2 = jax.ops.segment_sum(msg_m * msg_m, d, num_segments=n + 1)[:n]
+    std = jnp.sqrt(jnp.maximum(s2 / safe - mean * mean, 0.0) + 1e-5)
+    neg_inf = jnp.finfo(msg.dtype).min
+    mmax = jax.ops.segment_max(jnp.where(edge_valid[:, None], msg, neg_inf),
+                               d, num_segments=n + 1)[:n]
+    mmax = jnp.where(cnt[:, None] > 0, mmax, 0.0)
+    mmin = jax.ops.segment_min(jnp.where(edge_valid[:, None], msg, -neg_inf),
+                               d, num_segments=n + 1)[:n]
+    mmin = jnp.where(cnt[:, None] > 0, mmin, 0.0)
+    return mean, mmax, mmin, std, cnt
+
+
+def scatter_sum_valid(msg, edge_index, edge_valid, n):
+    d = masked_dst(edge_index, edge_valid, n)
+    return jax.ops.segment_sum(msg * edge_valid[:, None].astype(msg.dtype),
+                               d, num_segments=n + 1)[:n]
+
+
+def input_embed(params, batch, d_out):
+    """node_feat projection if present, else species embedding."""
+    if batch.get("node_feat") is not None:
+        return batch["node_feat"] @ params["w_in"]
+    return params["species_embed"][batch["species"]]
+
+
+def edge_vectors(batch):
+    """(m, 3) displacement src -> dst and (m,) length."""
+    pos = batch["positions"]
+    ei = batch["edge_index"]
+    vec = pos[ei[1]] - pos[ei[0]]
+    r = jnp.linalg.norm(vec, axis=-1)
+    return vec, r
+
+
+def build_triplets(edge_index: np.ndarray, edge_valid: np.ndarray,
+                   max_triplets: int):
+    """Host-side (k->j) , (j->i) triplet index build for DimeNet.
+
+    Returns (t_in, t_out, valid): for each triplet, t_in is the edge id of
+    (k->j), t_out the edge id of (j->i), with k != i.
+    """
+    src, dst = edge_index[0], edge_index[1]
+    m = src.shape[0]
+    by_dst: dict[int, list[int]] = {}
+    for e in range(m):
+        if edge_valid[e]:
+            by_dst.setdefault(int(dst[e]), []).append(e)
+    t_in, t_out = [], []
+    for e_out in range(m):
+        if not edge_valid[e_out]:
+            continue
+        j = int(src[e_out])
+        i = int(dst[e_out])
+        for e_in in by_dst.get(j, ()):  # k -> j
+            if int(src[e_in]) == i:
+                continue
+            t_in.append(e_in)
+            t_out.append(e_out)
+            if len(t_in) >= max_triplets:
+                break
+        if len(t_in) >= max_triplets:
+            break
+    cnt = len(t_in)
+    pad = max_triplets - cnt
+    t_in = np.asarray(t_in + [0] * pad, np.int32)
+    t_out = np.asarray(t_out + [0] * pad, np.int32)
+    valid = np.asarray([True] * cnt + [False] * pad)
+    return t_in, t_out, valid
+
+
+def legendre(cos_t: jax.Array, n: int) -> jax.Array:
+    """P_0..P_{n-1}(cos_t) via recurrence -> (..., n)."""
+    outs = [jnp.ones_like(cos_t)]
+    if n > 1:
+        outs.append(cos_t)
+    for l in range(2, n):
+        outs.append(((2 * l - 1) * cos_t * outs[-1]
+                     - (l - 1) * outs[-2]) / l)
+    return jnp.stack(outs, axis=-1)
+
+
+def mlp_init(rng, sizes, scale=None):
+    ws = {}
+    keys = jax.random.split(rng, len(sizes) - 1)
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        s = scale if scale is not None else a ** -0.5
+        ws[f"w{i}"] = jax.random.normal(keys[i], (a, b), jnp.float32) * s
+        ws[f"b{i}"] = jnp.zeros((b,), jnp.float32)
+    return ws
+
+
+def mlp_apply(ws, x, act=jax.nn.silu, final_act=False):
+    n = len([k for k in ws if k.startswith("w")])
+    for i in range(n):
+        x = x @ ws[f"w{i}"] + ws[f"b{i}"]
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x

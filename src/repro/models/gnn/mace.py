@@ -1,0 +1,160 @@
+"""MACE — higher-order equivariant message passing [arXiv:2206.07697].
+
+Per layer: (1) the A-basis — the same radial x spherical-harmonic CG
+convolution as NequIP — then (2) the B-basis: symmetric tensor powers of A
+up to correlation order ν (default 3) built by iterated channel-wise CG
+products, each projected back to the target irreps with learnable channel
+mixes.  Two layers suffice (the paper's point: higher correlation order
+replaces deep stacks).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig
+from .common import mlp_apply, mlp_init, scatter_sum_valid
+from .irreps import bessel_basis, clebsch_gordan, spherical_harmonics
+from .nequip import paths
+
+
+def _pair_paths(l_max: int):
+    out = []
+    for l1 in range(l_max + 1):
+        for l2 in range(l_max + 1):
+            for lo in range(abs(l1 - l2), min(l_max, l1 + l2) + 1):
+                out.append((l1, l2, lo))
+    return out
+
+
+def init_params(rng, cfg: GNNConfig, d_feat: int) -> dict:
+    c = cfg.d_hidden
+    ps = paths(cfg.l_max)
+    pp = _pair_paths(cfg.l_max)
+    keys = jax.random.split(rng, cfg.n_layers + 4)
+    p = {
+        "species_embed": jax.random.normal(keys[0], (cfg.n_species, c)) * 0.3,
+        "w_in": (jax.random.normal(keys[1], (d_feat, c)) * d_feat ** -0.5
+                 if d_feat else None),
+        "layers": [],
+        "head": mlp_init(keys[2], (c, c, 1)),
+        "node_head": jax.random.normal(keys[2], (c, cfg.n_classes)) * c ** -0.5,
+    }
+    for li in range(cfg.n_layers):
+        k = jax.random.split(keys[3 + li], 10)
+        lp = {
+            "radial": mlp_init(k[0], (cfg.n_rbf, 64, len(ps) * c)),
+            # B-basis channel mixers per correlation order and output l
+            "mix_b2": {f"{l1}_{l2}_{lo}": jax.random.normal(
+                k[1], (c, c)) * c ** -0.5 for (l1, l2, lo) in pp},
+            "mix_b3": {f"{l1}_{l2}_{lo}": jax.random.normal(
+                k[2], (c, c)) * c ** -0.5 for (l1, l2, lo) in pp},
+            "lin_b1": {l: jax.random.normal(k[3 + l], (c, c)) * c ** -0.5
+                       for l in range(cfg.l_max + 1)},
+            "lin_b2": {l: jax.random.normal(k[6], (c, c)) * c ** -0.5
+                       for l in range(cfg.l_max + 1)},
+            "lin_b3": {l: jax.random.normal(k[7], (c, c)) * c ** -0.5
+                       for l in range(cfg.l_max + 1)},
+            "skip": {l: jax.random.normal(k[8], (c, c)) * c ** -0.5
+                     for l in range(cfg.l_max + 1)},
+        }
+        p["layers"].append(lp)
+    return p
+
+
+def _a_basis(cfg, lp, feat, ei, valid, sh, rbf, n):
+    c = cfg.d_hidden
+    ps = paths(cfg.l_max)
+    w_all = mlp_apply(lp["radial"], rbf).reshape(rbf.shape[0], len(ps), c)
+    out = {l: jnp.zeros((n, c, 2 * l + 1), feat[0].dtype)
+           for l in range(cfg.l_max + 1)}
+    src = ei[0]
+    for pi, (li, lf, lo) in enumerate(ps):
+        cg = jnp.asarray(clebsch_gordan(li, lf, lo), feat[0].dtype)
+        msg = jnp.einsum("eci,ej,ijk->eck", feat[li][src], sh[lf], cg)
+        msg = msg * w_all[:, pi, :, None]
+        agg = scatter_sum_valid(msg.reshape(msg.shape[0], -1), ei, valid, n)
+        out[lo] = out[lo] + agg.reshape(n, c, 2 * lo + 1)
+    return out
+
+
+def _tensor_power(cfg, a, b, mix):
+    """Channel-wise CG product of irrep dicts a ⊗ b with learnable mixing."""
+    c = cfg.d_hidden
+    n = a[0].shape[0]
+    out = {l: jnp.zeros((n, c, 2 * l + 1), a[0].dtype)
+           for l in range(cfg.l_max + 1)}
+    for (l1, l2, lo) in _pair_paths(cfg.l_max):
+        cg = jnp.asarray(clebsch_gordan(l1, l2, lo), a[0].dtype)
+        prod = jnp.einsum("nci,ncj,ijk->nck", a[l1], b[l2], cg)
+        out[lo] = out[lo] + jnp.einsum("nci,cd->ndi", prod,
+                                       mix[f"{l1}_{l2}_{lo}"])
+    return out
+
+
+def apply(params: dict, cfg: GNNConfig, batch: dict) -> jax.Array:
+    pos = batch["positions"]
+    ei = batch["edge_index"]
+    valid = batch["edge_valid"]
+    n = pos.shape[0]
+    c = cfg.d_hidden
+
+    vec = pos[ei[1]] - pos[ei[0]]
+    r = jnp.linalg.norm(vec, axis=-1)
+    sh = spherical_harmonics(vec, cfg.l_max)
+    rbf = bessel_basis(r, cfg.n_rbf, cfg.cutoff)
+
+    f0 = params["species_embed"][batch["species"]]
+    if batch.get("node_feat") is not None and params["w_in"] is not None:
+        f0 = f0 + batch["node_feat"] @ params["w_in"]
+    feat = {0: f0[:, :, None]}
+    for l in range(1, cfg.l_max + 1):
+        feat[l] = jnp.zeros((n, c, 2 * l + 1), f0.dtype)
+
+    norm = 1.0 / jnp.sqrt(jnp.maximum(valid.sum() / n, 1.0))
+    for lp in params["layers"]:
+        a = _a_basis(cfg, lp, feat, ei, valid, sh, rbf, n)
+        a = {l: v * norm for l, v in a.items()}
+        b2 = _tensor_power(cfg, a, a, lp["mix_b2"])          # ν = 2
+        b3 = (_tensor_power(cfg, b2, a, lp["mix_b3"])        # ν = 3
+              if cfg.correlation_order >= 3 else None)
+        new = {}
+        for l in range(cfg.l_max + 1):
+            m = jnp.einsum("nci,cd->ndi", a[l], lp["lin_b1"][l])
+            m = m + jnp.einsum("nci,cd->ndi", b2[l], lp["lin_b2"][l])
+            if b3 is not None:
+                m = m + jnp.einsum("nci,cd->ndi", b3[l], lp["lin_b3"][l])
+            new[l] = m + jnp.einsum("nci,cd->ndi", feat[l], lp["skip"][l])
+        feat = {0: jax.nn.silu(new[0][:, :, 0])[:, :, None],
+                **{l: new[l] for l in range(1, cfg.l_max + 1)}}
+    return feat[0][:, :, 0]
+
+
+def energy(params, cfg: GNNConfig, batch) -> jax.Array:
+    h = apply(params, cfg, batch)
+    e_atom = mlp_apply(params["head"], h)[:, 0]
+    gid = batch.get("graph_ids")
+    if gid is None:
+        return e_atom.sum()[None]
+    return jax.ops.segment_sum(e_atom, gid, num_segments=batch["n_graphs"])
+
+
+def forces(params, cfg: GNNConfig, batch) -> jax.Array:
+    def etot(pos):
+        return energy(params, cfg, {**batch, "positions": pos}).sum()
+    return -jax.grad(etot)(batch["positions"])
+
+
+def node_logits(params, cfg: GNNConfig, batch) -> jax.Array:
+    return apply(params, cfg, batch) @ params["node_head"]
+
+
+def loss_fn(params, cfg: GNNConfig, batch):
+    if "energy_target" in batch:
+        e = energy(params, cfg, batch)
+        return jnp.mean((e - batch["energy_target"]) ** 2), {}
+    logits = node_logits(params, cfg, batch)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return (lse - gold).mean(), {}

@@ -1,0 +1,140 @@
+"""NequIP — E(3)-equivariant interatomic potential [arXiv:2101.03164].
+
+Features are irrep dicts {l: (n, C, 2l+1)} for l <= l_max.  Each interaction
+layer: radial-MLP-weighted Clebsch-Gordan tensor-product convolution over
+edges (spherical-harmonic edge attributes), scatter-sum aggregation,
+per-l self-interaction linears, and gate nonlinearity (l=0 silu; l>0 gated
+by sigmoid scalars).  Energy = sum of per-atom scalar head; forces =
+-∂E/∂positions (exercised in tests for exact equivariance).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig
+from .common import mlp_apply, mlp_init, scatter_sum_valid
+from .irreps import bessel_basis, clebsch_gordan, spherical_harmonics
+
+
+def paths(l_max: int):
+    out = []
+    for li in range(l_max + 1):
+        for lf in range(l_max + 1):
+            for lo in range(abs(li - lf), min(l_max, li + lf) + 1):
+                out.append((li, lf, lo))
+    return out
+
+
+def init_params(rng, cfg: GNNConfig, d_feat: int) -> dict:
+    c = cfg.d_hidden
+    ps = paths(cfg.l_max)
+    keys = jax.random.split(rng, cfg.n_layers + 4)
+    p = {
+        "species_embed": jax.random.normal(keys[0], (cfg.n_species, c)) * 0.3,
+        "w_in": (jax.random.normal(keys[1], (d_feat, c)) * d_feat ** -0.5
+                 if d_feat else None),
+        "layers": [],
+        "head": mlp_init(keys[2], (c, c, 1)),
+        "node_head": jax.random.normal(keys[2], (c, cfg.n_classes))
+        * c ** -0.5,
+    }
+    for li in range(cfg.n_layers):
+        k = jax.random.split(keys[3 + li], 6)
+        lp = {
+            "radial": mlp_init(k[0], (cfg.n_rbf, 64, len(ps) * c)),
+            "self": {l: jax.random.normal(k[1 + l], (c, c)) * c ** -0.5
+                     for l in range(cfg.l_max + 1)},
+            "skip": {l: jax.random.normal(k[4], (c, c)) * c ** -0.5
+                     for l in range(cfg.l_max + 1)},
+            "gate": jax.random.normal(k[5], (c, cfg.l_max * c)) * c ** -0.5,
+        }
+        p["layers"].append(lp)
+    return p
+
+
+def _conv(cfg, lp, feat, edge_index, edge_valid, sh, rbf, n):
+    """One tensor-product convolution; returns dict l -> (n, C, 2l+1)."""
+    c = cfg.d_hidden
+    ps = paths(cfg.l_max)
+    w_all = mlp_apply(lp["radial"], rbf).reshape(rbf.shape[0], len(ps), c)
+    src = edge_index[0]
+    out = {l: jnp.zeros((n, c, 2 * l + 1), feat[0].dtype)
+           for l in range(cfg.l_max + 1)}
+    for pi, (li, lf, lo) in enumerate(ps):
+        cg = jnp.asarray(clebsch_gordan(li, lf, lo), feat[0].dtype)
+        msg = jnp.einsum("eci,ej,ijk->eck", feat[li][src], sh[lf], cg)
+        msg = msg * w_all[:, pi, :, None]
+        agg = scatter_sum_valid(msg.reshape(msg.shape[0], -1),
+                                edge_index, edge_valid, n)
+        out[lo] = out[lo] + agg.reshape(n, c, 2 * lo + 1)
+    return out
+
+
+def apply(params: dict, cfg: GNNConfig, batch: dict) -> jax.Array:
+    """-> per-atom scalar embedding (n, C) (invariant channel)."""
+    pos = batch["positions"]
+    ei = batch["edge_index"]
+    valid = batch["edge_valid"]
+    n = pos.shape[0]
+    c = cfg.d_hidden
+
+    vec = pos[ei[1]] - pos[ei[0]]
+    r = jnp.linalg.norm(vec, axis=-1)
+    sh = spherical_harmonics(vec, cfg.l_max)
+    rbf = bessel_basis(r, cfg.n_rbf, cfg.cutoff)
+
+    f0 = params["species_embed"][batch["species"]]
+    if batch.get("node_feat") is not None and params["w_in"] is not None:
+        f0 = f0 + batch["node_feat"] @ params["w_in"]
+    feat = {0: f0[:, :, None]}
+    for l in range(1, cfg.l_max + 1):
+        feat[l] = jnp.zeros((n, c, 2 * l + 1), f0.dtype)
+
+    norm = 1.0 / jnp.sqrt(jnp.maximum(valid.sum() / n, 1.0))
+    for lp in params["layers"]:
+        m = _conv(cfg, lp, feat, ei, valid, sh, rbf, n)
+        new = {}
+        for l in range(cfg.l_max + 1):
+            lin = jnp.einsum("nci,cd->ndi", m[l] * norm, lp["self"][l])
+            skip = jnp.einsum("nci,cd->ndi", feat[l], lp["skip"][l])
+            new[l] = lin + skip
+        gates = jax.nn.sigmoid(new[0][:, :, 0] @ lp["gate"]
+                               ).reshape(n, cfg.l_max, c)
+        feat = {0: jax.nn.silu(new[0][:, :, 0])[:, :, None]}
+        for l in range(1, cfg.l_max + 1):
+            feat[l] = new[l] * gates[:, l - 1, :, None]
+    return feat[0][:, :, 0]
+
+
+def energy(params, cfg: GNNConfig, batch) -> jax.Array:
+    """Per-graph energies (B,) via graph_ids (all-zeros for a single graph)."""
+    h = apply(params, cfg, batch)
+    e_atom = mlp_apply(params["head"], h)[:, 0]
+    gid = batch.get("graph_ids")
+    if gid is None:
+        return e_atom.sum()[None]
+    nb = batch["n_graphs"]
+    return jax.ops.segment_sum(e_atom, gid, num_segments=nb)
+
+
+def forces(params, cfg: GNNConfig, batch) -> jax.Array:
+    def etot(pos):
+        return energy(params, cfg, {**batch, "positions": pos}).sum()
+    return -jax.grad(etot)(batch["positions"])
+
+
+def node_logits(params, cfg: GNNConfig, batch) -> jax.Array:
+    return apply(params, cfg, batch) @ params["node_head"]
+
+
+def loss_fn(params, cfg: GNNConfig, batch):
+    if "energy_target" in batch:
+        e = energy(params, cfg, batch)
+        loss = jnp.mean((e - batch["energy_target"]) ** 2)
+        return loss, {}
+    logits = node_logits(params, cfg, batch)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return (lse - gold).mean(), {}

@@ -1,0 +1,127 @@
+"""Attention: GQA with causal/sliding-window masks, logit softcap, and a
+memory-O(S·kv_chunk) chunked (online-softmax) formulation.
+
+Full (B,H,S,S) score tensors are impossible at prefill_32k scale (2.3 PB for
+gemma2-27b); the chunked scan is the hardware-adapted equivalent of
+FlashAttention for XLA:TPU — scores only ever exist per (q_chunk × kv_chunk)
+tile in VMEM-sized working sets, and XLA overlaps the KV streaming with the
+MXU matmuls.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    """(B, S, KV, dh) -> (B, S, KV*n_rep, dh)."""
+    if n_rep == 1:
+        return k
+    b, s, kv, dh = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, n_rep, dh)
+                            ).reshape(b, s, kv * n_rep, dh)
+
+
+def _mask_tile(q_pos: jax.Array, kv_pos: jax.Array, *, causal: bool,
+               window) -> jax.Array:
+    """(Sq, Skv) bool — True = attend. ``window`` may be a traced scalar
+    (per-layer local/global selection inside a scan) or None."""
+    rel = q_pos[:, None] - kv_pos[None, :]
+    ok = jnp.ones(rel.shape, jnp.bool_)
+    if causal:
+        ok &= rel >= 0
+    if window is not None:
+        ok &= rel < window
+    return ok
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      q_pos: jax.Array, kv_pos: jax.Array, *,
+                      causal: bool = True, window=None,
+                      softcap: float | None = None,
+                      kv_chunk: int = 1024) -> jax.Array:
+    """Online-softmax attention.
+
+    q (B, Sq, H, dh); k/v (B, Skv, H, dh) — KV already GQA-repeated.
+    q_pos (Sq,), kv_pos (Skv,) absolute positions for masking.
+    ``window``: None, int, or traced int32 scalar.
+    Returns (B, Sq, H, dh) in q.dtype.
+    """
+    b, sq, h, dh = q.shape
+    skv = k.shape[1]
+    kv_chunk = min(kv_chunk, skv)
+    assert skv % kv_chunk == 0, (skv, kv_chunk)
+    n_chunks = skv // kv_chunk
+    scale = dh ** -0.5
+    qf = (q * scale).astype(jnp.float32)
+
+    kc = k.reshape(b, n_chunks, kv_chunk, h, dh)
+    vc = v.reshape(b, n_chunks, kv_chunk, h, dh)
+    pc = kv_pos.reshape(n_chunks, kv_chunk)
+
+    def step(carry, xs):
+        acc, m, denom = carry                      # (B,Sq,H,dh) f32, (B,Sq,H)
+        k_i, v_i, p_i = xs                          # (B,C,H,dh), (C,)
+        s = jnp.einsum("bqhd,bchd->bqhc", qf, k_i.astype(jnp.float32))
+        s = _softcap(s, softcap)
+        mask = _mask_tile(q_pos, p_i, causal=causal, window=window)
+        s = jnp.where(mask[None, :, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bqhc,bchd->bqhd", p, v_i.astype(jnp.float32))
+        denom = denom * alpha + p.sum(axis=-1)
+        return (acc, m_new, denom), None
+
+    acc0 = jnp.zeros((b, sq, h, dh), jnp.float32)
+    m0 = jnp.full((b, sq, h), NEG_INF, jnp.float32)
+    d0 = jnp.zeros((b, sq, h), jnp.float32)
+    (acc, _, denom), _ = jax.lax.scan(
+        step, (acc0, m0, d0),
+        (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4), pc))
+    out = acc / jnp.maximum(denom[..., None], 1e-30)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, *, window: int | None = None,
+                     softcap: float | None = None,
+                     ring: bool = False) -> jax.Array:
+    """Single-token attention against a KV cache.
+
+    q (B, 1, H, dh); caches (B, S_cache, KV, dh) GQA (not repeated); ``pos``
+    () int32 — the current absolute position.  ``ring=True`` means the cache
+    is a ring buffer of size S_cache == window (local layers): every live
+    slot is in-window by construction.
+    Returns (B, 1, H, dh).
+    """
+    b, s_cache, kv, dh = k_cache.shape
+    h = q.shape[2]
+    n_rep = h // kv
+    scale = dh ** -0.5
+    qf = (q[:, 0] * scale).astype(jnp.float32)           # (B, H, dh)
+    qg = qf.reshape(b, kv, n_rep, dh)
+    s = jnp.einsum("bknd,bskd->bkns", qg, k_cache.astype(jnp.float32))
+    s = _softcap(s, softcap)
+    slot = jnp.arange(s_cache, dtype=jnp.int32)
+    if ring:
+        valid = slot < jnp.minimum(pos + 1, s_cache)      # ring: all in-window
+    else:
+        valid = slot <= pos
+        if window is not None:
+            valid &= slot > pos - window
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkns,bskd->bknd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, dh).astype(q.dtype)

@@ -1,0 +1,421 @@
+"""Decoder-only transformer covering all five assigned LM architectures.
+
+One stacked-parameter, scan-over-layers decoder with per-config switches:
+GQA ratios, QKV bias (qwen1.5), local+global alternating attention with
+sliding window + attn/final logit softcaps + sandwich norms (gemma2-2x),
+MoE FFNs with shared experts (moonshot) or a parallel dense-residual branch
+(arctic).  scan keeps HLO size and compile time O(1) in depth; remat wraps
+the scanned body (activation recompute), which is what makes train_4k fit
+at 27B/480B scale.
+
+Params are stored fp32 (optimizer master) and cast to cfg.dtype (bf16) at
+the top of the forward pass.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TransformerConfig
+from .attention import chunked_attention, decode_attention, repeat_kv
+from .moe import init_moe_params, moe_ffn
+from .rope import apply_rope
+
+Constrain = Callable[[jax.Array, str], jax.Array]  # (x, kind) -> x
+
+
+def _identity_constrain(x, kind):
+    return x
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    n = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return ((1.0 + w.astype(jnp.float32)) * n).astype(x.dtype)
+
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+# --------------------------------------------------------------------- init
+def init_params(rng: jax.Array, cfg: TransformerConfig) -> dict:
+    l, d, h, kv, dh, f, v = (cfg.n_layers, cfg.d_model, cfg.n_heads,
+                             cfg.n_kv_heads, cfg.d_head, cfg.d_ff, cfg.vocab)
+    pdt = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(rng, 16)
+    s_in = d ** -0.5
+    p: dict[str, Any] = {
+        "embed": jax.random.normal(keys[0], (v, d), jnp.float32
+                                   ).astype(pdt) * 0.02,
+        "final_norm": jnp.zeros((d,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = (jax.random.normal(keys[1], (d, v), jnp.float32)
+                        * s_in).astype(pdt)
+
+    def nrm(key, shape, scale):
+        return (jax.random.normal(key, shape, jnp.float32) * scale
+                ).astype(pdt)
+
+    lk = jax.random.split(keys[2], 8)
+    attn = {
+        "wq": nrm(lk[0], (l, d, h * dh), s_in),
+        "wk": nrm(lk[1], (l, d, kv * dh), s_in),
+        "wv": nrm(lk[2], (l, d, kv * dh), s_in),
+        "wo": nrm(lk[3], (l, h * dh, d), (h * dh) ** -0.5),
+        "ln1": jnp.zeros((l, d), jnp.float32),
+    }
+    if cfg.qkv_bias:
+        attn["bq"] = jnp.zeros((l, h * dh), jnp.float32)
+        attn["bk"] = jnp.zeros((l, kv * dh), jnp.float32)
+        attn["bv"] = jnp.zeros((l, kv * dh), jnp.float32)
+    if cfg.post_norm:
+        attn["ln1_post"] = jnp.zeros((l, d), jnp.float32)
+
+    if cfg.moe is None:
+        mlp = {
+            "w1": nrm(lk[4], (l, d, f), s_in),
+            "w3": nrm(lk[5], (l, d, f), s_in),
+            "w2": nrm(lk[6], (l, f, d), f ** -0.5),
+            "ln2": jnp.zeros((l, d), jnp.float32),
+        }
+    else:
+        per_layer = [init_moe_params(k, d, cfg.moe, pdt)
+                     for k in jax.random.split(lk[4], l)]
+        mlp = jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+        mlp["ln2"] = jnp.zeros((l, d), jnp.float32)
+    if cfg.post_norm:
+        mlp["ln2_post"] = jnp.zeros((l, d), jnp.float32)
+    p["layers"] = {"attn": attn, "mlp": mlp}
+    return p
+
+
+def is_local_layers(cfg: TransformerConfig) -> jax.Array:
+    """(L,) bool — sliding-window layers (even layers for local_global)."""
+    ids = jnp.arange(cfg.n_layers)
+    if cfg.layer_pattern == "local_global":
+        return ids % 2 == 0
+    return jnp.zeros_like(ids, dtype=jnp.bool_)
+
+
+# ------------------------------------------------------------------ forward
+def _layer_fwd(cfg: TransformerConfig, x, lp, is_local, q_pos, kv_pos,
+               constrain: Constrain, with_kv: bool = False):
+    lp = constrain(lp, "layer_params")  # pins bwd grad-accumulator sharding
+    dt = x.dtype
+    b, s, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    a, m = lp["attn"], lp["mlp"]
+    big = jnp.int32(1 << 30)
+    window = jnp.where(is_local, jnp.int32(cfg.window or (1 << 30)), big)
+
+    hn = rmsnorm(x, a["ln1"], cfg.norm_eps)
+    q = jnp.einsum("bsd,de->bse", hn, a["wq"].astype(dt))
+    k = jnp.einsum("bsd,de->bse", hn, a["wk"].astype(dt))
+    vv = jnp.einsum("bsd,de->bse", hn, a["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + a["bq"].astype(dt)
+        k = k + a["bk"].astype(dt)
+        vv = vv + a["bv"].astype(dt)
+    q = apply_rope(q.reshape(b, s, h, dh), q_pos[None], cfg.rope_theta)
+    k = apply_rope(k.reshape(b, s, kv, dh), kv_pos[None], cfg.rope_theta)
+    vv = vv.reshape(b, s, kv, dh)
+    kv_for_cache = (k, vv)  # pre-repeat GQA K/V, exactly what decode caches
+    k = repeat_kv(k, h // kv)
+    vv = repeat_kv(vv, h // kv)
+    o = chunked_attention(q, k, vv, q_pos, kv_pos, causal=True,
+                          window=window, softcap=cfg.attn_softcap,
+                          kv_chunk=min(1024, s))
+    o = jnp.einsum("bse,ed->bsd", o.reshape(b, s, h * dh),
+                   a["wo"].astype(dt))
+    if cfg.post_norm:
+        o = rmsnorm(o, a["ln1_post"], cfg.norm_eps)
+    x = constrain(x + o, "residual")
+
+    hn2 = rmsnorm(x, m["ln2"], cfg.norm_eps)
+    if cfg.moe is None:
+        up = jnp.einsum("bsd,df->bsf", hn2, m["w1"].astype(dt))
+        gate = jnp.einsum("bsd,df->bsf", hn2, m["w3"].astype(dt))
+        act = _act(cfg.act)
+        ff = (act(up.astype(jnp.float32)) * gate.astype(jnp.float32)).astype(dt)
+        ff = jnp.einsum("bsf,fd->bsd", ff, m["w2"].astype(dt))
+        aux = jnp.float32(0.0)
+    else:
+        mp = {k_: v_.astype(dt) if v_.dtype != jnp.float32 or k_ != "router"
+              else v_ for k_, v_ in m.items() if k_ not in ("ln2", "ln2_post")}
+        flat = hn2.reshape(b * s, d)
+        hooked = constrain((mp, flat), "moe_call")
+        if hooked is not None and not (isinstance(hooked, tuple)
+                                       and len(hooked) == 2
+                                       and hooked[0] is mp):
+            ff, aux = hooked           # shard_map path (launch/cells.py)
+        else:
+            ff, aux = moe_ffn(mp, flat, cfg.moe, _act(cfg.act),
+                              constrain=constrain)
+        ff = ff.reshape(b, s, d)
+    if cfg.post_norm:
+        ff = rmsnorm(ff, m["ln2_post"], cfg.norm_eps)
+    x = constrain(x + ff, "residual")
+    return x, aux, (kv_for_cache if with_kv else None)
+
+
+def forward(params: dict, cfg: TransformerConfig, tokens: jax.Array,
+            *, constrain: Constrain = _identity_constrain,
+            with_kv: bool = False):
+    """tokens (B, S) int32 -> (logits (B, S, V) cfg.dtype, aux_loss ())
+    (+ per-layer stacked K/V when with_kv — the prefill cache)."""
+    dt = jnp.dtype(cfg.dtype)
+    b, s = tokens.shape
+    x = params["embed"].astype(dt)[tokens] * jnp.asarray(
+        cfg.d_model ** 0.5 if cfg.post_norm else 1.0, dt)
+    x = constrain(x, "residual")
+    pos = jnp.arange(s, dtype=jnp.int32)
+    is_local = is_local_layers(cfg)
+
+    def body(x, xs):
+        lp, loc = xs
+        x, aux, kvp = _layer_fwd(cfg, x, lp, loc, pos, pos, constrain,
+                                 with_kv)
+        return x, ((aux, kvp) if with_kv else aux)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, ys = jax.lax.scan(body, x, (params["layers"], is_local))
+    if with_kv:
+        auxes, kvs = ys
+    else:
+        auxes, kvs = ys, None
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = _unembed(params, cfg, x, constrain)
+    if with_kv:
+        return logits, auxes.sum(), kvs
+    return logits, auxes.sum()
+
+
+def forward_hidden(params: dict, cfg: TransformerConfig, tokens: jax.Array,
+                   *, constrain: Constrain = _identity_constrain):
+    """Forward up to the final norm (no unembedding) -> ((B,S,d), aux)."""
+    dt = jnp.dtype(cfg.dtype)
+    b, s = tokens.shape
+    x = params["embed"].astype(dt)[tokens] * jnp.asarray(
+        cfg.d_model ** 0.5 if cfg.post_norm else 1.0, dt)
+    x = constrain(x, "residual")
+    pos = jnp.arange(s, dtype=jnp.int32)
+    is_local = is_local_layers(cfg)
+
+    def body(x, xs):
+        lp, loc = xs
+        x, aux, _ = _layer_fwd(cfg, x, lp, loc, pos, pos, constrain, False)
+        return x, aux
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, auxes = jax.lax.scan(body, x, (params["layers"], is_local))
+    return rmsnorm(x, params["final_norm"], cfg.norm_eps), auxes.sum()
+
+
+def _unembed(params, cfg, x, constrain: Constrain = _identity_constrain):
+    dt = x.dtype
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(dt))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(dt))
+    logits = constrain(logits, "logits")
+    if cfg.final_softcap is not None:
+        logits = (cfg.final_softcap
+                  * jnp.tanh(logits.astype(jnp.float32) / cfg.final_softcap)
+                  ).astype(dt)
+    return logits
+
+
+def _ce_terms(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Per-token CE without gathers on the (possibly sharded) vocab dim:
+    gold logit via an iota==target masked reduction (shards cleanly under
+    SPMD; take_along_axis over a model-sharded vocab does not)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    gold = jnp.sum(jnp.where(vocab_iota == targets[..., None], lf, 0.0),
+                   axis=-1)
+    return lse - gold
+
+
+def loss_fn(params: dict, cfg: TransformerConfig, tokens: jax.Array,
+            targets: jax.Array, *, constrain: Constrain = _identity_constrain
+            ) -> tuple[jax.Array, dict]:
+    """Cross-entropy; with cfg.ce_chunk > 0 the (B, S, V) logits are never
+    materialized — the unembed+CE runs in sequence chunks (the §Perf memory
+    lever for 256k-vocab models)."""
+    b, s = tokens.shape
+    x, aux = forward_hidden(params, cfg, tokens, constrain=constrain)
+    if cfg.ce_chunk and cfg.ce_chunk < s:
+        nc = s // cfg.ce_chunk
+        xs = x.reshape(b, nc, cfg.ce_chunk, -1).swapaxes(0, 1)
+        ts = targets.reshape(b, nc, cfg.ce_chunk).swapaxes(0, 1)
+
+        def chunk(tot, xs_):
+            xc, tc = xs_
+            logits = _unembed(params, cfg, xc, constrain)
+            return tot + _ce_terms(logits, tc).sum(), None
+
+        total, _ = jax.lax.scan(chunk, jnp.float32(0.0), (xs, ts))
+        ce = total / (b * s)
+    else:
+        logits = _unembed(params, cfg, x, constrain)
+        ce = _ce_terms(logits, targets).mean()
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux, "loss": loss}
+
+
+# -------------------------------------------------------------- serve paths
+def init_cache(cfg: TransformerConfig, batch: int, s_cache: int) -> dict:
+    """KV caches; local layers get ring buffers of size window."""
+    dt = jnp.dtype(cfg.dtype)
+    l, kv, dh = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
+    w = min(cfg.window or s_cache, s_cache)
+    local_len = w if cfg.layer_pattern == "local_global" else s_cache
+    sizes = jnp.where(is_local_layers(cfg), local_len, s_cache)
+    del sizes  # per-layer ragged isn't expressible in one stacked array:
+    if cfg.layer_pattern == "local_global":
+        lh = l // 2
+        return {
+            "k_local": jnp.zeros((lh, batch, w, kv, dh), dt),
+            "v_local": jnp.zeros((lh, batch, w, kv, dh), dt),
+            "k_global": jnp.zeros((l - lh, batch, s_cache, kv, dh), dt),
+            "v_global": jnp.zeros((l - lh, batch, s_cache, kv, dh), dt),
+        }
+    return {"k": jnp.zeros((l, batch, s_cache, kv, dh), dt),
+            "v": jnp.zeros((l, batch, s_cache, kv, dh), dt)}
+
+
+def _project_qkv(cfg, a, x, pos_arr):
+    dt = x.dtype
+    b, s, _ = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    hn = rmsnorm(x, a["ln1"], cfg.norm_eps)
+    q = jnp.einsum("bsd,de->bse", hn, a["wq"].astype(dt))
+    k = jnp.einsum("bsd,de->bse", hn, a["wk"].astype(dt))
+    v = jnp.einsum("bsd,de->bse", hn, a["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q, k, v = q + a["bq"].astype(dt), k + a["bk"].astype(dt), \
+            v + a["bv"].astype(dt)
+    q = apply_rope(q.reshape(b, s, h, dh), pos_arr, cfg.rope_theta)
+    k = apply_rope(k.reshape(b, s, kv, dh), pos_arr, cfg.rope_theta)
+    return q, k, v.reshape(b, s, kv, dh)
+
+
+def _layer_decode(cfg, x, lp, pos, k_cache, v_cache, *, ring: bool):
+    """One decode layer: write token pos into cache, attend, FFN."""
+    dt = x.dtype
+    b = x.shape[0]
+    a, m = lp["attn"], lp["mlp"]
+    s_cache = k_cache.shape[1]
+    slot = pos % s_cache if ring else pos
+    q, k, v = _project_qkv(cfg, a, x, jnp.full((1, 1), pos, jnp.int32))
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(dt),
+                                           (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(dt),
+                                           (0, slot, 0, 0))
+    o = decode_attention(q, k_cache, v_cache, pos,
+                         window=cfg.window if ring else None,
+                         softcap=cfg.attn_softcap, ring=ring)
+    o = jnp.einsum("bse,ed->bsd", o.reshape(b, 1, -1), a["wo"].astype(dt))
+    if cfg.post_norm:
+        o = rmsnorm(o, a["ln1_post"], cfg.norm_eps)
+    x = x + o
+    hn2 = rmsnorm(x, m["ln2"], cfg.norm_eps)
+    if cfg.moe is None:
+        up = jnp.einsum("bsd,df->bsf", hn2, m["w1"].astype(dt))
+        gate = jnp.einsum("bsd,df->bsf", hn2, m["w3"].astype(dt))
+        act = _act(cfg.act)
+        ff = (act(up.astype(jnp.float32)) * gate.astype(jnp.float32)).astype(dt)
+        ff = jnp.einsum("bsf,fd->bsd", ff, m["w2"].astype(dt))
+    else:
+        mp = {k_: v_ for k_, v_ in m.items() if k_ not in ("ln2", "ln2_post")}
+        mp = jax.tree.map(lambda t: t.astype(dt) if t.dtype != jnp.float32
+                          else t, mp)
+        ff, _ = moe_ffn(mp, hn2.reshape(b, -1), cfg.moe, _act(cfg.act))
+        ff = ff.reshape(b, 1, -1)
+    if cfg.post_norm:
+        ff = rmsnorm(ff, m["ln2_post"], cfg.norm_eps)
+    return x + ff, k_cache, v_cache
+
+
+def decode_step(params: dict, cfg: TransformerConfig, cache: dict,
+                token: jax.Array, pos: jax.Array) -> tuple[jax.Array, dict]:
+    """token (B,) int32, pos () int32 -> (logits (B, V), cache')."""
+    dt = jnp.dtype(cfg.dtype)
+    b = token.shape[0]
+    x = params["embed"].astype(dt)[token][:, None, :] * jnp.asarray(
+        cfg.d_model ** 0.5 if cfg.post_norm else 1.0, dt)
+
+    if cfg.layer_pattern == "local_global":
+        lp_pairs = jax.tree.map(
+            lambda t: t.reshape((t.shape[0] // 2, 2) + t.shape[1:]),
+            params["layers"])
+
+        def body(x, xs):
+            lp, kl, vl, kg, vg = xs
+            lp_loc = jax.tree.map(lambda t: t[0], lp)
+            lp_glb = jax.tree.map(lambda t: t[1], lp)
+            x, kl, vl = _layer_decode(cfg, x, lp_loc, pos, kl, vl, ring=True)
+            x, kg, vg = _layer_decode(cfg, x, lp_glb, pos, kg, vg, ring=False)
+            return x, (kl, vl, kg, vg)
+
+        x, (kl, vl, kg, vg) = jax.lax.scan(
+            body, x, (lp_pairs, cache["k_local"], cache["v_local"],
+                      cache["k_global"], cache["v_global"]))
+        cache = {"k_local": kl, "v_local": vl, "k_global": kg, "v_global": vg}
+    else:
+        def body(x, xs):
+            lp, kc, vc = xs
+            x, kc, vc = _layer_decode(cfg, x, lp, pos, kc, vc, ring=False)
+            return x, (kc, vc)
+
+        x, (kc, vc) = jax.lax.scan(body, x,
+                                   (params["layers"], cache["k"], cache["v"]))
+        cache = {"k": kc, "v": vc}
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(dt))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(dt))
+    if cfg.final_softcap is not None:
+        logits = (cfg.final_softcap
+                  * jnp.tanh(logits.astype(jnp.float32) / cfg.final_softcap)
+                  ).astype(dt)
+    return logits[:, 0], cache
+
+
+def prefill(params: dict, cfg: TransformerConfig, tokens: jax.Array,
+            s_cache: int, *, constrain: Constrain = _identity_constrain
+            ) -> tuple[jax.Array, dict]:
+    """Run the prompt, build the exact decode cache from the forward scan's
+    per-layer K/V outputs.  Returns (last_logits, cache); decode_step(pos=s)
+    continues bit-exactly from here (tested in test_models_lm.py)."""
+    dt = jnp.dtype(cfg.dtype)
+    b, s = tokens.shape
+    logits, _, (ks, vs) = forward(params, cfg, tokens, constrain=constrain,
+                                  with_kv=True)  # (L, B, S, KV, dh)
+    cache = init_cache(cfg, b, s_cache)
+    if cfg.layer_pattern == "local_global":
+        w = cache["k_local"].shape[2]
+        tail = min(s, w)
+        slots = (jnp.arange(s - tail, s, dtype=jnp.int32) % w)
+        cache["k_local"] = cache["k_local"].at[:, :, slots].set(
+            ks[0::2, :, s - tail:].astype(dt))
+        cache["v_local"] = cache["v_local"].at[:, :, slots].set(
+            vs[0::2, :, s - tail:].astype(dt))
+        cache["k_global"] = cache["k_global"].at[:, :, :s].set(
+            ks[1::2].astype(dt))
+        cache["v_global"] = cache["v_global"].at[:, :, :s].set(
+            vs[1::2].astype(dt))
+    else:
+        cache["k"] = cache["k"].at[:, :, :s].set(ks.astype(dt))
+        cache["v"] = cache["v"].at[:, :, :s].set(vs.astype(dt))
+    return logits[:, -1], cache

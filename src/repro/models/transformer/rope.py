@@ -1,0 +1,21 @@
+"""Rotary position embeddings (RoPE)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(d_head: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32)
+                            / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (..., S, H, dh); positions (..., S) int32."""
+    freqs = rope_freqs(x.shape[-1], theta)                   # (dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs    # (..., S, dh/2)
+    cos = jnp.cos(ang)[..., None, :]                          # (..., S, 1, dh/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

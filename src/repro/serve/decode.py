@@ -1,0 +1,37 @@
+"""Batched autoregressive serving on top of the transformer decode path."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TransformerConfig
+from repro.models.transformer import model as M
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def serve_step(params, cfg: TransformerConfig, cache, token, pos):
+    """The unit the dry-run lowers for decode shapes: one token, full cache."""
+    return M.decode_step(params, cfg, cache, token, pos)
+
+
+def generate(params, cfg: TransformerConfig, prompts: jax.Array,
+             n_steps: int, *, s_cache: int | None = None,
+             greedy: bool = True, rng=None):
+    """prompts (B, S) -> (B, n_steps) generated ids (greedy or sampled)."""
+    b, s = prompts.shape
+    s_cache = s_cache or (s + n_steps)
+    last_logits, cache = M.prefill(params, cfg, prompts, s_cache)
+    outs = []
+    tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+    for i in range(n_steps):
+        outs.append(tok)
+        logits, cache = serve_step(params, cfg, cache, tok,
+                                   jnp.int32(s + i))
+        if greedy:
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            rng, sub = jax.random.split(rng)
+            tok = jax.random.categorical(sub, logits).astype(jnp.int32)
+    return jnp.stack(outs, axis=1)

@@ -1,0 +1,62 @@
+"""Batched reachability serving on a live DBL index.
+
+The serving analogue of the paper's query workload: interleaved batches of
+queries and edge insertions against one index, the fast path answered by
+the dbl_query Pallas kernel, fallbacks by batched pruned BFS.  This is the
+paper's technique as a *service* (examples/dynamic_reachability.py drives
+it end to end)."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.dbl import DBLIndex
+
+
+@dataclass
+class ServeStats:
+    queries: int = 0
+    label_answered: int = 0
+    bfs_answered: int = 0
+    inserts: int = 0
+    query_s: float = 0.0
+    insert_s: float = 0.0
+
+    def as_dict(self):
+        rho = self.label_answered / max(self.queries, 1)
+        return {"queries": self.queries, "rho": rho,
+                "inserts": self.inserts, "query_s": self.query_s,
+                "insert_s": self.insert_s}
+
+
+class ReachabilityServer:
+    def __init__(self, index: DBLIndex, *, bfs_chunk: int = 64,
+                 max_iters: int = 256):
+        self.index = index
+        self.bfs_chunk = bfs_chunk
+        self.max_iters = max_iters
+        self.stats = ServeStats()
+
+    def query(self, u, v) -> np.ndarray:
+        t = time.perf_counter()
+        ans, info = self.index.query(np.asarray(u, np.int32),
+                                     np.asarray(v, np.int32),
+                                     bfs_chunk=self.bfs_chunk,
+                                     max_iters=self.max_iters,
+                                     return_stats=True)
+        self.stats.query_s += time.perf_counter() - t
+        self.stats.queries += len(ans)
+        self.stats.bfs_answered += info["n_bfs"]
+        self.stats.label_answered += len(ans) - info["n_bfs"]
+        return ans
+
+    def insert(self, src, dst):
+        t = time.perf_counter()
+        self.index = self.index.insert_edges(np.asarray(src, np.int32),
+                                             np.asarray(dst, np.int32),
+                                             max_iters=self.max_iters)
+        self.index.packed.dl_in.block_until_ready()
+        self.stats.insert_s += time.perf_counter() - t
+        self.stats.inserts += len(np.asarray(src))

@@ -1,0 +1,92 @@
+"""Gradient compression for cross-replica reduction.
+
+Three codecs (each with tests against exact reference semantics):
+- bf16:   cast-before-reduce (2x traffic cut, standard at scale);
+- int8:   per-tensor max-scaled symmetric quantization;
+- topk:   magnitude top-k sparsification **with error feedback** (the
+          residual is carried to the next step, preserving convergence).
+
+``compressed_psum`` is the shard_map building block used when the data-axis
+all-reduce is written manually; under plain pjit the bf16 codec is applied
+as cast-grads-then-reduce via the train loop's ``grad_transform`` hook.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def bf16_compress(g):
+    return jax.tree.map(lambda x: x.astype(jnp.bfloat16), g)
+
+
+def bf16_decompress(g):
+    return jax.tree.map(lambda x: x.astype(jnp.float32), g)
+
+
+def int8_encode(x: jax.Array):
+    scale = jnp.maximum(jnp.abs(x).max(), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decode(q: jax.Array, scale: jax.Array):
+    return q.astype(jnp.float32) * scale
+
+
+def topk_sparsify(x: jax.Array, frac: float):
+    """Keep the top ``frac`` fraction by magnitude; returns (sparse, residual)."""
+    flat = x.reshape(-1)
+    k = max(1, int(flat.size * frac))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    mask = jnp.abs(flat) >= thresh
+    kept = jnp.where(mask, flat, 0.0).reshape(x.shape)
+    return kept, x - kept
+
+
+def topk_with_error_feedback(grads, residuals, frac: float):
+    """g' = topk(g + residual); residual' = (g + residual) - g'."""
+    def one(g, r):
+        kept, res = topk_sparsify(g.astype(jnp.float32) + r, frac)
+        return kept, res
+    out = jax.tree.map(one, grads, residuals)
+    is_t = lambda t: isinstance(t, tuple)  # noqa: E731
+    return (jax.tree.map(lambda t: t[0], out, is_leaf=is_t),
+            jax.tree.map(lambda t: t[1], out, is_leaf=is_t))
+
+
+def compressed_psum(g: jax.Array, axis_name: str, codec: str = "bf16"):
+    """shard_map building block: compress -> psum -> decompress."""
+    if codec == "bf16":
+        return jax.lax.psum(g.astype(jnp.bfloat16), axis_name
+                            ).astype(jnp.float32)
+    if codec == "int8":
+        q, scale = int8_encode(g)
+        # int8 summation must widen; scale is reduced with max for safety
+        s = jax.lax.pmax(scale, axis_name)
+        q = jnp.clip(jnp.round(g / s), -127, 127).astype(jnp.int8)
+        tot = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        return tot.astype(jnp.float32) * s
+    if codec == "none":
+        return jax.lax.psum(g, axis_name)
+    raise ValueError(codec)
+
+
+def make_grad_transform(codec: str | None) -> Callable:
+    """Pjit-path hook: applied to the (already summed) gradient pytree,
+    simulating the precision of a compressed reduction."""
+    if codec in (None, "none"):
+        return lambda g: g
+    if codec == "bf16":
+        return lambda g: bf16_decompress(bf16_compress(g))
+    if codec == "int8":
+        def f(g):
+            def one(x):
+                q, s = int8_encode(x.astype(jnp.float32))
+                return int8_decode(q, s)
+            return jax.tree.map(one, g)
+        return f
+    raise ValueError(codec)

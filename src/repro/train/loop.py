@@ -1,0 +1,127 @@
+"""Training loop substrate: TrainState, jitted step factory with gradient
+accumulation (scan over microbatches, fp32 accumulators, single optimizer
+application — the "delayed psum" pattern: under pjit the cross-replica
+reduction materializes once per step, not once per microbatch)."""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .compress import make_grad_transform
+from .optim import OPTIMIZERS
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jax.Array
+    rng: jax.Array
+
+
+def init_state(rng, params, optimizer: str = "adamw") -> TrainState:
+    opt_init, _ = OPTIMIZERS[optimizer]
+    return TrainState(params, opt_init(params), jnp.int32(0), rng)
+
+
+def make_train_step(loss_fn: Callable, *, optimizer: str = "adamw",
+                    lr_schedule: Callable, accum: int = 1,
+                    grad_codec: str | None = None,
+                    donate: bool = True, jit: bool = True,
+                    state_shardings=None) -> Callable:
+    """loss_fn(params, batch, rng) -> (loss, metrics).
+
+    With accum > 1, ``batch`` leaves must have a leading microbatch axis of
+    size ``accum``; gradients are accumulated in fp32 inside a scan.
+
+    ``state_shardings`` (a TrainState-shaped pytree of NamedShardings) pins
+    gradient and updated-state layouts — without it XLA may replicate
+    expert/embedding gradients (observed: 33 GiB/device for arctic-480b).
+    """
+    _, opt_update = OPTIMIZERS[optimizer]
+    gt = make_grad_transform(grad_codec)
+
+    def _constrain_tree(tree, shardings):
+        if shardings is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree,
+                            shardings)
+
+    def step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        rng = jax.random.fold_in(state.rng, state.step)
+
+        def one(p, b, r):
+            # constraining params at ENTRY pins the transposed constraint on
+            # the backward grad accumulator (a post-hoc constraint on grads
+            # does not reach inside the bwd scan carry — observed 33 GiB
+            # replicated expert grads without this)
+            def wrapped(p_, b_, r_):
+                p_ = _constrain_tree(p_, state_shardings.params
+                                     if state_shardings is not None else None)
+                return loss_fn(p_, b_, r_)
+            (loss, metrics), grads = jax.value_and_grad(
+                wrapped, has_aux=True)(p, b, r)
+            return loss, metrics, grads
+
+        if accum == 1:
+            loss, metrics, grads = one(state.params, batch, rng)
+        else:
+            def body(carry, mb):
+                gacc, lacc = carry
+                loss, _, grads = one(state.params, mb,
+                                     jax.random.fold_in(rng, 1))
+                gacc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / accum,
+                    gacc, grads)
+                return (gacc, lacc + loss / accum), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              state.params)
+            (grads, loss), _ = jax.lax.scan(body, (g0, 0.0), batch)
+            metrics = {"loss": loss}
+
+        grads = gt(grads)
+        if state_shardings is not None:
+            grads = _constrain_tree(grads, state_shardings.params)
+        lr = lr_schedule(state.step)
+        params, opt_state = opt_update(grads, state.opt_state, state.params,
+                                       lr=lr)
+        if state_shardings is not None:
+            params = _constrain_tree(params, state_shardings.params)
+            opt_state = _constrain_tree(opt_state,
+                                        state_shardings.opt_state)
+        metrics = dict(metrics)
+        metrics["lr"] = lr
+        # NOTE: jnp.sum(g*g), NOT jnp.vdot — vdot's flatten-reshape forces an
+        # all-gather of every sharded gradient (observed 33 GiB/device)
+        metrics["grad_norm"] = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        return TrainState(params, opt_state, state.step + 1, state.rng), \
+            metrics
+
+    if not jit:
+        return step
+    return jax.jit(step, donate_argnums=(0,) if donate else ())
+
+
+def run(state: TrainState, step_fn, data_iter, *, n_steps: int,
+        hooks: list | None = None, log_every: int = 10) -> TrainState:
+    """Host-side loop: pull batches, run steps, fire hooks (checkpoint,
+    metrics, failure injection in tests)."""
+    hooks = hooks or []
+    t0 = time.perf_counter()
+    for _ in range(n_steps):
+        batch = next(data_iter)
+        state, metrics = step_fn(state, batch)
+        step = int(state.step)
+        if step % log_every == 0:
+            dt = time.perf_counter() - t0
+            print(f"step {step} loss {float(metrics['loss']):.4f} "
+                  f"lr {float(metrics['lr']):.2e} ({dt:.1f}s)", flush=True)
+        for hook in hooks:
+            hook(state, metrics)
+    return state

@@ -1,0 +1,120 @@
+"""Optimizers (no optax dependency): AdamW and Adafactor + LR schedules.
+
+Adafactor (factored second moments) is the default for the >=27B configs:
+it removes the 2x fp32 Adam state that would not fit v5e HBM at arctic-480b
+scale (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------------- AdamW
+class AdamWState(NamedTuple):
+    m: dict
+    v: dict
+    step: jax.Array
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return AdamWState(zeros, jax.tree.map(jnp.copy, zeros), jnp.int32(0))
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.1):
+    step = state.step + 1
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        u = u + weight_decay * p.astype(jnp.float32)
+        return (p - lr * u).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, grads, state.m, state.v, params)
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, AdamWState(new_m, new_v, step)
+
+
+# --------------------------------------------------------------- Adafactor
+class AdafactorState(NamedTuple):
+    vr: dict   # row second moments (or full v for <2D leaves)
+    vc: dict   # col second moments (zeros for <2D leaves)
+    step: jax.Array
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(params) -> AdafactorState:
+    def rows(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32)
+        return jnp.zeros_like(p, jnp.float32)
+
+    def cols(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        return jnp.zeros((), jnp.float32)
+
+    return AdafactorState(jax.tree.map(rows, params),
+                          jax.tree.map(cols, params), jnp.int32(0))
+
+
+def adafactor_update(grads, state: AdafactorState, params, *, lr,
+                     decay=0.99, eps=1e-30, clip=1.0, weight_decay=0.0):
+    step = state.step + 1
+
+    def upd(g, vr, vc, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if _factored(p):
+            vr = decay * vr + (1 - decay) * g2.mean(axis=-1)
+            vc = decay * vc + (1 - decay) * g2.mean(axis=-2)
+            denom = (vr / jnp.maximum(vr.mean(axis=-1, keepdims=True),
+                                      eps))[..., None] * vc[..., None, :]
+            u = g * jax.lax.rsqrt(jnp.maximum(denom, eps))
+        else:
+            vr = decay * vr + (1 - decay) * g2
+            u = g * jax.lax.rsqrt(jnp.maximum(vr, eps))
+        # update clipping (RMS <= clip)
+        rms = jnp.sqrt(jnp.mean(u * u) + eps)
+        u = u / jnp.maximum(1.0, rms / clip)
+        if weight_decay:
+            u = u + weight_decay * p.astype(jnp.float32)
+        return (p - lr * u).astype(p.dtype), vr, vc
+
+    out = jax.tree.map(upd, grads, state.vr, state.vc, params)
+    is_t = lambda t: isinstance(t, tuple)  # noqa: E731
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=is_t)
+    new_vr = jax.tree.map(lambda t: t[1], out, is_leaf=is_t)
+    new_vc = jax.tree.map(lambda t: t[2], out, is_leaf=is_t)
+    return new_p, AdafactorState(new_vr, new_vc, step)
+
+
+# -------------------------------------------------------------- schedules
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+OPTIMIZERS = {
+    "adamw": (adamw_init, adamw_update),
+    "adafactor": (adafactor_init, adafactor_update),
+}

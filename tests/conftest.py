@@ -1,0 +1,31 @@
+import numpy as np
+import pytest
+
+
+def reach_oracle(n, src, dst):
+    """Dense boolean transitive closure (with self-reachability = True),
+    the ground truth for q(u, v) on small graphs."""
+    A = np.zeros((n, n), dtype=bool)
+    A[src, dst] = True
+    np.fill_diagonal(A, True)
+    # repeated squaring
+    R = A
+    for _ in range(int(np.ceil(np.log2(max(n, 2)))) + 1):
+        R2 = R | (R @ R)
+        if (R2 == R).all():
+            break
+        R = R2
+    return R
+
+
+@pytest.fixture
+def oracle():
+    return reach_oracle
+
+
+def random_graph(rng, n_max=24, m_max=80):
+    n = int(rng.integers(2, n_max))
+    m = int(rng.integers(1, m_max))
+    src = rng.integers(0, n, size=m).astype(np.int32)
+    dst = rng.integers(0, n, size=m).astype(np.int32)
+    return n, src, dst

@@ -1,0 +1,81 @@
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import make_graph
+from repro.baselines import bbfs
+from repro.baselines.dag_maintain import scc_condense_numpy, scc_fwbw_round, dag_stats
+from repro.baselines.ip_lite import IPIndex
+from tests.conftest import reach_oracle, random_graph
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_bbfs_exact(seed):
+    rng = np.random.default_rng(seed)
+    n, src, dst = random_graph(rng)
+    R = reach_oracle(n, src, dst)
+    g = make_graph(src, dst, n)
+    u = rng.integers(0, n, 50).astype(np.int32)
+    v = rng.integers(0, n, 50).astype(np.int32)
+    ans = bbfs.query(g, u, v, n_cap=n, chunk=16, max_iters=2 * n + 2)
+    np.testing.assert_array_equal(ans, R[u, v])
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_ip_lite_exact_and_incremental(seed):
+    rng = np.random.default_rng(seed)
+    n, src, dst = random_graph(rng, n_max=16, m_max=40)
+    g = make_graph(src, dst, n, m_cap=len(src) + 2)
+    idx = IPIndex.build(g, n_cap=n, k=4, max_iters=n + 2)
+    R = reach_oracle(n, src, dst)
+    u, v = np.meshgrid(np.arange(n), np.arange(n), indexing="ij")
+    u, v = u.ravel().astype(np.int32), v.ravel().astype(np.int32)
+    ans = idx.query(u, v, chunk=16, max_iters=n + 2)
+    np.testing.assert_array_equal(ans.reshape(n, n), R)
+    # incremental
+    ns = rng.integers(0, n, 2).astype(np.int32)
+    nd = rng.integers(0, n, 2).astype(np.int32)
+    idx2 = idx.insert_edges(ns, nd, max_iters=n + 2)
+    R2 = reach_oracle(n, np.concatenate([src, ns]), np.concatenate([dst, nd]))
+    ans2 = idx2.query(u, v, chunk=16, max_iters=n + 2)
+    np.testing.assert_array_equal(ans2.reshape(n, n), R2)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_scc_kosaraju_matches_networkx(seed):
+    import networkx as nx
+    rng = np.random.default_rng(seed)
+    n, src, dst = random_graph(rng)
+    comp, ds, dd = scc_condense_numpy(n, src, dst)
+    G = nx.DiGraph()
+    G.add_nodes_from(range(n))
+    G.add_edges_from(zip(src.tolist(), dst.tolist()))
+    sccs = list(nx.strongly_connected_components(G))
+    assert len(sccs) == comp.max() + 1
+    for scc in sccs:
+        scc = list(scc)
+        assert (comp[scc] == comp[scc[0]]).all()
+    # condensation must be a DAG
+    D = nx.DiGraph()
+    D.add_edges_from(zip(ds.tolist(), dd.tolist()))
+    assert nx.is_directed_acyclic_graph(D)
+
+
+def test_fwbw_round_finds_pivot_scc():
+    # cycle 0->1->2->0 plus tail 2->3
+    src = np.asarray([0, 1, 2, 2], np.int32)
+    dst = np.asarray([1, 2, 0, 3], np.int32)
+    g = make_graph(src, dst, 4)
+    unclassified = jnp.ones(4, bool)
+    scc, _, _ = scc_fwbw_round(g, unclassified, n_cap=4, max_iters=8)
+    np.testing.assert_array_equal(np.asarray(scc), [True, True, True, False])
+
+
+def test_dag_stats():
+    src = np.asarray([0, 1, 2, 2], np.int32)
+    dst = np.asarray([1, 2, 0, 3], np.int32)
+    s = dag_stats(4, src, dst)
+    assert s == {"dag_v": 2, "dag_e": 1}

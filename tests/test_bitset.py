@@ -1,0 +1,42 @@
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitset
+
+
+@given(st.integers(1, 200), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_pack_unpack_roundtrip(k, seed):
+    rng = np.random.default_rng(seed)
+    bits = rng.random((7, k)) < 0.4
+    packed = bitset.pack(jnp.asarray(bits))
+    assert packed.dtype == jnp.uint32
+    assert packed.shape == (7, (k + 31) // 32)
+    back = np.asarray(bitset.unpack(packed, k))
+    np.testing.assert_array_equal(back, bits)
+
+
+@given(st.integers(1, 130), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_set_ops_match_python_sets(k, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.random((16, k)) < 0.3
+    b = rng.random((16, k)) < 0.3
+    pa, pb = bitset.pack(jnp.asarray(a)), bitset.pack(jnp.asarray(b))
+    np.testing.assert_array_equal(
+        np.asarray(bitset.intersect_any(pa, pb)), (a & b).any(-1))
+    np.testing.assert_array_equal(
+        np.asarray(bitset.subset(pa, pb)), (~a | b).all(-1))
+    np.testing.assert_array_equal(
+        np.asarray(bitset.popcount(pa)), a.sum(-1))
+
+
+def test_bit_row():
+    k = 70
+    idx = jnp.asarray([0, 31, 32, 69])
+    rows = bitset.bit_row(k, idx)
+    bits = np.asarray(bitset.unpack(rows, k))
+    expect = np.zeros((4, k), bool)
+    expect[np.arange(4), np.asarray(idx)] = True
+    np.testing.assert_array_equal(bits, expect)

@@ -1,0 +1,151 @@
+"""System behaviour tests for the DBL index against a transitive-closure oracle."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import DBLIndex, make_graph
+from repro.core import bitset
+from tests.conftest import reach_oracle, random_graph
+
+
+def build_idx(n, src, dst, *, k=8, kp=8, m_cap=None, leaf_r=0):
+    g = make_graph(src, dst, n, m_cap=m_cap or len(src))
+    return DBLIndex.build(g, n_cap=n, k=min(k, n), k_prime=kp,
+                          leaf_r=leaf_r, max_iters=n + 2)
+
+
+def all_pairs(n):
+    u, v = np.meshgrid(np.arange(n), np.arange(n), indexing="ij")
+    return u.ravel().astype(np.int32), v.ravel().astype(np.int32)
+
+
+# ---------------------------------------------------------------- soundness
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_label_verdicts_sound(seed):
+    rng = np.random.default_rng(seed)
+    n, src, dst = random_graph(rng)
+    R = reach_oracle(n, src, dst)
+    idx = build_idx(n, src, dst)
+    u, v = all_pairs(n)
+    verd = np.asarray(idx.label_verdicts(u, v)).reshape(n, n)
+    # +1 must imply reachable, 0 must imply unreachable, -1 is always allowed
+    assert not (verd == 1)[~R].any(), "DL produced a false positive"
+    assert not (verd == 0)[R].any(), "BL/Thm rules produced a false negative"
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_full_query_exact(seed):
+    rng = np.random.default_rng(seed)
+    n, src, dst = random_graph(rng)
+    R = reach_oracle(n, src, dst)
+    idx = build_idx(n, src, dst)
+    u, v = all_pairs(n)
+    ans = idx.query(u, v, bfs_chunk=16, max_iters=n + 2).reshape(n, n)
+    np.testing.assert_array_equal(ans, R)
+
+
+# ------------------------------------------------------------------ updates
+@given(st.integers(0, 2**31 - 1), st.integers(1, 6))
+@settings(max_examples=25, deadline=None)
+def test_incremental_equals_oracle(seed, batches):
+    """Insert edges in batches; after each batch queries must stay exact.
+    This covers SCC merges (no DAG maintenance in DBL)."""
+    rng = np.random.default_rng(seed)
+    n, src, dst = random_graph(rng, n_max=16, m_max=40)
+    b = 3
+    extra = batches * b
+    idx = build_idx(n, src, dst, m_cap=len(src) + extra)
+    cur_src, cur_dst = list(src), list(dst)
+    for _ in range(batches):
+        ns = rng.integers(0, n, size=b).astype(np.int32)
+        nd = rng.integers(0, n, size=b).astype(np.int32)
+        idx = idx.insert_edges(ns, nd, max_iters=n + 2)
+        cur_src += ns.tolist()
+        cur_dst += nd.tolist()
+        R = reach_oracle(n, np.asarray(cur_src), np.asarray(cur_dst))
+        u, v = all_pairs(n)
+        ans = idx.query(u, v, bfs_chunk=16, max_iters=n + 2).reshape(n, n)
+        np.testing.assert_array_equal(ans, R)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_labels_monotone_under_insertion(seed):
+    rng = np.random.default_rng(seed)
+    n, src, dst = random_graph(rng, n_max=16, m_max=40)
+    idx = build_idx(n, src, dst, m_cap=len(src) + 2)
+    ns = rng.integers(0, n, size=2).astype(np.int32)
+    nd = rng.integers(0, n, size=2).astype(np.int32)
+    idx2 = idx.insert_edges(ns, nd, max_iters=n + 2)
+    for a, b in [(idx.dl_in, idx2.dl_in), (idx.dl_out, idx2.dl_out),
+                 (idx.bl_in, idx2.bl_in), (idx.bl_out, idx2.bl_out)]:
+        assert (np.asarray(b) >= np.asarray(a)).all(), "labels must only grow"
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_update_fixpoint_idempotent(seed):
+    """Re-inserting an existing edge must not change any label (Alg 3 line 1)."""
+    rng = np.random.default_rng(seed)
+    n, src, dst = random_graph(rng, n_max=16, m_max=40)
+    idx = build_idx(n, src, dst, m_cap=len(src) + 1)
+    e = int(rng.integers(0, len(src)))
+    idx2 = idx.insert_edges(src[e:e + 1], dst[e:e + 1], max_iters=n + 2)
+    for a, b in [(idx.dl_in, idx2.dl_in), (idx.dl_out, idx2.dl_out),
+                 (idx.bl_in, idx2.bl_in), (idx.bl_out, idx2.bl_out)]:
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------- figure-1 worked example
+def fig1_graph():
+    # Paper Fig 1(a); vertices are 1-indexed in the paper -> 0-indexed here.
+    edges = [(1, 2), (1, 4), (2, 5), (3, 7), (4, 8), (5, 9), (9, 6), (6, 5),
+             (9, 2), (8, 10), (5, 8), (7, 11), (9, 11), (2, 11), (8, 5)]
+    # The exact edge set of Fig 1(a) is not fully listed in the text; we use
+    # the running-example *properties* instead (landmarks {v5, v8}).
+    src = np.asarray([e[0] - 1 for e in edges], np.int32)
+    dst = np.asarray([e[1] - 1 for e in edges], np.int32)
+    return 11, src, dst
+
+
+def test_lemma1_example_semantics():
+    """DL positive certificates on the Fig-1-style graph: every claimed
+    intersection corresponds to an actual path through a landmark."""
+    n, src, dst = fig1_graph()
+    R = reach_oracle(n, src, dst)
+    idx = build_idx(n, src, dst, k=2)
+    u, v = all_pairs(n)
+    verd = np.asarray(idx.label_verdicts(u, v)).reshape(n, n)
+    assert not (verd == 1)[~R].any()
+    assert not (verd == 0)[R].any()
+
+
+def test_query_self_reachable():
+    n, src, dst = fig1_graph()
+    idx = build_idx(n, src, dst)
+    u = np.arange(n, dtype=np.int32)
+    assert idx.query(u, u).all()
+
+
+def test_density_and_size_reporting():
+    n, src, dst = fig1_graph()
+    idx = build_idx(n, src, dst)
+    d = idx.density()
+    assert set(d) == {"dl_in", "dl_out", "bl_in", "bl_out"}
+    assert idx.label_bytes() > 0
+
+
+# --------------------------------------------------------- stats / rho path
+def test_query_stats_rho():
+    rng = np.random.default_rng(0)
+    n, src, dst = random_graph(rng, n_max=20, m_max=60)
+    idx = build_idx(n, src, dst, k=8, kp=8)
+    u = rng.integers(0, n, 500).astype(np.int32)
+    v = rng.integers(0, n, 500).astype(np.int32)
+    ans, stats = idx.query(u, v, return_stats=True)
+    assert 0.0 <= stats["rho"] <= 1.0
+    R = reach_oracle(n, src, dst)
+    np.testing.assert_array_equal(ans, R[u, v])

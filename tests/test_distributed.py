@@ -1,0 +1,33 @@
+"""Multi-device equivalence tests (run in a subprocess so the main test
+process keeps its single CPU device; dryrun.py owns the 512-device config)."""
+import os
+import subprocess
+import sys
+import pathlib
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+@pytest.mark.slow
+def test_multidevice_equivalence():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{ROOT / 'src'}:{ROOT}"
+    out = subprocess.run(
+        [sys.executable, str(ROOT / "tests/distributed/run_multidevice.py")],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert "MULTIDEVICE_OK" in out.stdout
+
+
+@pytest.mark.slow
+def test_moe_sharded_equivalence():
+    """shard_map all-to-all MoE == pjit MoE (values AND grads, no-drop)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{ROOT / 'src'}:{ROOT}"
+    out = subprocess.run(
+        [sys.executable, str(ROOT / "tests/distributed/run_moe_sharded.py")],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert "MOE_SHARDED_OK" in out.stdout

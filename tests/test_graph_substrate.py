@@ -1,0 +1,90 @@
+import numpy as np
+import jax.numpy as jnp
+
+from repro.graphs import segment as S
+from repro.graphs.sampler import CSR, sample_neighbors
+from repro.graphs.batching import block_diagonal, graph_ids
+from repro.graphs.generators import power_law, table2_graph, molecules
+
+
+def test_segment_ops_against_numpy():
+    rng = np.random.default_rng(0)
+    n, m, d = 50, 400, 8
+    ei = np.stack([rng.integers(0, n, m), rng.integers(0, n, m)]).astype(np.int32)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    msg = np.asarray(S.gather_src(jnp.asarray(x), jnp.asarray(ei)))
+    np.testing.assert_allclose(msg, x[ei[0]], rtol=1e-6)
+    got = np.asarray(S.scatter_sum(jnp.asarray(msg), jnp.asarray(ei), n))
+    want = np.zeros((n, d), np.float32)
+    np.add.at(want, ei[1], msg)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    # mean
+    got_m = np.asarray(S.scatter_mean(jnp.asarray(msg), jnp.asarray(ei), n))
+    cnt = np.zeros(n)
+    np.add.at(cnt, ei[1], 1)
+    np.testing.assert_allclose(got_m, want / np.maximum(cnt, 1e-9)[:, None],
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_segment_softmax_rowsums():
+    rng = np.random.default_rng(1)
+    m, n = 300, 40
+    seg = rng.integers(0, n, m).astype(np.int32)
+    scores = rng.normal(size=m).astype(np.float32)
+    p = np.asarray(S.segment_softmax(jnp.asarray(scores), jnp.asarray(seg), n))
+    sums = np.zeros(n)
+    np.add.at(sums, seg, p)
+    present = np.unique(seg)
+    np.testing.assert_allclose(sums[present], 1.0, atol=1e-5)
+
+
+def test_embedding_bag_matches_manual():
+    rng = np.random.default_rng(2)
+    V, d, nnz, bags = 100, 16, 64, 10
+    table = rng.normal(size=(V, d)).astype(np.float32)
+    idx = rng.integers(0, V, nnz).astype(np.int32)
+    bag = np.sort(rng.integers(0, bags, nnz)).astype(np.int32)
+    got = np.asarray(S.embedding_bag(jnp.asarray(table), jnp.asarray(idx),
+                                     jnp.asarray(bag), bags))
+    want = np.zeros((bags, d), np.float32)
+    np.add.at(want, bag, table[idx])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_sampler_shapes_and_validity():
+    n, m = 200, 3000
+    src, dst = power_law(n, m, seed=0)
+    csr = CSR.from_edges(n, src, dst)
+    rng = np.random.default_rng(0)
+    batch = rng.choice(n, 16, replace=False)
+    sub = sample_neighbors(csr, batch, [5, 3], rng=rng)
+    assert sub.seed_count == 16
+    assert len(sub.blocks) == 2
+    assert sub.blocks[0].src.shape == (16 * 5,)
+    # every valid edge's endpoints must be in-range local ids
+    for blk in sub.blocks:
+        v = blk.edge_valid
+        assert (blk.src[v] < len(sub.nodes)).all()
+        assert (blk.dst[v] < len(sub.nodes)).all()
+    # sampled edges must exist in the graph
+    edge_set = set(zip(src.tolist(), dst.tolist()))
+    blk = sub.blocks[0]
+    for s_l, d_l, ok in zip(blk.src, blk.dst, blk.edge_valid):
+        if ok:
+            assert (int(sub.nodes[s_l]), int(sub.nodes[d_l])) in edge_set
+
+
+def test_block_diagonal_batching():
+    pos, species, edges = molecules(4, 8, 12, seed=0)
+    be = block_diagonal(edges, 8)
+    assert be.shape == (2, 4 * 12)
+    gid = graph_ids(4, 8)
+    assert gid.shape == (32,)
+    # all edges stay within their own block
+    assert (be[0] // 8 == be[1] // 8).all()
+
+
+def test_table2_presets():
+    n, src, dst = table2_graph("Email", seed=0, scale=0.1)
+    assert src.shape == dst.shape
+    assert src.max() < n and dst.max() < n

@@ -1,0 +1,83 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp ref."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import DBLIndex, make_graph
+from repro.core import query as Q
+from repro.kernels.dbl_query.dbl_query import dbl_query_verdicts
+from repro.kernels.dbl_query.ref import verdict_ref
+from repro.kernels.dbl_query.ops import query_verdicts
+from repro.kernels.bfs_prune.bfs_prune import bfs_admit_plane
+from repro.kernels.bfs_prune.ref import admit_ref
+from repro.kernels.bfs_prune.ops import admit_plane
+from tests.conftest import random_graph
+
+
+def _rand_words(rng, shape, density=0.25):
+    bits = rng.random(shape + (32,)) < density
+    return jnp.asarray(
+        (bits * (1 << np.arange(32, dtype=np.uint64))).sum(-1).astype(np.uint32))
+
+
+# ------------------------------------------------------------ dbl_query
+@pytest.mark.parametrize("wd,wb,q,q_block", [
+    (1, 1, 256, 128),
+    (2, 2, 512, 512),
+    (4, 8, 1024, 256),
+    (8, 2, 2048, 512),
+])
+def test_dbl_query_kernel_matches_ref(wd, wb, q, q_block):
+    rng = np.random.default_rng(wd * 1000 + wb * 100 + q)
+    dl = [_rand_words(rng, (wd, q)) for _ in range(4)]
+    bl = [_rand_words(rng, (wb, q)) for _ in range(4)]
+    same = jnp.asarray(rng.integers(0, 2, q).astype(np.int32))
+    got = dbl_query_verdicts(*dl, *bl, same, q_block=q_block, interpret=True)
+    want = verdict_ref(*dl, *bl, same.astype(bool))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_dbl_query_ops_matches_core_on_real_index():
+    """End-to-end: kernel wrapper == core.query.label_verdicts on a real graph."""
+    rng = np.random.default_rng(7)
+    n, src, dst = random_graph(rng, n_max=64, m_max=300)
+    g = make_graph(src, dst, n)
+    idx = DBLIndex.build(g, n_cap=n, k=min(8, n), k_prime=8, max_iters=n + 2)
+    u = jnp.asarray(rng.integers(0, n, 1000).astype(np.int32))
+    v = jnp.asarray(rng.integers(0, n, 1000).astype(np.int32))
+    got = query_verdicts(idx.packed, u, v, q_block=256, interpret=True)
+    want = Q.label_verdicts(idx.packed, u, v)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want, np.int32))
+
+
+# ------------------------------------------------------------ bfs_prune
+@pytest.mark.parametrize("wd,wb,n,q,nb,qb", [
+    (1, 1, 256, 128, 128, 128),
+    (2, 2, 1024, 128, 256, 64),
+    (4, 4, 512, 256, 512, 128),
+])
+def test_bfs_prune_kernel_matches_ref(wd, wb, n, q, nb, qb):
+    rng = np.random.default_rng(wd * 31 + n)
+    blin_all = _rand_words(rng, (wb, n))
+    blout_all = _rand_words(rng, (wb, n))
+    dlin_all = _rand_words(rng, (wd, n))
+    blin_v = _rand_words(rng, (wb, q))
+    blout_v = _rand_words(rng, (wb, q))
+    dlo_u = _rand_words(rng, (wd, q))
+    got = bfs_admit_plane(blin_all, blout_all, dlin_all, blin_v, blout_v,
+                          dlo_u, n_block=nb, q_block=qb, interpret=True)
+    want = admit_ref(blin_all, blout_all, dlin_all, blin_v, blout_v, dlo_u)
+    np.testing.assert_array_equal(np.asarray(got).astype(bool),
+                                  np.asarray(want))
+
+
+def test_bfs_prune_ops_matches_core_admit():
+    rng = np.random.default_rng(11)
+    n, src, dst = random_graph(rng, n_max=48, m_max=200)
+    g = make_graph(src, dst, n)
+    idx = DBLIndex.build(g, n_cap=n, k=min(8, n), k_prime=8, max_iters=n + 2)
+    u = jnp.asarray(rng.integers(0, n, 64).astype(np.int32))
+    v = jnp.asarray(rng.integers(0, n, 64).astype(np.int32))
+    got = admit_plane(idx.packed, u, v, n_block=64, q_block=64, interpret=True)
+    want = Q._admit_plane(idx.packed, u, v, n)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

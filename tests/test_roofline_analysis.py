@@ -1,0 +1,62 @@
+"""HLO analyzer unit tests: trip-count scaling, dot flops, collective bytes."""
+import os
+
+import numpy as np
+import pytest
+
+from benchmarks.hlo_analysis import analyze_hlo, _shape_info
+
+
+def test_shape_info():
+    assert _shape_info("f32[16,256]{1,0}") == (16 * 256 * 4, [16, 256])
+    assert _shape_info("bf16[8]") == (16, [8])
+    b, _ = _shape_info("(s32[], f32[4,4])")
+    assert b == 4 + 64
+
+
+def test_scan_trip_count_scaling():
+    """Dot inside a while body with known_trip_count=5 counts 5x."""
+    import subprocess
+    import sys
+    code = '''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, json, sys
+sys.path.insert(0, %r)
+from benchmarks.hlo_analysis import analyze_hlo
+def fn(ws, x):
+    def body(c, w):
+        return jnp.tanh(c @ w), None
+    y, _ = jax.lax.scan(body, x, ws)
+    return y
+ws = jax.ShapeDtypeStruct((5, 64, 64), jnp.float32)
+x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+comp = jax.jit(fn).lower(ws, x).compile()
+res = analyze_hlo(comp.as_text())
+expect = 2 * 8 * 64 * 64 * 5
+assert abs(res["dot_flops_per_device"] - expect) / expect < 0.05, res
+assert res["while_trip_counts"] and list(res["while_trip_counts"].values()) == [5]
+print("ANALYZER_OK")
+'''
+    import pathlib
+    root = str(pathlib.Path(__file__).resolve().parent.parent)
+    env = dict(os.environ, PYTHONPATH=f"{root}/src:{root}")
+    out = subprocess.run([sys.executable, "-c", code % root], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert "ANALYZER_OK" in out.stdout, out.stdout + out.stderr
+
+
+def test_collective_models():
+    hlo = """
+ENTRY %main (p: f32[16,256]) -> f32[16,256] {
+  %p = f32[16,256]{1,0} parameter(0)
+  %ag = f32[16,256]{1,0} all-gather(%p), replica_groups=[4,2]<=[8], dimensions={1}
+  %ar = f32[16,256]{1,0} all-reduce(%ag), replica_groups=[2,4]<=[8]
+  ROOT %cp = f32[16,256]{1,0} copy(%ar)
+}
+"""
+    res = analyze_hlo(hlo)
+    b = 16 * 256 * 4
+    assert res["collective_bytes_per_device"]["all-gather"] == b * 1 / 2
+    assert res["collective_bytes_per_device"]["all-reduce"] == 2 * b * 3 / 4
+

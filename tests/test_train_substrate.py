@@ -1,0 +1,143 @@
+"""Optimizer, grad-accum, compression, checkpoint/restart, elastic tests."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import tinyllama_11b
+from repro.models.transformer import model as M
+from repro.train import checkpoint as ckpt
+from repro.train import compress as C
+from repro.train.data import lm_batches
+from repro.train.loop import TrainState, init_state, make_train_step
+from repro.train.optim import (adafactor_init, adafactor_update,
+                               adamw_init, adamw_update, cosine_schedule)
+
+CFG = tinyllama_11b.SMOKE
+
+
+def quad_loss(params, batch, rng):
+    del rng
+    err = params["w"] - batch["target"]
+    loss = jnp.sum(err * err)
+    return loss, {"loss": loss}
+
+
+def test_adamw_and_adafactor_converge():
+    for init, update in [(adamw_init, adamw_update),
+                         (adafactor_init, adafactor_update)]:
+        params = {"w": jnp.ones((4, 8)) * 3.0}
+        state = init(params)
+        tgt = {"target": jnp.zeros((4, 8))}
+        for _ in range(200):
+            g = jax.grad(lambda p: quad_loss(p, tgt, None)[0])(params)
+            params, state = update(g, state, params, lr=5e-2)
+        assert float(jnp.abs(params["w"]).max()) < 0.3
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1e-3, warmup=10, total=100)
+    assert float(lr(0)) == 0.0
+    assert abs(float(lr(10)) - 1e-3) < 1e-9
+    assert float(lr(100)) < 1e-5
+
+
+def test_grad_accum_matches_large_batch():
+    """accum=4 over microbatches == one big batch (same grads, fp32)."""
+    params = M.init_params(jax.random.PRNGKey(0), CFG)
+    data = next(lm_batches(CFG, batch=8, seq=16, accum=4))
+    big = {k: v.reshape(-1, v.shape[-1]) for k, v in data.items()}
+
+    def loss_accum(p, b, r):
+        return M.loss_fn(p, CFG, b["tokens"], b["targets"])
+
+    step_a = make_train_step(loss_accum, optimizer="adamw",
+                             lr_schedule=lambda s: 1e-2, accum=4,
+                             donate=False)
+    step_b = make_train_step(loss_accum, optimizer="adamw",
+                             lr_schedule=lambda s: 1e-2, accum=1,
+                             donate=False)
+    sa = init_state(jax.random.PRNGKey(1), params)
+    sb = init_state(jax.random.PRNGKey(1), params)
+    sa2, ma = step_a(sa, data)
+    sb2, mb = step_b(sb, big)
+    pa = jax.tree.leaves(sa2.params)
+    pb = jax.tree.leaves(sb2.params)
+    for a, b in zip(pa, pb):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_compression_codecs():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32))
+    # int8 round trip error bounded by scale
+    q, s = C.int8_encode(x)
+    back = C.int8_decode(q, s)
+    assert float(jnp.abs(back - x).max()) <= float(s) * 0.51 + 1e-6
+    # topk keeps exactly the largest magnitudes; error feedback sums to x
+    kept, res = C.topk_sparsify(x, 0.1)
+    nz = int((np.asarray(kept) != 0).sum())
+    assert abs(nz - int(x.size * 0.1)) <= 1
+    np.testing.assert_allclose(np.asarray(kept + res), np.asarray(x),
+                               rtol=1e-6)
+    # error feedback carries the residual
+    grads = {"w": x}
+    residual = {"w": jnp.zeros_like(x)}
+    g1, r1 = C.topk_with_error_feedback(grads, residual, 0.1)
+    g2, r2 = C.topk_with_error_feedback(grads, r1, 0.1)
+    total = np.asarray(g1["w"] + g2["w"] + r2["w"])
+    np.testing.assert_allclose(total, 2 * np.asarray(x), rtol=1e-5)
+
+
+def test_checkpoint_restart_bitwise(tmp_path):
+    """Kill-and-restart: state restored from disk continues bit-identically."""
+    params = M.init_params(jax.random.PRNGKey(0), CFG)
+    step_fn = make_train_step(
+        lambda p, b, r: M.loss_fn(p, CFG, b["tokens"], b["targets"]),
+        optimizer="adamw", lr_schedule=cosine_schedule(1e-3, 2, 100),
+        donate=False)
+    state = init_state(jax.random.PRNGKey(7), params)
+    data = lm_batches(CFG, batch=4, seq=16, seed=3)
+    batches = [next(data) for _ in range(6)]
+
+    # run 1: 3 steps, checkpoint, 3 more steps
+    s = state
+    for b in batches[:3]:
+        s, _ = step_fn(s, b)
+    ckpt.save(s, str(tmp_path), int(s.step))
+    ref = s
+    for b in batches[3:]:
+        ref, _ = step_fn(ref, b)
+
+    # run 2 ("restarted process"): restore, replay the same last 3 batches
+    restored = ckpt.restore(str(tmp_path), s)
+    assert int(restored.step) == 3
+    s2 = restored
+    for b in batches[3:]:
+        s2, _ = step_fn(s2, b)
+    for a, b_ in zip(jax.tree.leaves(ref.params), jax.tree.leaves(s2.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+
+
+def test_checkpoint_atomic_and_gc(tmp_path):
+    state = {"w": jnp.arange(10, dtype=jnp.float32)}
+    for step in (1, 2, 3, 4, 5):
+        ckpt.save(state, str(tmp_path), step, keep=2)
+    kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step-"))
+    assert kept == ["step-000000004", "step-000000005"]
+    assert ckpt.latest_step(str(tmp_path)) == 5
+
+
+def test_deterministic_data_restart():
+    a = lm_batches(CFG, batch=4, seq=8, seed=5)
+    b = lm_batches(CFG, batch=4, seq=8, seed=5)
+    for _ in range(3):
+        next(b)
+    x3 = next(a), next(a), next(a), next(a)
+    y = next(b)
+    np.testing.assert_array_equal(np.asarray(x3[3]["tokens"]),
+                                  np.asarray(y["tokens"]))

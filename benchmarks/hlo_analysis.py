@@ -140,7 +140,10 @@ def analyze_hlo(text: str) -> dict:
         mul = multiplier(c)
         for o in ops:
             if o["op"] == "dot":
-                lhs_m = re.search(r"dot\(%?([\w.\-]+),", o["line"])
+                # operands may carry inline types: dot(f32[8,64]{1,0} %lhs, ..)
+                lhs_m = re.search(
+                    r"dot\((?:\w+\[[\d,]*\](?:\{[^}]*\})?\s+)?%?([\w.\-]+)\s*,",
+                    o["line"])
                 k = 1
                 cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}",
                                o["line"])

@@ -57,6 +57,11 @@ def main():
               f"(ρ={s['rho']:.3f}), {s['inserts']} edges inserted, "
               f"query {s['query_s']:.2f}s / insert {s['insert_s']:.2f}s "
               f"cumulative")
+    es = server.engine_stats()
+    print(f"engine: backend={es['backend']}, "
+          f"{es['dispatch_shapes']} compiled dispatch shapes, "
+          f"{es['bfs_dispatches']} BFS dispatches for "
+          f"{es['queries']} queries")
     print("all rounds verified against B-BFS — OK")
 
 

@@ -61,10 +61,20 @@ class DBLIndex(NamedTuple):
 
     # ---- queries (Alg 2) --------------------------------------------------
     def query(self, u, v, *, bfs_chunk: int = 64, max_iters: int = 256,
-              return_stats: bool = False):
-        return Q.query(self.graph, self.packed, u, v, n_cap=self.n_cap,
-                       bfs_chunk=bfs_chunk, max_iters=max_iters,
-                       return_stats=return_stats)
+              return_stats: bool = False, driver: str = "engine"):
+        """Batched reachability.  ``driver="engine"`` (default) runs the
+        device-resident QueryEngine (fused label phase + compacted BFS
+        chunks); ``driver="host"`` runs the original host-side loop, kept
+        as the reference implementation for differential testing."""
+        if driver == "host":
+            return Q.query(self.graph, self.packed, u, v, n_cap=self.n_cap,
+                           bfs_chunk=bfs_chunk, max_iters=max_iters,
+                           return_stats=return_stats)
+        if driver != "engine":
+            raise ValueError(f"unknown driver {driver!r}")
+        from repro.serve.engine import engine_for  # lazy: core <-> serve
+        eng = engine_for(bfs_chunk=bfs_chunk, max_iters=max_iters)
+        return eng.run(self, u, v, return_stats=return_stats)
 
     def label_verdicts(self, u, v):
         return Q.label_verdicts(self.packed, jnp.asarray(u, jnp.int32),

@@ -82,11 +82,17 @@ def _admit_plane(p: PackedLabels, u: jax.Array, v: jax.Array,
 
 @functools.partial(jax.jit, static_argnames=("n_cap", "max_iters"))
 def pruned_bfs(g: Graph, p: PackedLabels, u: jax.Array, v: jax.Array,
+               admit: jax.Array | None = None,
                *, n_cap: int, max_iters: int = 256) -> jax.Array:
-    """(Qc,) bool — resolve unknown queries by label-pruned BFS lanes."""
+    """(Qc,) bool — resolve unknown queries by label-pruned BFS lanes.
+
+    ``admit`` lets callers supply a precomputed (n_cap, Qc) admit plane
+    (e.g. from the bfs_prune Pallas kernel); default is the jnp plane.
+    """
     qc = u.shape[0]
     live = edge_mask(g)
-    admit = _admit_plane(p, u, v, n_cap)          # (n_cap, Qc)
+    if admit is None:
+        admit = _admit_plane(p, u, v, n_cap)      # (n_cap, Qc)
     ids = jnp.arange(n_cap, dtype=jnp.int32)
     frontier = ids[:, None] == u[None, :]          # (n_cap, Qc)
     visited = frontier
@@ -116,8 +122,13 @@ def pruned_bfs(g: Graph, p: PackedLabels, u: jax.Array, v: jax.Array,
 def query(g: Graph, p: PackedLabels, u, v, *, n_cap: int,
           bfs_chunk: int = 64, max_iters: int = 256,
           return_stats: bool = False):
-    """Full Alg 2 over a query batch. Host-side driver: label fast path in one
-    jit call, unknowns resolved in fixed-size BFS chunks (jit reuse)."""
+    """Full Alg 2 over a query batch — the HOST-SIDE reference driver.
+
+    Materializes verdicts on the host, slices unknowns with numpy, and
+    re-dispatches one BFS chunk at a time.  Kept as the differential-testing
+    oracle for ``repro.serve.engine.QueryEngine``, which runs the same
+    pipeline device-resident; production callers should prefer the engine.
+    """
     u = jnp.asarray(u, jnp.int32)
     v = jnp.asarray(v, jnp.int32)
     verdicts = np.asarray(label_verdicts(p, u, v))

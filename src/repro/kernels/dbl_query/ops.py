@@ -24,10 +24,11 @@ def _pad_to(x, mult, axis):
     return jnp.pad(x, pad)
 
 
-@functools.partial(jax.jit, static_argnames=("q_block", "interpret"))
-def query_verdicts(p: PackedLabels, u: jax.Array, v: jax.Array,
-                   *, q_block: int = 512, interpret: bool = True) -> jax.Array:
-    """(Q,) int32 verdicts; same contract as core.query.label_verdicts."""
+def verdicts_device(p: PackedLabels, u: jax.Array, v: jax.Array,
+                    *, q_block: int = 512, interpret: bool = True
+                    ) -> jax.Array:
+    """Traceable (un-jitted) body of ``query_verdicts`` so larger programs —
+    the QueryEngine's fused label phase — can inline it into one executable."""
     q = u.shape[0]
     streams = [p.dl_out[u], p.dl_in[v], p.dl_out[v], p.dl_in[u],
                p.bl_in[u], p.bl_in[v], p.bl_out[v], p.bl_out[u]]
@@ -41,3 +42,10 @@ def query_verdicts(p: PackedLabels, u: jax.Array, v: jax.Array,
                              blin_u, blin_v, blout_u, blout_v, same,
                              q_block=q_block, interpret=interpret)
     return out[:q]
+
+
+@functools.partial(jax.jit, static_argnames=("q_block", "interpret"))
+def query_verdicts(p: PackedLabels, u: jax.Array, v: jax.Array,
+                   *, q_block: int = 512, interpret: bool = True) -> jax.Array:
+    """(Q,) int32 verdicts; same contract as core.query.label_verdicts."""
+    return verdicts_device(p, u, v, q_block=q_block, interpret=interpret)

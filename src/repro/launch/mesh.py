@@ -5,12 +5,22 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh_compat(shape, axes, **kw):
+    """jax.make_mesh across jax versions: ``axis_types`` only exists from
+    jax ≥ 0.5 (and Auto is the default there anyway) — pass it when the
+    installed jax understands it, plain call otherwise."""
+    try:
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes), **kw)
+    except (AttributeError, TypeError):
+        return jax.make_mesh(shape, axes, **kw)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def mesh_axes(mesh) -> dict:

@@ -119,6 +119,22 @@ def lm_cache_shardings(mesh, cache_shapes, *, long_context: bool) -> Any:
     return jax.tree_util.tree_map_with_path(assign, cache_shapes)
 
 
+def reach_query_shardings(mesh) -> tuple:
+    """DBL QueryEngine multi-device fan-out: the (Q,) query batch is sharded
+    over every mesh axis (embarrassingly parallel verdicts), the label planes
+    are replicated so per-device gathers stay local.  Returns
+    ``(query_sharding, replicated_sharding)``."""
+    ax = mesh_axes(mesh)["all"]
+    return NamedSharding(mesh, P(ax)), NamedSharding(mesh, P())
+
+
+def reach_place_index(idx, mesh):
+    """device_put a DBLIndex for the engine's sharded query path: every leaf
+    replicated (the query batch, not the index, is the sharded axis)."""
+    _, repl = reach_query_shardings(mesh)
+    return jax.tree.map(lambda x: jax.device_put(x, repl), idx)
+
+
 def gnn_shardings(state_shapes: Any, mesh) -> Any:
     """GNN params are small: replicate everything (grads all-reduce)."""
     return jax.tree.map(lambda _: NamedSharding(mesh, P()), state_shapes)

@@ -1,18 +1,19 @@
 """Batched reachability serving on a live DBL index.
 
 The serving analogue of the paper's query workload: interleaved batches of
-queries and edge insertions against one index, the fast path answered by
-the dbl_query Pallas kernel, fallbacks by batched pruned BFS.  This is the
-paper's technique as a *service* (examples/dynamic_reachability.py drives
-it end to end)."""
+queries and edge insertions against one index.  All query traffic goes
+through the device-resident ``QueryEngine`` (fused label phase, compacted
+BFS chunks, persistent executables); insertions run the engine's donated
+Alg-3 path.  ``examples/dynamic_reachability.py`` drives it end to end."""
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 
 from repro.core.dbl import DBLIndex
+from repro.serve.engine import QueryEngine
 
 
 @dataclass
@@ -32,20 +33,37 @@ class ServeStats:
 
 
 class ReachabilityServer:
-    def __init__(self, index: DBLIndex, *, bfs_chunk: int = 64,
-                 max_iters: int = 256):
-        self.index = index
-        self.bfs_chunk = bfs_chunk
-        self.max_iters = max_iters
+    def __init__(self, index: DBLIndex | None, *, bfs_chunk: int = 256,
+                 max_iters: int = 256, backend: str = "auto",
+                 mesh=None, engine: QueryEngine | None = None):
+        if engine is not None:
+            # a supplied engine carries its own configuration; conflicting
+            # per-server knobs would be silently ignored, so reject them
+            if engine.index is not None and index is not None \
+                    and engine.index is not index:
+                raise ValueError(
+                    "both `index` and an engine with a bound index were "
+                    "given; pass one or the other")
+            self.engine = engine
+            if engine.index is None:
+                engine.index = index
+        else:
+            self.engine = QueryEngine(
+                index, bfs_chunk=bfs_chunk, max_iters=max_iters,
+                backend=backend, mesh=mesh)
+        if self.engine.index is None:
+            raise ValueError("server needs an index (directly or via engine)")
         self.stats = ServeStats()
+
+    @property
+    def index(self) -> DBLIndex:
+        return self.engine.index
 
     def query(self, u, v) -> np.ndarray:
         t = time.perf_counter()
-        ans, info = self.index.query(np.asarray(u, np.int32),
-                                     np.asarray(v, np.int32),
-                                     bfs_chunk=self.bfs_chunk,
-                                     max_iters=self.max_iters,
-                                     return_stats=True)
+        ans, info = self.engine.query(np.asarray(u, np.int32),
+                                      np.asarray(v, np.int32),
+                                      return_stats=True)
         self.stats.query_s += time.perf_counter() - t
         self.stats.queries += len(ans)
         self.stats.bfs_answered += info["n_bfs"]
@@ -54,9 +72,15 @@ class ReachabilityServer:
 
     def insert(self, src, dst):
         t = time.perf_counter()
-        self.index = self.index.insert_edges(np.asarray(src, np.int32),
-                                             np.asarray(dst, np.int32),
-                                             max_iters=self.max_iters)
-        self.index.packed.dl_in.block_until_ready()
+        idx = self.engine.insert(np.asarray(src, np.int32),
+                                 np.asarray(dst, np.int32))
+        idx.packed.dl_in.block_until_ready()
         self.stats.insert_s += time.perf_counter() - t
         self.stats.inserts += len(np.asarray(src))
+
+    def engine_stats(self) -> dict:
+        """Engine-level telemetry: dispatch shapes + batch/BFS counters."""
+        d = self.engine.stats.as_dict()
+        d["dispatch_shapes"] = self.engine.dispatch_shapes()
+        d["backend"] = self.engine.backend
+        return d

@@ -1,0 +1,100 @@
+"""Hypothesis compatibility layer for the test suite.
+
+Uses the real ``hypothesis`` package when it is installed (shrinking, example
+database, the works).  When it is absent — e.g. a hermetic container where
+``pip install`` is unavailable — falls back to a tiny, deterministic sampler
+with the same decorator surface the suite uses:
+
+    from tests._hyp import given, settings, st
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=40, deadline=None)
+    def test_...(seed): ...
+
+The fallback draws ``max_examples`` values per strategy from a PRNG seeded by
+the test's qualified name (CRC32 — stable across processes, unlike ``hash``),
+so failures reproduce run-to-run.  Only the strategies the suite actually
+uses are implemented; extend ``_FallbackStrategies`` as tests grow.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import zlib
+
+    import numpy as np
+
+    class _IntegersStrategy:
+        def __init__(self, min_value: int, max_value: int):
+            self.lo, self.hi = int(min_value), int(max_value)
+
+        def draw(self, rng: np.random.Generator) -> int:
+            return int(rng.integers(self.lo, self.hi, endpoint=True))
+
+    class _SampledFromStrategy:
+        def __init__(self, elements):
+            self.elements = list(elements)
+
+        def draw(self, rng: np.random.Generator):
+            return self.elements[int(rng.integers(0, len(self.elements)))]
+
+    class _FallbackStrategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _IntegersStrategy:
+            return _IntegersStrategy(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(elements) -> _SampledFromStrategy:
+            return _SampledFromStrategy(elements)
+
+        @staticmethod
+        def booleans() -> _SampledFromStrategy:
+            return _SampledFromStrategy([False, True])
+
+    st = _FallbackStrategies()
+
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    def settings(*, max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
+        """Records max_examples on the test function (deadline etc. ignored)."""
+        def deco(fn):
+            fn._fallback_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        """Runs the test ``max_examples`` times with freshly drawn arguments.
+
+        ``functools.wraps`` copies ``__dict__``, so reading the attribute off
+        the wrapper works whichever order @given/@settings are stacked in.
+        """
+        def deco(fn):
+            sig = inspect.signature(fn)
+            all_params = list(sig.parameters.values())
+            # strategies fill the test's TRAILING params; bind them by NAME
+            # so fixture arguments (passed by pytest as kwargs) can't
+            # collide with drawn positionals
+            drawn_names = [p.name for p in all_params[-len(strategies):]]
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_fallback_max_examples",
+                            _DEFAULT_MAX_EXAMPLES)
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = np.random.default_rng(seed)
+                for _ in range(n):
+                    drawn = {name: s.draw(rng)
+                             for name, s in zip(drawn_names, strategies)}
+                    fn(*args, **kwargs, **drawn)
+            # hide the drawn parameters from pytest's fixture resolution;
+            # leading params remain visible as fixtures
+            wrapper.__signature__ = sig.replace(
+                parameters=all_params[:-len(strategies)])
+            return wrapper
+        return deco

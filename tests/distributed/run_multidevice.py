@@ -14,6 +14,8 @@ import jax.numpy as jnp  # noqa: E402
 from repro.core import DBLIndex, make_graph  # noqa: E402
 from repro.core import distributed as D  # noqa: E402
 from repro.graphs.generators import power_law  # noqa: E402
+from repro.launch.mesh import make_mesh_compat  # noqa: E402
+from repro.serve.engine import QueryEngine  # noqa: E402
 
 
 def main():
@@ -26,8 +28,7 @@ def main():
     # single-device reference
     ref = DBLIndex.build(g, n_cap=n, k=16, k_prime=16, max_iters=64)
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh_compat((4, 2), ("data", "model"))
     idx = D.distributed_build(g, mesh, n_cap=n, k=16, k_prime=16,
                               max_iters=64)
     for name in ("dl_in", "dl_out", "bl_in", "bl_out"):
@@ -52,12 +53,20 @@ def main():
         assert (a == b).all(), f"sharded insert diverged on {name}"
 
     # elastic re-placement: different mesh shape, same results
-    mesh2 = jax.make_mesh((8,), ("data",),
-                          axis_types=(jax.sharding.AxisType.Auto,))
+    mesh2 = make_mesh_compat((8,), ("data",))
     idx3 = D.shard_index(idx2, mesh2)
     verd3 = np.asarray(D.distributed_label_verdicts(idx3, mesh2, u, v))
     verd2 = np.asarray(ref2.label_verdicts(u, v))
     assert (verd3 == verd2).all(), "elastic re-placement diverged"
+
+    # QueryEngine with query-axis sharding == single-device engine == host
+    from repro.launch.sharding import reach_place_index
+    eng = QueryEngine(bfs_chunk=128, max_iters=64, mesh=mesh2)
+    placed = reach_place_index(ref2, mesh2)
+    ans_sharded = eng.run(placed, u, v)
+    ans_host = ref2.query(u, v, bfs_chunk=128, max_iters=64, driver="host")
+    assert (ans_sharded == np.asarray(ans_host)).all(), \
+        "sharded engine diverged from host driver"
 
     print("MULTIDEVICE_OK")
 

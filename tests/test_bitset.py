@@ -1,6 +1,6 @@
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from tests._hyp import given, settings, st
 
 from repro.core import bitset
 

@@ -1,0 +1,204 @@
+"""QueryEngine behaviour tests: dispatch-shape budget, batch-size bucketing,
+pipelined submits, donated insert parity, serving stats."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import DBLIndex, make_graph
+from repro.graphs.generators import power_law
+from repro.serve.engine import QueryEngine, engine_for, select_backend
+from repro.serve.reach_server import ReachabilityServer
+from tests.conftest import reach_oracle
+
+
+def _power_law_index(n=256, m=1200, *, k=8, kp=8, m_extra=64, max_iters=64):
+    src, dst = power_law(n, m, seed=5)
+    g = make_graph(src, dst, n, m_cap=m + m_extra)
+    idx = DBLIndex.build(g, n_cap=n, k=k, k_prime=kp, max_iters=max_iters)
+    return idx, src, dst
+
+
+# -------------------------------------------------- acceptance: ≤2 shapes
+def test_10k_batch_two_dispatch_shapes():
+    """A 10k-query batch must execute with at most two compiled dispatch
+    shapes: one fused label-phase executable and one BFS-chunk executable —
+    no per-chunk host-loop recompilation.  Verified by counting jit cache
+    entries on a fresh engine."""
+    idx, src, dst = _power_law_index()
+    rng = np.random.default_rng(0)
+    u = rng.integers(0, 256, 10_000).astype(np.int32)
+    v = rng.integers(0, 256, 10_000).astype(np.int32)
+
+    eng = QueryEngine(idx, bfs_chunk=256, max_iters=64)
+    ans, info = eng.run(idx, u, v, return_stats=True)
+    assert info["n_bfs"] > 0, "workload must exercise the BFS path"
+    assert eng.stats.bfs_dispatches >= 1
+    assert eng.dispatch_shapes() <= 2, (
+        f"expected ≤2 compiled dispatch shapes, got {eng.dispatch_shapes()}")
+
+    # exactness against the host-side reference driver and the oracle
+    host = idx.query(u, v, bfs_chunk=256, max_iters=64, driver="host")
+    np.testing.assert_array_equal(ans, np.asarray(host))
+    R = reach_oracle(256, src, dst)
+    np.testing.assert_array_equal(ans, R[u, v])
+
+
+def test_varying_batch_sizes_bucketed_shapes():
+    """A serving stream with many distinct batch sizes maps onto a handful
+    of padded buckets (the seed host driver compiled one shape per size)."""
+    idx, src, dst = _power_law_index()
+    rng = np.random.default_rng(1)
+    eng = QueryEngine(idx, bfs_chunk=256, max_iters=64, q_block=512)
+    R = reach_oracle(256, src, dst)
+    for q in (3, 64, 500, 512, 513, 900, 1024, 1500):
+        u = rng.integers(0, 256, q).astype(np.int32)
+        v = rng.integers(0, 256, q).astype(np.int32)
+        ans = eng.run(idx, u, v)
+        np.testing.assert_array_equal(ans, R[u, v])
+    # 8 distinct batch sizes -> only 3 padded label buckets (512/1024/1536);
+    # the seed host driver compiled a fresh verdict shape for every size.
+    # BFS adds one executable per (chunk bucket, padded size) actually hit.
+    counts = eng.dispatch_shape_counts()
+    assert counts["label"] <= 3
+    assert eng.dispatch_shapes() <= 10
+
+
+def test_submit_resolve_pipelining():
+    """submit() defers BFS; resolving out of order matches run()."""
+    idx, src, dst = _power_law_index()
+    rng = np.random.default_rng(2)
+    eng = QueryEngine(idx, bfs_chunk=128, max_iters=64)
+    batches = [(rng.integers(0, 256, 700).astype(np.int32),
+                rng.integers(0, 256, 700).astype(np.int32))
+               for _ in range(4)]
+    pending = [eng.submit(idx, u, v) for u, v in batches]
+    R = reach_oracle(256, src, dst)
+    for pend, (u, v) in reversed(list(zip(pending, batches))):
+        np.testing.assert_array_equal(pend.resolve(), R[u, v])
+
+
+def test_flush_coalesces_residues_and_matches_oracle():
+    """flush() pools the BFS residues of several micro-batches into one
+    right-sized dispatch sequence; answers must equal per-batch run()."""
+    idx, src, dst = _power_law_index()
+    rng = np.random.default_rng(6)
+    eng = QueryEngine(idx, bfs_chunk=256, max_iters=64)
+    R = reach_oracle(256, src, dst)
+    batches = [(rng.integers(0, 256, q).astype(np.int32),
+                rng.integers(0, 256, q).astype(np.int32))
+               for q in (900, 300, 1500, 40, 700)]
+    pending = [eng.submit(idx, u, v) for u, v in batches]
+    pending[1].resolve()              # pre-resolved entries are passed through
+    before = eng.stats.bfs_dispatches
+    outs = eng.flush(pending)
+    for (u, v), out in zip(batches, outs):
+        np.testing.assert_array_equal(out, R[u, v])
+    total_nu = sum(min(int(p.n_unknown), p.q) for p in pending)
+    assert total_nu > 0, "stream must exercise the BFS residue"
+    # the 4 unresolved batches shared ceil(total/chunk) dispatches, not 4+
+    assert eng.stats.bfs_dispatches - before <= -(-total_nu // 16)
+
+
+def test_engine_insert_matches_index_insert():
+    idx, src, dst = _power_law_index()
+    rng = np.random.default_rng(3)
+    ns = rng.integers(0, 256, 16).astype(np.int32)
+    nd = rng.integers(0, 256, 16).astype(np.int32)
+    ref = idx.insert_edges(ns, nd, max_iters=64)
+    eng = QueryEngine(idx, bfs_chunk=128, max_iters=64)
+    got = eng.insert(ns, nd)
+    for name in ("dl_in", "dl_out", "bl_in", "bl_out"):
+        np.testing.assert_array_equal(np.asarray(getattr(got, name)),
+                                      np.asarray(getattr(ref, name)))
+    R = reach_oracle(256, np.concatenate([src, ns]),
+                     np.concatenate([dst, nd]))
+    u = rng.integers(0, 256, 2000).astype(np.int32)
+    v = rng.integers(0, 256, 2000).astype(np.int32)
+    np.testing.assert_array_equal(eng.query(u, v), R[u, v])
+
+
+def test_insert_flushes_outstanding_pendings():
+    """With donation on, insert() must resolve deferred submits that still
+    reference the old index's buffers before those buffers are consumed.
+    (On CPU donation is a no-op at the XLA level, but the flush-before-
+    donate bookkeeping runs identically.)"""
+    idx, src, dst = _power_law_index(n=128, m=500, m_extra=64, max_iters=64)
+    eng = QueryEngine(idx, bfs_chunk=64, max_iters=64, donate=True)
+    rng = np.random.default_rng(8)
+    u = rng.integers(0, 128, 600).astype(np.int32)
+    v = rng.integers(0, 128, 600).astype(np.int32)
+    pend = eng.submit(eng.index, u, v)
+    ns = rng.integers(0, 128, 8).astype(np.int32)
+    nd = rng.integers(0, 128, 8).astype(np.int32)
+    eng.insert(ns, nd)
+    # the pending was resolved against its submission-time snapshot
+    assert pend._result is not None
+    R_old = reach_oracle(128, src, dst)
+    np.testing.assert_array_equal(pend.resolve(), R_old[u, v])
+    # post-insert queries see the new graph
+    R_new = reach_oracle(128, np.concatenate([src, ns]),
+                         np.concatenate([dst, nd]))
+    np.testing.assert_array_equal(eng.query(u, v), R_new[u, v])
+
+
+def test_server_engine_config_conflicts_rejected():
+    idx, _, _ = _power_law_index(n=32, m=80, m_extra=8, max_iters=40)
+    idx2, _, _ = _power_law_index(n=64, m=160, m_extra=8, max_iters=40)
+    eng = QueryEngine(idx, bfs_chunk=32, max_iters=40)
+    with pytest.raises(ValueError):
+        ReachabilityServer(idx2, engine=eng)   # two different bound indexes
+    with pytest.raises(ValueError):
+        ReachabilityServer(None)               # no index at all
+    srv = ReachabilityServer(None, engine=eng)  # engine's index is used
+    assert srv.index is idx
+
+
+def test_engine_empty_and_errors():
+    idx, _, _ = _power_law_index(n=32, m=80, m_extra=8, max_iters=40)
+    eng = QueryEngine(None, bfs_chunk=32, max_iters=40)
+    assert eng.run(idx, np.zeros(0, np.int32), np.zeros(0, np.int32)).size == 0
+    with pytest.raises(ValueError):
+        eng.query([0], [1])           # no bound index
+    with pytest.raises(ValueError):
+        QueryEngine(backend="cuda")   # unknown backend
+    with pytest.raises(ValueError):
+        idx.query([0], [1], driver="nope")
+    assert select_backend("jnp") == "jnp"
+    assert select_backend("auto") in ("jnp", "pallas")
+
+
+def test_engine_for_is_memoized():
+    a = engine_for(bfs_chunk=64, max_iters=33)
+    b = engine_for(bfs_chunk=64, max_iters=33)
+    c = engine_for(bfs_chunk=128, max_iters=33)
+    assert a is b and a is not c
+
+
+def test_server_round_trip_and_stats():
+    idx, src, dst = _power_law_index(n=128, m=500, m_extra=32, max_iters=64)
+    srv = ReachabilityServer(idx, bfs_chunk=128, max_iters=64)
+    rng = np.random.default_rng(4)
+    u = rng.integers(0, 128, 3000).astype(np.int32)
+    v = rng.integers(0, 128, 3000).astype(np.int32)
+    ans = srv.query(u, v)
+    R = reach_oracle(128, src, dst)
+    np.testing.assert_array_equal(ans, R[u, v])
+    srv.insert([0, 1], [2, 3])
+    s = srv.stats.as_dict()
+    es = srv.engine_stats()
+    assert s["queries"] == 3000 and s["inserts"] == 2
+    assert 0.0 <= s["rho"] <= 1.0
+    assert es["dispatch_shapes"] <= 2
+    assert es["backend"] in ("jnp", "pallas")
+
+
+def test_warmup_precompiles():
+    idx, _, _ = _power_law_index(n=64, m=160, m_extra=8, max_iters=40)
+    eng = QueryEngine(idx, bfs_chunk=64, max_iters=40)
+    eng.warmup(idx, batch_sizes=(1, 600), bfs_buckets=(16, 32, 64))
+    shapes = eng.dispatch_shapes()
+    assert shapes >= 2
+    rng = np.random.default_rng(5)
+    eng.run(idx, rng.integers(0, 64, 600).astype(np.int32),
+            rng.integers(0, 64, 600).astype(np.int32))
+    assert eng.dispatch_shapes() == shapes  # nothing new compiled

@@ -3,6 +3,8 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
+from tests._hyp import given, settings, st
+
 from repro.core import DBLIndex, make_graph
 from repro.core import query as Q
 from repro.kernels.dbl_query.dbl_query import dbl_query_verdicts
@@ -79,5 +81,87 @@ def test_bfs_prune_ops_matches_core_admit():
     u = jnp.asarray(rng.integers(0, n, 64).astype(np.int32))
     v = jnp.asarray(rng.integers(0, n, 64).astype(np.int32))
     got = admit_plane(idx.packed, u, v, n_block=64, q_block=64, interpret=True)
+    want = Q._admit_plane(idx.packed, u, v, n)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ----------------------------------------- randomized parity (property)
+def _rand_packed_labels(rng, n, wd, wb):
+    return Q.PackedLabels(_rand_words(rng, (n, wd)), _rand_words(rng, (n, wd)),
+                          _rand_words(rng, (n, wb)), _rand_words(rng, (n, wb)))
+
+
+# deliberately awkward query counts: primes, off-by-ones around the 128-lane
+# VPU width and around q_block multiples — the ops wrappers must pad
+_ODD_QS = (1, 7, 100, 127, 129, 255, 333, 511, 640, 777, 1023)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4), st.integers(1, 4),
+       st.sampled_from(_ODD_QS), st.sampled_from((128, 256, 512)))
+@settings(max_examples=25, deadline=None)
+def test_dbl_query_parity_random_shapes(seed, wd, wb, q, q_block):
+    """ops wrapper (Pallas interpret) == kernel ref == core jnp path over
+    randomized k/k'/Q, including non-multiple-of-128 query counts."""
+    rng = np.random.default_rng(seed)
+    n = 50
+    p = _rand_packed_labels(rng, n, wd, wb)
+    u = jnp.asarray(rng.integers(0, n, q).astype(np.int32))
+    v = jnp.asarray(rng.integers(0, n, q).astype(np.int32))
+    got = query_verdicts(p, u, v, q_block=q_block, interpret=True)
+    want_jnp = Q.label_verdicts(p, u, v)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(want_jnp, np.int32))
+    # word-major kernel ref on the same gathered streams
+    streams = [p.dl_out[u].T, p.dl_in[v].T, p.dl_out[v].T, p.dl_in[u].T,
+               p.bl_in[u].T, p.bl_in[v].T, p.bl_out[v].T, p.bl_out[u].T]
+    want_ref = verdict_ref(streams[0], streams[1], streams[2], streams[3],
+                           streams[4], streams[5], streams[7], streams[6],
+                           (u == v))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want_ref))
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 3), st.integers(1, 3),
+       st.sampled_from((3, 37, 100, 130, 250)),
+       st.sampled_from((5, 33, 100, 129)))
+@settings(max_examples=15, deadline=None)
+def test_bfs_prune_parity_random_shapes(seed, wd, wb, n, q):
+    """admit_plane ops wrapper (Pallas interpret) == jnp ref over randomized
+    n/Q that are NOT multiples of the block sizes (wrapper pads both axes)."""
+    rng = np.random.default_rng(seed)
+    blin_all = _rand_words(rng, (wb, n))
+    blout_all = _rand_words(rng, (wb, n))
+    dlin_all = _rand_words(rng, (wd, n))
+    blin_v = _rand_words(rng, (wb, q))
+    blout_v = _rand_words(rng, (wb, q))
+    dlo_u = _rand_words(rng, (wd, q))
+    want = admit_ref(blin_all, blout_all, dlin_all, blin_v, blout_v, dlo_u)
+    from repro.kernels.bfs_prune.bfs_prune import bfs_admit_plane as raw
+
+    def pad(x, mult, axis):
+        rem = (-x.shape[axis]) % mult
+        cfg = [(0, 0)] * x.ndim
+        cfg[axis] = (0, rem)
+        return jnp.pad(x, cfg)
+
+    nb, qb = 64, 64
+    got = raw(pad(blin_all, nb, 1), pad(blout_all, nb, 1),
+              pad(dlin_all, nb, 1), pad(blin_v, qb, 1),
+              pad(blout_v, qb, 1), pad(dlo_u, qb, 1),
+              n_block=nb, q_block=qb, interpret=True)[:n, :q]
+    np.testing.assert_array_equal(np.asarray(got).astype(bool),
+                                  np.asarray(want))
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from((45, 107, 200)))
+@settings(max_examples=8, deadline=None)
+def test_bfs_prune_ops_random_graph_sizes(seed, q):
+    """End-to-end ops wrapper on a real index with non-block-multiple n, Q."""
+    rng = np.random.default_rng(seed)
+    n, src, dst = random_graph(rng, n_max=50, m_max=200)
+    g = make_graph(src, dst, n)
+    idx = DBLIndex.build(g, n_cap=n, k=min(8, n), k_prime=8, max_iters=n + 2)
+    u = jnp.asarray(rng.integers(0, n, q).astype(np.int32))
+    v = jnp.asarray(rng.integers(0, n, q).astype(np.int32))
+    got = admit_plane(idx.packed, u, v, n_block=32, q_block=32, interpret=True)
     want = Q._admit_plane(idx.packed, u, v, n)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -9,6 +9,8 @@
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
@@ -113,7 +115,125 @@ def mixed_stream(bg, *, rounds: int = 8, insert_b: int = 32):
     return n_queries / t_host, n_queries / t_engine
 
 
-def main(scale: float = 0.1, datasets=("LJ", "Email", "Reddit")):
+def epoch_stream(bg, *, rounds: int = 8, queries_per_round: int = 4,
+                 insert_b: int = 32, repeats: int = 3):
+    """Epoch-coalesced flush vs PR-1 flush-per-snapshot on ONE stream.
+
+    Both runs see the identical mixed insert/query stream.  The per-epoch
+    baseline drains the pipeline before every insert (the pre-epoch engine
+    forced this: a mutation invalidated the snapshot its pendings were
+    submitted against).  The coalesced run lets submits ride across every
+    insert and flushes ONCE at the end — per-lane edge-count cutoffs keep
+    the answers bitwise as-of-submit.  Reports queries/s, BFS dispatch
+    counts, flush latency, and bitwise answer checks against the host
+    driver run per submit-epoch snapshot (both consistency modes)."""
+    idx0 = bg.index(m_extra=rounds * insert_b + insert_b)
+    batches = _mixed_stream_batches(bg.n, rounds=rounds,
+                                    queries_per_round=queries_per_round,
+                                    insert_b=insert_b)
+    n_queries = sum(len(u) for kind, u, _ in batches if kind == "query")
+
+    def run(coalesce: bool, consistency: str = "as-of-submit"):
+        eng = QueryEngine(idx0, bfs_chunk=256, max_iters=64, donate=False,
+                          consistency=consistency)
+        pending, t_q, t_flush = [], 0.0, 0.0
+        d0 = eng.stats.bfs_dispatches
+        for kind, a, b in batches:
+            if kind == "query":
+                t0 = time.perf_counter()
+                pending.append(eng.submit(eng.index, a, b))
+                t_q += time.perf_counter() - t0
+            else:
+                if not coalesce:            # PR-1: drain before mutating
+                    t0 = time.perf_counter()
+                    eng.flush(pending)
+                    pending = []
+                    t_flush += time.perf_counter() - t0
+                eng.insert(a, b)
+                eng.index.packed.dl_in.block_until_ready()
+        t0 = time.perf_counter()
+        eng.flush(pending)
+        t_flush += time.perf_counter() - t0
+        return (t_q + t_flush, t_flush, eng.stats.bfs_dispatches - d0, eng)
+
+    # answers must be bitwise identical to the host driver evaluated at each
+    # query's submit-epoch snapshot (as-of-submit) / the deterministic
+    # latest-resolution oracle (latest) — checked once, outside the timing
+    def check_answers():
+        eng = QueryEngine(idx0, bfs_chunk=256, max_iters=64, donate=False)
+        idx_f, pending, snap_idx, verdicts = idx0, [], [], []
+        for kind, a, b in batches:
+            if kind == "query":
+                verdicts.append(
+                    np.asarray(Q.label_verdicts(
+                        idx_f.packed, jnp.asarray(a), jnp.asarray(b))))
+                pending.append((eng.submit(eng.index, a, b), a, b))
+                snap_idx.append(idx_f)
+            else:
+                eng.insert(a, b)
+                idx_f = idx_f.insert_edges(a, b, max_iters=64)
+        outs = eng.flush([p for p, _, _ in pending])
+        ok_asof = all(
+            np.array_equal(out, np.asarray(ix.query(
+                a, b, bfs_chunk=64, max_iters=64, driver="host")))
+            for (pend, a, b), ix, out in zip(pending, snap_idx, outs))
+        outs_l = eng.flush([eng.submit(eng.index, a, b)
+                            for _, a, b in pending], consistency="latest")
+        # the final-epoch host answers serve BOTH latest-mode checks below
+        latest_host = [np.asarray(idx_f.query(a, b, bfs_chunk=64,
+                                              max_iters=64, driver="host"))
+                       for _, a, b in pending]
+        # re-submitted at the final epoch: latest == as-of-final == host
+        ok_latest = all(np.array_equal(out, want)
+                        for want, out in zip(latest_host, outs_l))
+        # and a coalesced latest flush across epochs obeys the monotone
+        # sandwich per batch: submit-verdict positives kept, rest <= latest
+        pend2 = []
+        eng2 = QueryEngine(idx0, bfs_chunk=256, max_iters=64, donate=False)
+        for kind, a, b in batches:
+            if kind == "query":
+                pend2.append((eng2.submit(eng2.index, a, b), a, b))
+            else:
+                eng2.insert(a, b)
+        outs2 = eng2.flush([p for p, _, _ in pend2], consistency="latest")
+        ok_sandwich = True
+        for (pend, a, b), verd, latest, out in zip(pend2, verdicts,
+                                                   latest_host, outs2):
+            want = np.where(verd == 1, True,
+                            np.where(verd == 0, False, latest))
+            ok_sandwich &= np.array_equal(out, want)
+        return ok_asof, ok_latest and ok_sandwich
+
+    ok_asof, ok_latest = check_answers()
+    t_per, fl_per, disp_per, _ = min((run(False) for _ in range(repeats)),
+                                     key=lambda r: r[0])
+    t_co, fl_co, disp_co, eng_co = min((run(True) for _ in range(repeats)),
+                                       key=lambda r: r[0])
+    return {
+        "n_queries": n_queries,
+        "qps_per_epoch_flush": n_queries / t_per,
+        "qps_epoch_coalesced": n_queries / t_co,
+        "bfs_dispatches_per_epoch_flush": disp_per,
+        "bfs_dispatches_epoch_coalesced": disp_co,
+        "dispatch_reduction": disp_per / max(disp_co, 1),
+        "flush_latency_s_per_epoch_flush": fl_per,
+        "flush_latency_s_epoch_coalesced": fl_co,
+        "stale_lanes": eng_co.stats.stale_lanes,
+        "answers_bitwise_host_as_of_submit": bool(ok_asof),
+        "answers_bitwise_host_latest": bool(ok_latest),
+    }
+
+
+def main(scale: float = 0.1, datasets=("LJ", "Email", "Reddit"),
+         json_path: str | None = None):
+    """Runs the perf suite and writes the PR-2 trajectory file
+    ``BENCH_PR2.json`` (override with ``json_path`` / ``$BENCH_JSON``):
+    queries/s, BFS dispatch counts, and flush latency for epoch-coalesced
+    vs. per-epoch flush, plus bitwise answer checks in both consistency
+    modes."""
+    json_path = json_path or os.environ.get("BENCH_JSON", "BENCH_PR2.json")
+    report = {"scale": scale, "backend": jax.default_backend(),
+              "datasets": {}, "epoch_coalescing": {}}
     print("dataset,update_pruned_ms,rebuild_ms,update_speedup,"
           "query_packed_ms,query_bool_ms,label_bytes_packed,label_bytes_bool")
     rows = []
@@ -143,6 +263,10 @@ def main(scale: float = 0.1, datasets=("LJ", "Email", "Reddit")):
         bytes_bool = sum(int(p.size) for p in
                          (idx.dl_in, idx.dl_out, idx.bl_in, idx.bl_out))
         rows.append((name, t_upd, t_rebuild, t_packed, t_bool))
+        report["datasets"][name] = {
+            "update_pruned_ms": 1e3 * t_upd, "rebuild_ms": 1e3 * t_rebuild,
+            "query_packed_ms": 1e3 * t_packed, "query_bool_ms": 1e3 * t_bool,
+            "label_bytes_packed": bytes_packed, "label_bytes_bool": bytes_bool}
         print(f"{name},{1e3*t_upd:.1f},{1e3*t_rebuild:.1f},"
               f"{t_rebuild/t_upd:.1f}x,{1e3*t_packed:.2f},{1e3*t_bool:.2f},"
               f"{bytes_packed},{bytes_bool}")
@@ -151,8 +275,29 @@ def main(scale: float = 0.1, datasets=("LJ", "Email", "Reddit")):
     for name in datasets:
         bg = load(name, scale=scale)
         host_qps, engine_qps = mixed_stream(bg)
+        report["datasets"].setdefault(name, {})["mixed_stream"] = {
+            "host_qps": host_qps, "engine_qps": engine_qps}
         print(f"{name},{host_qps:.0f},{engine_qps:.0f},"
               f"{engine_qps/host_qps:.1f}x")
+
+    print("\ndataset,qps_coalesced,qps_per_epoch,dispatches_coalesced,"
+          "dispatches_per_epoch,reduction,bitwise_asof,bitwise_latest"
+          "  (epoch coalescing)")
+    for name in datasets:
+        bg = load(name, scale=scale)
+        r = epoch_stream(bg)
+        report["epoch_coalescing"][name] = r
+        print(f"{name},{r['qps_epoch_coalesced']:.0f},"
+              f"{r['qps_per_epoch_flush']:.0f},"
+              f"{r['bfs_dispatches_epoch_coalesced']},"
+              f"{r['bfs_dispatches_per_epoch_flush']},"
+              f"{r['dispatch_reduction']:.1f}x,"
+              f"{r['answers_bitwise_host_as_of_submit']},"
+              f"{r['answers_bitwise_host_latest']}")
+
+    with open(json_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(f"\nwrote {json_path}")
     return rows
 
 

@@ -31,6 +31,10 @@ class DBLIndex(NamedTuple):
     bl_in: jax.Array            # (n_cap, k') uint8 plane
     bl_out: jax.Array
     packed: Q.PackedLabels      # uint32 word views
+    # snapshot epoch: bumped by every insert batch.  With append-only edges,
+    # (epoch, graph.m) names the exact edge set this index snapshot observed
+    # — the serving engine keys cross-snapshot BFS coalescing off it.
+    epoch: jax.Array | int = 0
 
     # ---- static helpers -------------------------------------------------
     @property
@@ -85,12 +89,13 @@ class DBLIndex(NamedTuple):
                      ) -> "DBLIndex":
         new_src = jnp.asarray(new_src, jnp.int32)
         new_dst = jnp.asarray(new_dst, jnp.int32)
-        g2, dl_in, dl_out, bl_in, bl_out, _ = U.insert_and_update(
+        g2, dl_in, dl_out, bl_in, bl_out, _, epoch2 = U.insert_and_update(
             self.graph, self.dl_in, self.dl_out, self.bl_in, self.bl_out,
-            new_src, new_dst, n_cap=self.n_cap, max_iters=max_iters)
+            new_src, new_dst, self.epoch, n_cap=self.n_cap,
+            max_iters=max_iters)
         packed = Q.pack_labels(dl_in, dl_out, bl_in, bl_out)
         return DBLIndex(g2, self.landmarks, dl_in, dl_out, bl_in, bl_out,
-                        packed)
+                        packed, epoch2)
 
     # ---- introspection ----------------------------------------------------
     def label_bytes(self) -> int:

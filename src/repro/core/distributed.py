@@ -39,7 +39,7 @@ def index_shardings(mesh: Mesh) -> DBLIndex:
     g = Graph(src=vec, dst=vec, n=scal, m=scal)
     packed = Q.PackedLabels(plane, plane, plane, plane)
     return DBLIndex(graph=g, landmarks=scal, dl_in=plane, dl_out=plane,
-                    bl_in=plane, bl_out=plane, packed=packed)
+                    bl_in=plane, bl_out=plane, packed=packed, epoch=scal)
 
 
 def shard_index(idx: DBLIndex, mesh: Mesh) -> DBLIndex:

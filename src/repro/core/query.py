@@ -52,6 +52,34 @@ def label_verdicts(p: PackedLabels, u: jax.Array, v: jax.Array) -> jax.Array:
     return jnp.where(pos, jnp.int8(1), jnp.where(neg, jnp.int8(0), jnp.int8(-1)))
 
 
+#: per-lane edge-count-cutoff sentinel that is >= any reachable edge count,
+#: marking a lane (or a padding lane) as always-fresh: full DL prune, every
+#: live edge visible.  All cutoff consumers (QueryEngine, both kernel ops
+#: wrappers) must share this value — a lane padded with anything smaller
+#: would silently flip to the stale path.
+FRESH_CUT = 2**31 - 1
+
+
+def asof_verdicts(verd: jax.Array, u: jax.Array, v: jax.Array,
+                  m_cut: jax.Array, m_total: jax.Array) -> jax.Array:
+    """Downgrade verdicts computed from *newer* labels to be valid "as of"
+    a per-lane edge-count cutoff (insert-only monotonicity, both ways):
+
+    - ``0`` stays ``0``: unreachable under a superset edge set is
+      unreachable under every older subset — stale negatives are free;
+    - ``+1`` survives only for fresh lanes (``m_cut >= m_total``) or
+      self-queries: a positive proven by newer labels may ride edges the
+      lane's snapshot did not have, so it degrades to ``-1`` (unknown) and
+      the lane rides the cutoff BFS instead.
+
+    This is the label-side half of cross-snapshot coalescing: one verdict
+    dispatch against the newest labels serves lanes from every epoch.
+    """
+    fresh = m_cut >= m_total
+    stale_pos = (verd == jnp.int8(1)) & ~fresh & (u != v)
+    return jnp.where(stale_pos, jnp.int8(-1), verd.astype(jnp.int8))
+
+
 @jax.jit
 def label_stats(p: PackedLabels, u: jax.Array, v: jax.Array) -> dict:
     """Per-mechanism answer masks (paper Table 4 columns)."""
@@ -69,30 +97,55 @@ def label_stats(p: PackedLabels, u: jax.Array, v: jax.Array) -> dict:
 
 
 def _admit_plane(p: PackedLabels, u: jax.Array, v: jax.Array,
-                 n_cap: int) -> jax.Array:
+                 n_cap: int, dl_on: jax.Array | None = None) -> jax.Array:
     """(n_cap, Qc) bool — vertices x admissible in query q's BFS.
 
     admit = BL_Contain(x, v_q) ∧ ¬DL_Intersec(u_q, x)   (Alg 2 lines 20/22).
+
+    ``dl_on`` (Qc,) bool gates the DL-intersection prune per lane.  The BL
+    containment prune is *monotone-safe*: labels only gain bits under
+    insert-only updates, so containment at a newer snapshot is implied by any
+    path that existed at an older one — pruning an epoch-stale lane's BFS
+    with newer BL labels never cuts a true old-snapshot path.  The DL prune
+    is not (its soundness argument runs through the lane's verdict being
+    non-positive *at the label snapshot*), so epoch-stale lanes disable it.
     """
     c1 = bitset.subset(p.bl_in[:, None, :], p.bl_in[v][None, :, :])
     c2 = bitset.subset(p.bl_out[v][None, :, :], p.bl_out[:, None, :])
     d = bitset.intersect_any(p.dl_out[u][None, :, :], p.dl_in[:, None, :])
+    if dl_on is not None:
+        d = d & dl_on[None, :]
     return c1 & c2 & ~d
 
 
 @functools.partial(jax.jit, static_argnames=("n_cap", "max_iters"))
 def pruned_bfs(g: Graph, p: PackedLabels, u: jax.Array, v: jax.Array,
                admit: jax.Array | None = None,
+               m_cut: jax.Array | None = None,
                *, n_cap: int, max_iters: int = 256) -> jax.Array:
     """(Qc,) bool — resolve unknown queries by label-pruned BFS lanes.
 
     ``admit`` lets callers supply a precomputed (n_cap, Qc) admit plane
     (e.g. from the bfs_prune Pallas kernel); default is the jnp plane.
+
+    ``m_cut`` (Qc,) int32 is a per-lane *edge-count cutoff*: lane q only
+    traverses edges with append index < m_cut[q].  Because the edge arrays
+    are append-only, edge index < m-at-epoch-e is exactly the edge set the
+    graph had at snapshot epoch e — so a cutoff BFS answers lane q "as of"
+    its submit epoch even though it runs on the newest arrays, which is what
+    lets the QueryEngine coalesce residues across snapshots into one
+    dispatch.  Lanes with m_cut >= g.m see every live edge and keep the DL
+    prune; stale lanes drop it (see ``_admit_plane``).
     """
     qc = u.shape[0]
     live = edge_mask(g)
+    if m_cut is None:
+        dl_on = None
+    else:
+        eids = jnp.arange(g.src.shape[0], dtype=jnp.int32)
+        dl_on = m_cut >= g.m
     if admit is None:
-        admit = _admit_plane(p, u, v, n_cap)      # (n_cap, Qc)
+        admit = _admit_plane(p, u, v, n_cap, dl_on)  # (n_cap, Qc)
     ids = jnp.arange(n_cap, dtype=jnp.int32)
     frontier = ids[:, None] == u[None, :]          # (n_cap, Qc)
     visited = frontier
@@ -106,8 +159,12 @@ def pruned_bfs(g: Graph, p: PackedLabels, u: jax.Array, v: jax.Array,
 
     def body(state):
         frontier, visited, hit, it = state
-        contrib = (frontier[g.src] & live[:, None]).astype(jnp.uint8)
-        nxt = jax.ops.segment_max(contrib, g.dst,
+        contrib = frontier[g.src] & live[:, None]
+        if m_cut is not None:
+            # fused into the contrib elementwise op each iteration — no
+            # persistent (m_cap, Qc) mask carried across the while-loop
+            contrib &= eids[:, None] < m_cut[None, :]
+        nxt = jax.ops.segment_max(contrib.astype(jnp.uint8), g.dst,
                                   num_segments=n_cap).astype(jnp.bool_)
         nxt = nxt & admit & ~visited & ~hit[None, :]
         hit = hit | nxt[v, lanes]

@@ -29,8 +29,17 @@ from .propagate import propagate, seed_scatter_or
 def insert_and_update(g: G.Graph,
                       dl_in, dl_out, bl_in, bl_out,
                       new_src: jax.Array, new_dst: jax.Array,
+                      epoch: jax.Array | int = 0,
                       *, n_cap: int, max_iters: int = 256):
-    """Returns (graph', dl_in', dl_out', bl_in', bl_out', iters (4,))."""
+    """Returns (graph', dl_in', dl_out', bl_in', bl_out', iters (4,), epoch').
+
+    ``epoch`` is the snapshot counter threaded through every insert batch:
+    each call defines one new *snapshot epoch* (epoch' = epoch + 1).  Because
+    edges are append-only, the pair (epoch, edge count m) identifies the
+    exact edge set visible at that snapshot — the QueryEngine uses this to
+    coalesce BFS residues across epochs with per-lane edge-count cutoffs
+    instead of flushing on every index mutation.
+    """
     g2 = G.insert_edges(g, new_src, new_dst)
     live = G.edge_mask(g2)
 
@@ -50,4 +59,5 @@ def insert_and_update(g: G.Graph,
     bl_in2, it2 = fwd(bl_in)
     bl_out2, it3 = bwd(bl_out)
     iters = jnp.stack([it0, it1, it2, it3])
-    return g2, dl_in2, dl_out2, bl_in2, bl_out2, iters
+    epoch2 = jnp.asarray(epoch, jnp.int32) + jnp.int32(1)
+    return g2, dl_in2, dl_out2, bl_in2, bl_out2, iters, epoch2

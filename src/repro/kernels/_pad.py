@@ -1,0 +1,20 @@
+"""Shared padding helper for the kernel ops wrappers.
+
+Both Pallas kernel packages pad their word-major streams (and per-lane
+cutoff rows) up to block multiples before the ``pallas_call``; keeping one
+implementation stops the two wrappers' padding semantics from drifting.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pad_axis(x, mult: int, axis: int, value=0):
+    """Right-pad ``x`` along ``axis`` to the next multiple of ``mult`` with
+    ``value`` (default 0; cutoff rows pad with ``core.query.FRESH_CUT``)."""
+    rem = (-x.shape[axis]) % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad, constant_values=value)

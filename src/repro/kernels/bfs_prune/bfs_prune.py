@@ -9,6 +9,16 @@ Grid (n_blocks, q_blocks); each step holds (W, NB) vertex-plane blocks and
 (W, QB) query blocks in VMEM and emits one (NB, QB) admit tile.  The vertex
 planes are re-streamed once per query block — q_blocks is kept small (queries
 are chunked upstream) so the total traffic stays ~one pass over the planes.
+
+Epoch-coalesced serving adds a per-lane *edge-count cutoff* operand
+(``m_cut`` (1, Q) int32 against ``m_total`` (1, 1) int32, the newest edge
+count): a lane whose cutoff is stale (m_cut < m_total) is being resolved
+"as of" an older snapshot by a BFS restricted to its old edge prefix, and
+for such lanes the DL-intersection prune is unsound (its proof needs the
+lane's verdict to be non-positive at the *same* snapshot as the labels), so
+the kernel drops the ``d`` term for them.  The BL containment prunes are
+monotone-safe and stay on for every lane.  Fresh lanes (m_cut >= m_total)
+get the full admit plane — bit-identical to the cutoff-free kernel.
 """
 from __future__ import annotations
 
@@ -19,8 +29,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _make_kernel(wd: int, wb: int):
-    def kernel(blin_all, blout_all, dlin_all, blin_v, blout_v, dlo_u, out):
+def _make_kernel(wd: int, wb: int, with_cut: bool):
+    def kernel(blin_all, blout_all, dlin_all, blin_v, blout_v, dlo_u,
+               *rest):
+        if with_cut:
+            m_cut, m_total, out = rest
+        else:
+            (out,) = rest
         z = jnp.uint32(0)
         bia, boa, dia = blin_all[...], blout_all[...], dlin_all[...]
         biv, bov, dou = blin_v[...], blout_v[...], dlo_u[...]
@@ -34,33 +49,52 @@ def _make_kernel(wd: int, wb: int):
         d = jnp.zeros((nb, qb), jnp.bool_)
         for w in range(wd):
             d |= (dou[w, None, :] & dia[w, :, None]) != z
+        if with_cut:
+            fresh = m_cut[...][0, :] >= m_total[...][0, 0]   # (QB,)
+            d &= fresh[None, :]
         out[...] = (c1 & c2 & ~d).astype(jnp.int8)
     return kernel
 
 
 @functools.partial(jax.jit, static_argnames=("n_block", "q_block", "interpret"))
 def bfs_admit_plane(blin_all, blout_all, dlin_all, blin_v, blout_v, dlo_u,
+                    m_cut=None, m_total=None,
                     *, n_block: int = 1024, q_block: int = 128,
                     interpret: bool = True) -> jax.Array:
-    """word-major inputs: *_all (W, n); per-query (W, Q). -> (n, Q) int8."""
+    """word-major inputs: *_all (W, n); per-query (W, Q). -> (n, Q) int8.
+
+    Optional ``m_cut`` (1, Q) int32 per-lane edge-count cutoff and
+    ``m_total`` (1, 1) int32 newest edge count: stale lanes
+    (m_cut < m_total) lose the DL prune (see module docstring).  Omitting
+    both reproduces the cutoff-free plane exactly.
+    """
     wb, n = blin_all.shape
     wd = dlin_all.shape[0]
     q = blin_v.shape[1]
     assert n % n_block == 0 and q % q_block == 0, (n, n_block, q, q_block)
+    assert (m_cut is None) == (m_total is None), "pass m_cut and m_total together"
     grid = (n // n_block, q // q_block)
 
+    in_specs = [
+        pl.BlockSpec((wb, n_block), lambda i, j: (0, i)),
+        pl.BlockSpec((wb, n_block), lambda i, j: (0, i)),
+        pl.BlockSpec((wd, n_block), lambda i, j: (0, i)),
+        pl.BlockSpec((wb, q_block), lambda i, j: (0, j)),
+        pl.BlockSpec((wb, q_block), lambda i, j: (0, j)),
+        pl.BlockSpec((wd, q_block), lambda i, j: (0, j)),
+    ]
+    args = [blin_all, blout_all, dlin_all, blin_v, blout_v, dlo_u]
+    with_cut = m_cut is not None
+    if with_cut:
+        in_specs += [pl.BlockSpec((1, q_block), lambda i, j: (0, j)),
+                     pl.BlockSpec((1, 1), lambda i, j: (0, 0))]
+        args += [m_cut.astype(jnp.int32), m_total.astype(jnp.int32)]
+
     return pl.pallas_call(
-        _make_kernel(wd, wb),
+        _make_kernel(wd, wb, with_cut),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((wb, n_block), lambda i, j: (0, i)),
-            pl.BlockSpec((wb, n_block), lambda i, j: (0, i)),
-            pl.BlockSpec((wd, n_block), lambda i, j: (0, i)),
-            pl.BlockSpec((wb, q_block), lambda i, j: (0, j)),
-            pl.BlockSpec((wb, q_block), lambda i, j: (0, j)),
-            pl.BlockSpec((wd, q_block), lambda i, j: (0, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((n_block, q_block), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((n, q), jnp.int8),
         interpret=interpret,
-    )(blin_all, blout_all, dlin_all, blin_v, blout_v, dlo_u)
+    )(*args)

@@ -6,24 +6,23 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.query import PackedLabels
+from repro.core.query import FRESH_CUT, PackedLabels
+from repro.kernels._pad import pad_axis as _pad_axis
 from .bfs_prune import bfs_admit_plane
-
-
-def _pad_axis(x, mult, axis):
-    rem = (-x.shape[axis]) % mult
-    if rem == 0:
-        return x
-    pad = [(0, 0)] * x.ndim
-    pad[axis] = (0, rem)
-    return jnp.pad(x, pad)
 
 
 @functools.partial(jax.jit, static_argnames=("n_block", "q_block", "interpret"))
 def admit_plane(p: PackedLabels, u: jax.Array, v: jax.Array,
+                m_cut: jax.Array | None = None,
+                m_total: jax.Array | None = None,
                 *, n_block: int = 1024, q_block: int = 128,
                 interpret: bool = True) -> jax.Array:
-    """Returns (n_cap, Qc) bool admit plane for the pruned-BFS lanes."""
+    """Returns (n_cap, Qc) bool admit plane for the pruned-BFS lanes.
+
+    Optional ``m_cut`` (Qc,) int32 / ``m_total`` scalar: per-lane edge-count
+    cutoffs for epoch-coalesced lanes (stale lanes lose the DL prune).
+    Padding lanes get a fresh cutoff so they keep the default plane.
+    """
     n = p.bl_in.shape[0]
     q = u.shape[0]
     blin_all = _pad_axis(p.bl_in.T, n_block, 1)
@@ -32,8 +31,13 @@ def admit_plane(p: PackedLabels, u: jax.Array, v: jax.Array,
     blin_v = _pad_axis(p.bl_in[v].T, q_block, 1)
     blout_v = _pad_axis(p.bl_out[v].T, q_block, 1)
     dlo_u = _pad_axis(p.dl_out[u].T, q_block, 1)
+    cut = tot = None
+    if m_cut is not None:
+        cut = _pad_axis(jnp.reshape(m_cut.astype(jnp.int32), (1, q)),
+                        q_block, 1, value=FRESH_CUT)
+        tot = jnp.reshape(jnp.asarray(m_total, jnp.int32), (1, 1))
     out = bfs_admit_plane(blin_all, blout_all, dlin_all,
-                          blin_v, blout_v, dlo_u,
+                          blin_v, blout_v, dlo_u, cut, tot,
                           n_block=n_block, q_block=q_block,
                           interpret=interpret)
     return out[:n, :q].astype(jnp.bool_)

@@ -4,16 +4,26 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
-def admit_ref(blin_all, blout_all, dlin_all, blin_v, blout_v, dlo_u):
+def admit_ref(blin_all, blout_all, dlin_all, blin_v, blout_v, dlo_u,
+              m_cut=None, m_total=None):
     """Inputs word-major: *_all (W, n); per-query (W, Q). -> (n, Q) bool.
 
     admit[x, q] = BL_Contain(x, v_q) ∧ ¬DL_Intersec(u_q, x)
                 = BL_in(x) ⊆ BL_in(v_q)
                 ∧ BL_out(v_q) ⊆ BL_out(x)
                 ∧ DL_out(u_q) ∩ DL_in(x) = ∅      (Alg 2 lines 20/22)
+
+    ``m_cut`` (Q,) or (1, Q) int32 per-lane edge-count cutoff with
+    ``m_total`` scalar/(1, 1): lanes whose cutoff is stale
+    (m_cut < m_total) drop the DL-intersection term — it is the one prune
+    that is not monotone-safe for a BFS restricted to the lane's old edge
+    prefix (see the kernel docstring).
     """
     z = jnp.uint32(0)
     c1 = jnp.all((blin_all[:, :, None] & ~blin_v[:, None, :]) == z, axis=0)
     c2 = jnp.all((blout_v[:, None, :] & ~blout_all[:, :, None]) == z, axis=0)
     d = jnp.any((dlo_u[:, None, :] & dlin_all[:, :, None]) != z, axis=0)
+    if m_cut is not None:
+        fresh = jnp.ravel(m_cut) >= jnp.ravel(m_total)[0]   # (Q,)
+        d = d & fresh[None, :]
     return c1 & c2 & ~d

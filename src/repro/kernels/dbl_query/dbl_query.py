@@ -21,32 +21,55 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(dlo_u, dli_v, dlo_v, dli_u,
-            blin_u, blin_v, blout_u, blout_v, same, out):
-    z = jnp.uint32(0)
-    pos = jnp.any((dlo_u[...] & dli_v[...]) != z, axis=0) | (same[...] != 0)
-    bl_neg = (jnp.any((blin_u[...] & ~blin_v[...]) != z, axis=0)
-              | jnp.any((blout_v[...] & ~blout_u[...]) != z, axis=0))
-    thm1 = jnp.any((dlo_v[...] & dli_u[...]) != z, axis=0)
-    thm2 = (jnp.any((dlo_u[...] & dli_u[...]) != z, axis=0)
-            | jnp.any((dlo_v[...] & dli_v[...]) != z, axis=0))
-    neg = ~pos & (bl_neg | thm1 | thm2)
-    out[...] = jnp.where(pos, jnp.int32(1),
-                         jnp.where(neg, jnp.int32(0), jnp.int32(-1)))
+def _make_kernel(with_cut: bool):
+    def kernel(dlo_u, dli_v, dlo_v, dli_u,
+               blin_u, blin_v, blout_u, blout_v, same, *rest):
+        if with_cut:
+            m_cut, m_total, out = rest
+        else:
+            (out,) = rest
+        z = jnp.uint32(0)
+        pos_lbl = jnp.any((dlo_u[...] & dli_v[...]) != z, axis=0)
+        is_same = same[...] != 0
+        pos = pos_lbl | is_same
+        bl_neg = (jnp.any((blin_u[...] & ~blin_v[...]) != z, axis=0)
+                  | jnp.any((blout_v[...] & ~blout_u[...]) != z, axis=0))
+        thm1 = jnp.any((dlo_v[...] & dli_u[...]) != z, axis=0)
+        thm2 = (jnp.any((dlo_u[...] & dli_u[...]) != z, axis=0)
+                | jnp.any((dlo_v[...] & dli_v[...]) != z, axis=0))
+        neg = ~pos & (bl_neg | thm1 | thm2)
+        if with_cut:
+            # per-lane edge-count cutoff: a positive proven only by labels
+            # NEWER than the lane's snapshot (stale lane) may ride edges the
+            # snapshot did not have — downgrade it to unknown; negatives and
+            # self-queries are monotone-safe and survive any cutoff.
+            fresh = m_cut[...] >= m_total[...][0]
+            pos = (pos_lbl & fresh) | is_same
+        out[...] = jnp.where(pos, jnp.int32(1),
+                             jnp.where(neg, jnp.int32(0), jnp.int32(-1)))
+    return kernel
 
 
 @functools.partial(jax.jit, static_argnames=("q_block", "interpret"))
 def dbl_query_verdicts(dlo_u, dli_v, dlo_v, dli_u,
                        blin_u, blin_v, blout_u, blout_v, same,
+                       m_cut=None, m_total=None,
                        *, q_block: int = 512, interpret: bool = True):
     """All label args (W, Q) uint32 word-major; same (Q,) int32. -> (Q,) int32.
 
     Q must be a multiple of q_block (callers pad; see ops.py).
+
+    Optional ``m_cut`` (Q,) int32 per-lane edge-count cutoff + ``m_total``
+    (1,) int32 newest edge count: verdicts become valid "as of" each lane's
+    cutoff — label positives on stale lanes (m_cut < m_total) degrade to
+    unknown (they must ride a cutoff BFS), negatives stay (monotone under
+    insert-only updates).  Omitting both is the plain snapshot verdict.
     """
     wd = dlo_u.shape[0]
     wb = blin_u.shape[0]
     q = dlo_u.shape[1]
     assert q % q_block == 0, (q, q_block)
+    assert (m_cut is None) == (m_total is None), "pass m_cut and m_total together"
     grid = (q // q_block,)
 
     def dl_spec():
@@ -55,13 +78,23 @@ def dbl_query_verdicts(dlo_u, dli_v, dlo_v, dli_u,
     def bl_spec():
         return pl.BlockSpec((wb, q_block), lambda i: (0, i))
 
+    in_specs = [dl_spec(), dl_spec(), dl_spec(), dl_spec(),
+                bl_spec(), bl_spec(), bl_spec(), bl_spec(),
+                pl.BlockSpec((q_block,), lambda i: (i,))]
+    args = [dlo_u, dli_v, dlo_v, dli_u,
+            blin_u, blin_v, blout_u, blout_v, same]
+    with_cut = m_cut is not None
+    if with_cut:
+        in_specs += [pl.BlockSpec((q_block,), lambda i: (i,)),
+                     pl.BlockSpec((1,), lambda i: (0,))]
+        args += [m_cut.astype(jnp.int32),
+                 jnp.reshape(m_total, (1,)).astype(jnp.int32)]
+
     return pl.pallas_call(
-        _kernel,
+        _make_kernel(with_cut),
         grid=grid,
-        in_specs=[dl_spec(), dl_spec(), dl_spec(), dl_spec(),
-                  bl_spec(), bl_spec(), bl_spec(), bl_spec(),
-                  pl.BlockSpec((q_block,), lambda i: (i,))],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((q_block,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((q,), jnp.int32),
         interpret=interpret,
-    )(dlo_u, dli_v, dlo_v, dli_u, blin_u, blin_v, blout_u, blout_v, same)
+    )(*args)

@@ -10,37 +10,38 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.query import PackedLabels
+from repro.core.query import FRESH_CUT, PackedLabels
+from repro.kernels._pad import pad_axis as _pad_to
 from .dbl_query import dbl_query_verdicts
 
 
-def _pad_to(x, mult, axis):
-    size = x.shape[axis]
-    rem = (-size) % mult
-    if rem == 0:
-        return x
-    pad = [(0, 0)] * x.ndim
-    pad[axis] = (0, rem)
-    return jnp.pad(x, pad)
-
-
 def verdicts_device(p: PackedLabels, u: jax.Array, v: jax.Array,
+                    m_cut: jax.Array | None = None,
+                    m_total: jax.Array | None = None,
                     *, q_block: int = 512, interpret: bool = True
                     ) -> jax.Array:
     """Traceable (un-jitted) body of ``query_verdicts`` so larger programs —
-    the QueryEngine's fused label phase — can inline it into one executable."""
+    the QueryEngine's fused label phase — can inline it into one executable.
+
+    ``m_cut`` (Q,) / ``m_total`` scalar thread the per-lane edge-count
+    cutoff through to the kernel (stale label positives -> unknown); padding
+    lanes are marked fresh so they never ride a BFS."""
     q = u.shape[0]
     streams = [p.dl_out[u], p.dl_in[v], p.dl_out[v], p.dl_in[u],
                p.bl_in[u], p.bl_in[v], p.bl_out[v], p.bl_out[u]]
     # word-major (W, Q), pad Q to a block multiple
     streams = [_pad_to(s.T, q_block, 1) for s in streams]
     same = _pad_to((u == v).astype(jnp.int32), q_block, 0)
+    cut = tot = None
+    if m_cut is not None:
+        cut = _pad_to(m_cut.astype(jnp.int32), q_block, 0, value=FRESH_CUT)
+        tot = jnp.asarray(m_total, jnp.int32)
     # note arg order: kernel wants (dlo_u, dli_v, dlo_v, dli_u,
     #                               blin_u, blin_v, blout_u, blout_v)
     dlo_u, dli_v, dlo_v, dli_u, blin_u, blin_v, blout_v, blout_u = streams
     out = dbl_query_verdicts(dlo_u, dli_v, dlo_v, dli_u,
                              blin_u, blin_v, blout_u, blout_v, same,
-                             q_block=q_block, interpret=interpret)
+                             cut, tot, q_block=q_block, interpret=interpret)
     return out[:q]
 
 

@@ -10,17 +10,26 @@ import jax.numpy as jnp
 
 
 def verdict_ref(dlo_u, dli_v, dlo_v, dli_u,
-                blin_u, blin_v, blout_u, blout_v, same):
+                blin_u, blin_v, blout_u, blout_v, same,
+                m_cut=None, m_total=None):
     """All label inputs (W, Q) uint32; ``same`` (Q,) bool (u == v).
 
     Returns (Q,) int32: +1 reachable / 0 unreachable / -1 unknown.
     Implements Alg 2 lines 6-13 (Lemma 1, Lemma 2, Theorem 1, Theorem 2).
+
+    ``m_cut`` (Q,) int32 / ``m_total`` scalar: per-lane edge-count cutoff —
+    label positives on stale lanes (m_cut < m_total) degrade to unknown;
+    negatives and self-queries are monotone-safe and survive any cutoff.
     """
-    pos = jnp.any(dlo_u & dli_v, axis=0) | same
+    pos_lbl = jnp.any(dlo_u & dli_v, axis=0)
+    pos = pos_lbl | same
     bl_neg = (jnp.any(blin_u & ~blin_v, axis=0)
               | jnp.any(blout_v & ~blout_u, axis=0))
     thm1 = jnp.any(dlo_v & dli_u, axis=0)
     thm2 = jnp.any(dlo_u & dli_u, axis=0) | jnp.any(dlo_v & dli_v, axis=0)
     neg = ~pos & (bl_neg | thm1 | thm2)
+    if m_cut is not None:
+        fresh = jnp.ravel(m_cut) >= jnp.ravel(m_total)[0]
+        pos = (pos_lbl & fresh) | same
     return jnp.where(pos, jnp.int32(1),
                      jnp.where(neg, jnp.int32(0), jnp.int32(-1)))

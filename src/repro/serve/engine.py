@@ -11,23 +11,38 @@ keeps the whole pipeline device-resident:
   verdict kernel on TPU, the fused jnp path elsewhere (``"pallas-interpret"``
   forces the kernel through the Pallas interpreter for parity testing);
 - **one fused label phase** — verdicts, unknown-lane compaction (stable
-  argsort), and endpoint gathers run in a single compiled executable; the
-  only host traffic per batch is one int32 scalar (the unknown count);
-- **one BFS chunk shape** — unknowns are already compacted and padded, so
-  every chunk dispatch reuses a single ``(bfs_chunk,)`` executable via
-  ``lax.dynamic_slice``; a 10k-query batch therefore costs ≤ 2 compiled
-  dispatch shapes instead of O(unknowns/chunk) host round-trips;
+  cumsum/scatter), and endpoint gathers run in a single compiled executable;
+  the only host traffic per batch is one int32 scalar (the unknown count);
+- **snapshot epochs, cross-epoch BFS coalescing** — every ``submit()`` is
+  tagged with the engine's current snapshot epoch; ``insert()`` bumps the
+  epoch *without* flushing outstanding submits, and ``flush()`` pools the
+  BFS residues of batches from *different* epochs into one right-sized
+  dispatch sequence against the newest graph.  Insert-only updates are
+  monotone, which is what makes this legal:
+
+  * submit-time label positives/negatives are exact for their snapshot and
+    (positives) stay TRUE forever — they never re-enter the pipeline;
+  * a coalesced re-check against the newest labels answers stale unknowns
+    that have since become label-negative (new-unreachable ⇒ old-
+    unreachable) for free;
+  * the remaining lanes ride ONE BFS with a per-lane *edge-count cutoff*
+    (``core.query.pruned_bfs``): append-only edge arrays mean
+    "edge index < m-at-submit-epoch" is exactly the lane's snapshot edge
+    set, so "as-of-submit" answers stay bitwise exact.  In "latest"
+    consistency the cutoff is lifted and stale label positives from the
+    newest labels are answered directly;
 - **persistent executables, donated buffers** — jit caches are per-engine
   (``engine_for`` memoizes engines so DBLIndex.query reuses them); on
-  TPU/GPU the BFS answer buffer and the insert path's label planes are
-  donated, so updates rewrite labels in place;
+  TPU/GPU the insert path's label planes are donated, so updates rewrite
+  labels in place;
 - **optional query-axis sharding** — pass a mesh and the label phase fans
   the query batch out across devices (``launch.sharding.reach_query_
   shardings``), labels replicated.
 
 ``core.query.query`` is retained verbatim as the reference implementation;
-``tests/test_property_engine.py`` checks the engine against it and against
-the dense transitive-closure oracle on random insert/query interleavings.
+``tests/test_property_engine.py`` / ``tests/test_metamorphic.py`` check the
+engine against it and against the dense transitive-closure oracle on random
+insert/query interleavings, at every query's submit epoch.
 """
 from __future__ import annotations
 
@@ -43,9 +58,11 @@ import numpy as np
 from repro.core import query as Q
 from repro.core import update as U
 from repro.core.dbl import DBLIndex
-from repro.core.graph import Graph
 from repro.kernels.dbl_query.ops import verdicts_device
 from repro.kernels.bfs_prune.ops import admit_plane as bfs_admit_plane_op
+
+#: supported consistency modes (``"latest-snapshot"`` is an alias)
+CONSISTENCY_MODES = ("as-of-submit", "latest")
 
 
 def select_backend(backend: str = "auto") -> str:
@@ -55,6 +72,15 @@ def select_backend(backend: str = "auto") -> str:
     if backend not in ("jnp", "pallas", "pallas-interpret"):
         raise ValueError(f"unknown backend {backend!r}")
     return backend
+
+
+def select_consistency(mode: str) -> str:
+    if mode == "latest-snapshot":
+        return "latest"
+    if mode not in CONSISTENCY_MODES:
+        raise ValueError(f"unknown consistency mode {mode!r}; "
+                         f"expected one of {CONSISTENCY_MODES}")
+    return mode
 
 
 def _donation_supported() -> bool:
@@ -69,21 +95,32 @@ class EngineStats:
     batches: int = 0
     inserts: int = 0
     bfs_dispatches: int = 0
+    flushes: int = 0
+    stale_lanes: int = 0      # residue lanes resolved across an epoch gap
 
     def as_dict(self) -> dict:
         rho = self.label_answered / max(self.queries, 1)
         return {"queries": self.queries, "rho": rho,
                 "batches": self.batches, "inserts": self.inserts,
-                "bfs_dispatches": self.bfs_dispatches}
+                "bfs_dispatches": self.bfs_dispatches,
+                "flushes": self.flushes, "stale_lanes": self.stale_lanes}
 
 
 class _Pending:
-    """Handle for a submitted batch: label phase dispatched, BFS deferred."""
+    """Handle for a submitted batch: label phase dispatched, BFS deferred.
+
+    ``lineage``/``epoch``/``m_at_submit`` tag the index snapshot the batch
+    observed.  Engine-bound pendings (lineage matches) are resolved against
+    the engine's *newest* index with a per-lane edge-count cutoff — the old
+    snapshot's buffers are never touched again, so a donated insert can
+    consume them while the pending is still in flight."""
 
     __slots__ = ("engine", "index", "q", "answers", "order",
-                 "u_c", "v_c", "n_unknown", "_result", "__weakref__")
+                 "u_c", "v_c", "n_unknown",
+                 "lineage", "epoch", "m_at_submit", "_result", "__weakref__")
 
-    def __init__(self, engine, index, q, answers, order, u_c, v_c, n_unknown):
+    def __init__(self, engine, index, q, answers, order, u_c, v_c, n_unknown,
+                 lineage=None, epoch=None, m_at_submit=None):
         self.engine = engine
         self.index = index
         self.q = q
@@ -92,6 +129,11 @@ class _Pending:
         self.u_c = u_c
         self.v_c = v_c
         self.n_unknown = n_unknown
+        self.lineage = lineage
+        # epoch is serving telemetry (which snapshot the batch observed);
+        # resolution keys off m_at_submit — the edge-count cutoff — alone
+        self.epoch = epoch
+        self.m_at_submit = m_at_submit
         self._result = None
 
     def resolve(self) -> np.ndarray:
@@ -102,33 +144,77 @@ class _Pending:
 
 class QueryEngine:
     """Stateless core (``run``) plus optional bound-index serving state
-    (``query``/``insert`` mutate ``self.index``)."""
+    (``query``/``insert`` mutate the bound index; ``submit``/``flush`` form
+    the asynchronous pipeline that rides across inserts)."""
 
     def __init__(self, index: DBLIndex | None = None, *,
                  bfs_chunk: int = 256, max_iters: int = 256,
                  backend: str = "auto", q_block: int = 512,
                  mesh=None, bfs_kernel: bool = False,
-                 donate: str | bool = "auto"):
+                 donate: str | bool = "auto",
+                 consistency: str = "as-of-submit"):
         if bfs_chunk <= 0 or q_block <= 0:
             raise ValueError("bfs_chunk and q_block must be positive")
-        self.index = index
         self.bfs_chunk = int(bfs_chunk)
         self.max_iters = int(max_iters)
         self.backend = select_backend(backend)
         self.q_block = int(q_block)
         self.mesh = mesh
         self.bfs_kernel = bool(bfs_kernel)
+        self.consistency = select_consistency(consistency)
         if donate == "auto":
             donate = _donation_supported()
         self.donate = bool(donate)
         self.stats = EngineStats()
-        # weak refs to unresolved submits, so a donated insert can first
-        # flush pendings that still reference the old index's buffers
-        self._outstanding: list = []
         # batch shapes are padded to this granule so a serving stream with
         # varying batch sizes maps onto a handful of compiled shapes
         self._granule = math.lcm(self.q_block, self.bfs_chunk)
+        # snapshot bookkeeping: lineage distinguishes re-binds (a fresh
+        # index genealogy) from in-place epoch bumps (inserts on the bound
+        # index); within a lineage, (epoch, edge count) is append-only
+        self._lineage = 0
+        self._index: DBLIndex | None = None
+        self.epoch = 0
+        self._m_now = 0
+        # weak refs to unresolved engine-tagged submits: a re-bind must
+        # resolve them against the lineage they belong to before the engine
+        # lets go of it (older snapshots' buffers may already be donated)
+        self._inflight: list = []
         self._build_executables()
+        if index is not None:
+            self.index = index
+
+    # ------------------------------------------------------------ binding
+    @property
+    def index(self) -> DBLIndex | None:
+        return self._index
+
+    @index.setter
+    def index(self, idx: DBLIndex | None):
+        """(Re-)bind a serving index: starts a new snapshot lineage.
+
+        In-flight submits from the outgoing lineage are resolved first,
+        against its newest snapshot with their as-of-submit cutoffs — they
+        can only legally be resolved within that lineage (under donation,
+        older snapshots' buffers are already consumed), and after the
+        re-bind the engine no longer owns it.  A re-bind therefore never
+        changes answers — it only bounds how far coalescing can defer."""
+        if self._index is not None:
+            live = [r() for r in self._inflight]
+            stale = [p for p in live
+                     if p is not None and p._result is None
+                     and p.lineage == self._lineage]
+            if stale:
+                self.flush(stale)
+        self._inflight = []
+        self._lineage += 1
+        self._index = idx
+        if idx is not None:
+            self.epoch = int(np.asarray(idx.epoch))
+            self._m_now = int(idx.graph.m)
+        else:
+            self.epoch = 0
+            self._m_now = 0
 
     # ------------------------------------------------------------ compile
     def _build_executables(self):
@@ -137,7 +223,6 @@ class QueryEngine:
         interpret = (backend == "pallas-interpret"
                      or jax.default_backend() != "tpu")
         self._interpret = interpret
-        bfs_chunk = self.bfs_chunk
         max_iters = self.max_iters
         use_bfs_kernel = self.bfs_kernel
 
@@ -166,30 +251,49 @@ class QueryEngine:
             answers = verd == jnp.int8(1)
             return answers, order, u_c, v_c, n_unknown
 
-        def make_bfs_phase(chunk: int):
-            def bfs_phase(g: Graph, p: Q.PackedLabels, u_c, v_c, order,
-                          answers, n_unknown, start):
-                """One (chunk,)-shaped BFS dispatch over compacted lanes."""
+        def make_coalesced_phase(chunk: int):
+            def coalesced(g: Q.Graph, p: Q.PackedLabels, uu, vv, m_cut):
+                """One (chunk,)-shaped epoch-coalesced residue dispatch.
+
+                Fuses the monotone label re-check against the NEWEST labels
+                with the per-lane edge-count-cutoff BFS, so a flush costs
+                ceil(total/chunk) dispatches of ONE compiled shape no matter
+                how many epochs the pooled lanes span:
+
+                - re-check verdict 0 → answer False (new-unreachable ⇒
+                  old-unreachable, valid for every consistency mode);
+                - re-check verdict +1 → answer True; ``asof_verdicts`` has
+                  already downgraded stale-lane positives to unknown when
+                  the lane's cutoff demands as-of-submit semantics, so a
+                  surviving +1 is always a legal answer;
+                - still-unknown lanes run the cutoff BFS (stale lanes lose
+                  the DL prune inside, which keeps it sound).
+
+                Dead lanes (padding / answered) carry an out-of-range
+                source so they never extend the BFS while-loop."""
                 n_cap = p.dl_in.shape[0]
-                lane = start + jnp.arange(chunk, dtype=jnp.int32)
-                live_lane = lane < n_unknown
-                uu = jax.lax.dynamic_slice(u_c, (start,), (chunk,))
-                vv = jax.lax.dynamic_slice(v_c, (start,), (chunk,))
-                # dead lanes get an out-of-range source -> empty frontier,
-                # so they never prolong the BFS while-loop
-                uu = jnp.where(live_lane, uu, jnp.int32(n_cap))
+                live_lane = uu < jnp.int32(n_cap)
+                uu_safe = jnp.minimum(uu, jnp.int32(n_cap - 1))
+                if backend in ("pallas", "pallas-interpret"):
+                    verd = verdicts_device(
+                        p, uu_safe, vv, m_cut, g.m,
+                        q_block=min(q_block, chunk),
+                        interpret=interpret).astype(jnp.int8)
+                else:
+                    verd = Q.label_verdicts(p, uu_safe, vv)
+                    verd = Q.asof_verdicts(verd, uu_safe, vv, m_cut, g.m)
+                need = live_lane & (verd == jnp.int8(-1))
+                uu2 = jnp.where(need, uu, jnp.int32(n_cap))
                 admit = None
                 if use_bfs_kernel:
                     admit = bfs_admit_plane_op(
-                        p, uu, vv, n_block=min(1024, max(8, n_cap)),
+                        p, jnp.minimum(uu2, jnp.int32(n_cap - 1)), vv,
+                        m_cut, g.m, n_block=min(1024, max(8, n_cap)),
                         q_block=min(128, chunk), interpret=interpret)
-                hit = Q.pruned_bfs(g, p, uu, vv, admit,
+                hit = Q.pruned_bfs(g, p, uu2, vv, admit, m_cut,
                                    n_cap=n_cap, max_iters=max_iters)
-                idx = jax.lax.dynamic_slice(order, (start,), (chunk,))
-                # scatter live lanes only; dead ones aim past the buffer
-                idx = jnp.where(live_lane, idx, jnp.int32(answers.shape[0]))
-                return answers.at[idx].set(hit, mode="drop")
-            return bfs_phase
+                return ((verd == jnp.int8(1)) & live_lane) | hit
+            return coalesced
 
         if self.mesh is not None:
             from repro.launch.sharding import reach_query_shardings
@@ -200,19 +304,19 @@ class QueryEngine:
         else:
             self._label_phase = jax.jit(label_phase)
 
-        # one jitted BFS executable per power-of-two chunk bucket, so a
-        # batch with 3 unknowns costs a 16-lane dispatch, not a 256-lane one
-        donate = (5,) if self.donate else ()
-        self._bfs_phases = {
-            c: jax.jit(make_bfs_phase(c), donate_argnums=donate)
-            for c in self._chunk_buckets()}
+        # one jitted coalesced executable per power-of-two chunk bucket, so
+        # a flush with 3 pooled unknowns costs a 16-lane dispatch, not a
+        # 256-lane one; totals beyond the cap loop at the cap so any flush
+        # still uses exactly ONE compiled BFS shape
+        self._coal_phases = {c: jax.jit(make_coalesced_phase(c))
+                             for c in self._chunk_buckets()}
 
-        def insert_impl(g, dl_in, dl_out, bl_in, bl_out, ns, nd):
+        def insert_impl(g, dl_in, dl_out, bl_in, bl_out, ns, nd, epoch):
             n_cap = dl_in.shape[0]
-            g2, a, b, c, d, _ = U.insert_and_update(
-                g, dl_in, dl_out, bl_in, bl_out, ns, nd,
+            g2, a, b, c, d, _, epoch2 = U.insert_and_update(
+                g, dl_in, dl_out, bl_in, bl_out, ns, nd, epoch,
                 n_cap=n_cap, max_iters=max_iters)
-            return g2, a, b, c, d, Q.pack_labels(a, b, c, d)
+            return g2, a, b, c, d, Q.pack_labels(a, b, c, d), epoch2
 
         donate_ins = (0, 1, 2, 3, 4) if self.donate else ()
         self._insert_fn = jax.jit(insert_impl, donate_argnums=donate_ins)
@@ -245,7 +349,13 @@ class QueryEngine:
 
     def submit(self, index: DBLIndex, u, v) -> _Pending:
         """Dispatch the fused label phase; BFS resolution is deferred until
-        ``resolve()`` so streams of batches pipeline on device."""
+        ``resolve()``/``flush()`` so streams of batches pipeline on device.
+
+        Submits against the engine's bound index are tagged with the current
+        snapshot epoch and edge count; they survive subsequent ``insert()``
+        calls and are later resolved against the newest snapshot with a
+        per-lane edge-count cutoff (exact as-of-submit answers) or without
+        one (latest consistency)."""
         uj, vj, q = self._pad_queries(u, v)
         if self.mesh is not None:
             from repro.launch.sharding import reach_query_shardings
@@ -254,91 +364,104 @@ class QueryEngine:
             vj = jax.device_put(vj, qsh)
         answers, order, u_c, v_c, n_unknown = self._label_phase(
             index.packed, uj, vj)
-        pend = _Pending(self, index, q, answers, order, u_c, v_c, n_unknown)
-        if self.donate:
-            self._outstanding = [r for r in self._outstanding
-                                 if r() is not None and r()._result is None]
-            self._outstanding.append(weakref.ref(pend))
+        if self._index is not None and index is self._index:
+            tag = dict(lineage=self._lineage, epoch=self.epoch,
+                       m_at_submit=self._m_now)
+        else:
+            tag = {}
+        pend = _Pending(self, index, q, answers, order, u_c, v_c, n_unknown,
+                        **tag)
+        if tag:
+            self._inflight = [r for r in self._inflight
+                              if r() is not None and r()._result is None]
+            self._inflight.append(weakref.ref(pend))
         return pend
 
+    def _current_lineage(self, p: _Pending) -> bool:
+        """True iff ``p`` was submitted against THIS engine's live lineage
+        (the engine-identity check matters: lineage counters are per-engine,
+        so a foreign engine's pending must fall back to its own index)."""
+        return (p.engine is self and p.lineage is not None
+                and p.lineage == self._lineage and self._index is not None)
+
     def _finish(self, pend: _Pending) -> np.ndarray:
-        nu = int(pend.n_unknown)         # the one host sync per batch
-        answers = pend.answers
-        index = pend.index
-        if nu > 0:
-            # right-size the chunk: a batch with 3 unknowns runs a 16-lane
-            # dispatch, not a bfs_chunk-lane one; overflow loops at the cap
-            # so any single batch still uses exactly ONE compiled BFS shape
-            chunk = (self.bfs_chunk if nu > self.bfs_chunk
-                     else self._bucket_for(nu))
-            fn = self._bfs_phases[chunk]
-            for start in range(0, nu, chunk):
-                answers = fn(index.graph, index.packed,
-                             pend.u_c, pend.v_c, pend.order,
-                             answers, pend.n_unknown, jnp.int32(start))
-                self.stats.bfs_dispatches += 1
-        out = np.asarray(answers)[:pend.q]
-        self.stats.queries += pend.q
-        self.stats.batches += 1
-        self.stats.bfs_answered += min(nu, pend.q)
-        self.stats.label_answered += pend.q - min(nu, pend.q)
-        return out
-
-    def flush(self, pendings) -> list:
-        """Resolve submitted batches together, coalescing their BFS residues.
-
-        Batches sharing an index snapshot pool their unknown lanes into one
-        right-sized padded chunk sequence, so K micro-batches cost ~one BFS
-        while-loop instead of K: each invocation pays a fixed dispatch cost
-        plus an iteration tail set by its slowest lane, so merging residues
-        is far cheaper than running them separately.  The compacted
-        endpoint/verdict buffers cross to the host to be pooled (bounded by
-        the padded batch sizes); the BFS itself runs on device."""
         results: dict[int, np.ndarray] = {}
-        groups: dict[int, list] = {}
+        self._finish_group([(0, pend)], results, self.consistency,
+                           self._current_lineage(pend))
+        return results[0]
+
+    def flush(self, pendings, *, consistency: str | None = None) -> list:
+        """Resolve submitted batches together, coalescing their BFS residues
+        ACROSS snapshot epochs.
+
+        Engine-bound pendings — even ones submitted before intervening
+        ``insert()`` calls — pool their unknown lanes into one right-sized
+        padded chunk sequence against the NEWEST index, so K micro-batches
+        spanning E epochs cost ~one BFS instead of K (or E): each dispatch
+        pays a fixed cost plus an iteration tail set by its slowest lane,
+        so merging residues is far cheaper than running them separately.
+        Per-lane edge-count cutoffs keep as-of-submit answers bitwise exact;
+        ``consistency="latest"`` lifts the cutoffs and answers every lane
+        against the newest snapshot instead.  The compacted endpoint
+        buffers cross to the host to be pooled (bounded by the padded batch
+        sizes); the re-check + BFS run on device."""
+        mode = select_consistency(consistency or self.consistency)
+        results: dict[int, np.ndarray] = {}
+        groups: dict[tuple, list] = {}
         for i, p in enumerate(pendings):
             if p._result is not None:
                 results[i] = p._result
                 continue
-            groups.setdefault(id(p.index.packed.dl_in), []).append((i, p))
-        for grp in groups.values():
-            self._finish_group(grp, results)
+            if self._current_lineage(p):
+                key = ("lineage", self._lineage)
+            else:
+                key = ("index", id(p.index.packed.dl_in))
+            groups.setdefault(key, []).append((i, p))
+        for key, grp in groups.items():
+            self._finish_group(grp, results, mode, key[0] == "lineage")
+        self.stats.flushes += 1
         return [results[i] for i in range(len(pendings))]
 
-    def _finish_group(self, grp, results):
+    def _finish_group(self, grp, results, mode, engine_group):
         infos = []
         for i, p in grp:
-            nu = min(int(p.n_unknown), p.q)
+            nu = min(int(p.n_unknown), p.q)   # the one host sync per batch
             infos.append((i, p, nu))
         total = sum(nu for _, _, nu in infos)
         hits_all = np.zeros(0, np.bool_)
         if total:
-            index = grp[0][1].index
+            index = self._index if engine_group else grp[0][1].index
             n_cap = index.packed.dl_in.shape[0]
             uu = np.concatenate([np.asarray(p.u_c)[:nu]
                                  for _, p, nu in infos if nu])
             vv = np.concatenate([np.asarray(p.v_c)[:nu]
                                  for _, p, nu in infos if nu])
+            if engine_group and mode == "as-of-submit":
+                cuts = np.concatenate([
+                    np.full(nu, p.m_at_submit, np.int32)
+                    for _, p, nu in infos if nu])
+                self.stats.stale_lanes += int((cuts < self._m_now).sum())
+            else:
+                # latest consistency / foreign snapshot group: every lane
+                # sees the group's full edge set and keeps the DL prune
+                cuts = np.full(total, Q.FRESH_CUT, np.int32)
             chunk = (self.bfs_chunk if total > self.bfs_chunk
                      else self._bucket_for(total))
             pad = -total % chunk
             if pad:
-                # dead lanes: out-of-range source -> empty frontier
+                # dead lanes: out-of-range source -> empty frontier; fresh
+                # cutoff so they never ride the stale path
                 uu = np.concatenate([uu, np.full(pad, n_cap, np.int32)])
                 vv = np.concatenate([vv, np.zeros(pad, np.int32)])
+                cuts = np.concatenate([cuts,
+                                       np.full(pad, Q.FRESH_CUT, np.int32)])
+            fn = self._coal_phases[chunk]
             hit_parts = []
             for start in range(0, total, chunk):
-                uu_j = jnp.asarray(uu[start:start + chunk])
-                vv_j = jnp.asarray(vv[start:start + chunk])
-                admit = None
-                if self.bfs_kernel:
-                    admit = bfs_admit_plane_op(
-                        index.packed, uu_j, vv_j,
-                        n_block=min(1024, max(8, n_cap)),
-                        q_block=min(128, chunk), interpret=self._interpret)
-                hit_parts.append(Q.pruned_bfs(
-                    index.graph, index.packed, uu_j, vv_j, admit,
-                    n_cap=n_cap, max_iters=self.max_iters))
+                hit_parts.append(fn(index.graph, index.packed,
+                                    jnp.asarray(uu[start:start + chunk]),
+                                    jnp.asarray(vv[start:start + chunk]),
+                                    jnp.asarray(cuts[start:start + chunk])))
                 self.stats.bfs_dispatches += 1
             # all chunks are enqueued before the first D2H forces a wait
             hits_all = np.concatenate([np.asarray(h)
@@ -373,41 +496,40 @@ class QueryEngine:
 
     # ------------------------------------------------------ bound serving
     def query(self, u, v, *, return_stats: bool = False):
-        if self.index is None:
+        if self._index is None:
             raise ValueError("engine has no bound index; use run()")
-        return self.run(self.index, u, v, return_stats=return_stats)
+        return self.run(self._index, u, v, return_stats=return_stats)
 
     def insert(self, new_src, new_dst) -> DBLIndex:
-        """Insert edges into the bound index (Alg 3).  With donation on
-        (TPU/GPU) the previous index's label buffers are consumed in place —
-        the engine owns its index; callers must not retain old references."""
-        if self.index is None:
+        """Insert edges into the bound index (Alg 3), bumping the snapshot
+        epoch.  Outstanding submits are NOT flushed: they are tagged with
+        their submit epoch and will be resolved against the newest snapshot
+        with per-lane cutoffs, so mixed insert/query streams no longer
+        serialize on index mutations.  With donation on (TPU/GPU) the
+        previous snapshot's label planes are consumed in place — the engine
+        owns its index; callers must not retain old references."""
+        if self._index is None:
             raise ValueError("engine has no bound index; use run()")
-        idx = self.index
-        if self.donate:
-            # resolve pendings that still reference the buffers we are
-            # about to donate (deferred-BFS handles from submit())
-            live = [r() for r in self._outstanding]
-            stale = [p for p in live
-                     if p is not None and p._result is None
-                     and p.index is idx]
-            if stale:
-                self.flush(stale)
-            self._outstanding = []
+        idx = self._index
         ns = jnp.asarray(np.asarray(new_src, np.int32))
         nd = jnp.asarray(np.asarray(new_dst, np.int32))
-        g2, a, b, c, d, packed = self._insert_fn(
-            idx.graph, idx.dl_in, idx.dl_out, idx.bl_in, idx.bl_out, ns, nd)
-        self.index = DBLIndex(g2, idx.landmarks, a, b, c, d, packed)
+        g2, a, b, c, d, packed, epoch2 = self._insert_fn(
+            idx.graph, idx.dl_in, idx.dl_out, idx.bl_in, idx.bl_out,
+            ns, nd, jnp.int32(self.epoch))
+        # direct field write: an insert advances the epoch WITHIN the
+        # current lineage (the property setter would start a new one)
+        self._index = DBLIndex(g2, idx.landmarks, a, b, c, d, packed, epoch2)
+        self.epoch += 1
+        self._m_now += int(ns.size)
         self.stats.inserts += int(ns.size)
-        return self.index
+        return self._index
 
     # ------------------------------------------------------ introspection
     def dispatch_shape_counts(self) -> dict:
         """Compiled-executable counts by phase (jit cache entries)."""
         return {"label": self._label_phase._cache_size(),
                 "bfs": sum(f._cache_size()
-                           for f in self._bfs_phases.values())}
+                           for f in self._coal_phases.values())}
 
     def dispatch_shapes(self) -> int:
         """Number of distinct compiled executables behind query dispatches."""
@@ -416,15 +538,18 @@ class QueryEngine:
 
     def warmup(self, index: DBLIndex, batch_sizes=(1,),
                bfs_buckets=None) -> "QueryEngine":
-        """Pre-compile label + BFS executables for the given batch sizes."""
+        """Pre-compile label + coalesced-BFS executables for the given
+        batch sizes (all-dead lanes: the BFS while-loop exits at once)."""
+        n_cap = index.packed.dl_in.shape[0]
         for q in batch_sizes:
-            pend = self.submit(index, np.zeros(q, np.int32),
-                               np.zeros(q, np.int32))
-            for chunk in (bfs_buckets or (self.bfs_chunk,)):
-                self._bfs_phases[self._bucket_for(chunk)](
-                    index.graph, index.packed, pend.u_c, pend.v_c,
-                    pend.order, jnp.asarray(np.asarray(pend.answers)),
-                    pend.n_unknown, jnp.int32(0))
+            self.submit(index, np.zeros(q, np.int32), np.zeros(q, np.int32))
+        for chunk in (bfs_buckets or (self.bfs_chunk,)):
+            c = self._bucket_for(chunk)
+            self._coal_phases[c](
+                index.graph, index.packed,
+                jnp.full((c,), n_cap, jnp.int32),
+                jnp.zeros((c,), jnp.int32),
+                jnp.full((c,), Q.FRESH_CUT, jnp.int32))
         return self
 
 

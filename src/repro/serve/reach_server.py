@@ -4,7 +4,20 @@ The serving analogue of the paper's query workload: interleaved batches of
 queries and edge insertions against one index.  All query traffic goes
 through the device-resident ``QueryEngine`` (fused label phase, compacted
 BFS chunks, persistent executables); insertions run the engine's donated
-Alg-3 path.  ``examples/dynamic_reachability.py`` drives it end to end."""
+Alg-3 path and bump the snapshot epoch WITHOUT draining in-flight queries.
+
+Two serving surfaces:
+
+- synchronous ``query()`` — submit + resolve in one call;
+- pipelined ``submit()`` / ``flush()`` — micro-batches accumulate across
+  ``insert()`` calls and the flush coalesces their BFS residues across
+  snapshot epochs into one dispatch sequence.  ``consistency`` picks the
+  answer semantics: ``"as-of-submit"`` (each query answered against the
+  exact snapshot it observed — per-lane edge-count cutoffs keep this
+  bitwise exact) or ``"latest"`` (still-unknown lanes answered against the
+  newest snapshot; label positives are monotone so they never change).
+
+``examples/dynamic_reachability.py`` drives it end to end."""
 from __future__ import annotations
 
 import time
@@ -22,20 +35,24 @@ class ServeStats:
     label_answered: int = 0
     bfs_answered: int = 0
     inserts: int = 0
+    flushes: int = 0
     query_s: float = 0.0
     insert_s: float = 0.0
+    flush_s: float = 0.0
 
     def as_dict(self):
         rho = self.label_answered / max(self.queries, 1)
         return {"queries": self.queries, "rho": rho,
-                "inserts": self.inserts, "query_s": self.query_s,
-                "insert_s": self.insert_s}
+                "inserts": self.inserts, "flushes": self.flushes,
+                "query_s": self.query_s, "insert_s": self.insert_s,
+                "flush_s": self.flush_s}
 
 
 class ReachabilityServer:
     def __init__(self, index: DBLIndex | None, *, bfs_chunk: int = 256,
                  max_iters: int = 256, backend: str = "auto",
-                 mesh=None, engine: QueryEngine | None = None):
+                 mesh=None, engine: QueryEngine | None = None,
+                 consistency: str = "as-of-submit"):
         if engine is not None:
             # a supplied engine carries its own configuration; conflicting
             # per-server knobs would be silently ignored, so reject them
@@ -50,15 +67,21 @@ class ReachabilityServer:
         else:
             self.engine = QueryEngine(
                 index, bfs_chunk=bfs_chunk, max_iters=max_iters,
-                backend=backend, mesh=mesh)
+                backend=backend, mesh=mesh, consistency=consistency)
         if self.engine.index is None:
             raise ValueError("server needs an index (directly or via engine)")
         self.stats = ServeStats()
+        self._pending = []
 
     @property
     def index(self) -> DBLIndex:
         return self.engine.index
 
+    @property
+    def epoch(self) -> int:
+        return self.engine.epoch
+
+    # ------------------------------------------------------- synchronous
     def query(self, u, v) -> np.ndarray:
         t = time.perf_counter()
         ans, info = self.engine.query(np.asarray(u, np.int32),
@@ -70,7 +93,40 @@ class ReachabilityServer:
         self.stats.label_answered += len(ans) - info["n_bfs"]
         return ans
 
+    # --------------------------------------------------------- pipelined
+    def submit(self, u, v):
+        """Enqueue a query micro-batch against the current snapshot epoch;
+        the label phase runs now, the BFS residue rides the next flush —
+        possibly across intervening ``insert()`` calls."""
+        t = time.perf_counter()
+        pend = self.engine.submit(self.engine.index,
+                                  np.asarray(u, np.int32),
+                                  np.asarray(v, np.int32))
+        self._pending.append(pend)
+        self.stats.query_s += time.perf_counter() - t
+        return pend
+
+    def flush(self, *, consistency: str | None = None) -> list:
+        """Resolve every outstanding micro-batch in one epoch-coalesced
+        dispatch sequence; returns their answers in submission order."""
+        t = time.perf_counter()
+        # flush BEFORE clearing the queue: if the engine rejects the
+        # consistency mode, the submitted batches must stay enqueued
+        pending = self._pending
+        outs = self.engine.flush(pending, consistency=consistency)
+        self._pending = []
+        self.stats.flush_s += time.perf_counter() - t
+        self.stats.flushes += 1
+        for pend, ans in zip(pending, outs):
+            nu = min(int(pend.n_unknown), pend.q)
+            self.stats.queries += len(ans)
+            self.stats.bfs_answered += nu
+            self.stats.label_answered += len(ans) - nu
+        return outs
+
     def insert(self, src, dst):
+        """Alg-3 insert: bumps the snapshot epoch; outstanding submits stay
+        in flight and resolve with exact as-of-submit cutoffs at flush."""
         t = time.perf_counter()
         idx = self.engine.insert(np.asarray(src, np.int32),
                                  np.asarray(dst, np.int32))
@@ -83,4 +139,6 @@ class ReachabilityServer:
         d = self.engine.stats.as_dict()
         d["dispatch_shapes"] = self.engine.dispatch_shapes()
         d["backend"] = self.engine.backend
+        d["epoch"] = self.engine.epoch
+        d["consistency"] = self.engine.consistency
         return d

@@ -13,8 +13,13 @@ with the same decorator surface the suite uses:
 
 The fallback draws ``max_examples`` values per strategy from a PRNG seeded by
 the test's qualified name (CRC32 — stable across processes, unlike ``hash``),
-so failures reproduce run-to-run.  Only the strategies the suite actually
-uses are implemented; extend ``_FallbackStrategies`` as tests grow.
+so failures reproduce run-to-run.  A ``HYP_SEED`` environment variable is
+mixed into that seed, so a CI failure under the fallback reproduces locally
+with ``HYP_SEED=<value from the failure note> pytest ...`` even when CI runs
+a different example order; every failure is re-raised with a note naming the
+seed, the example index, and the drawn arguments.  Only the strategies the
+suite actually uses are implemented; extend ``_FallbackStrategies`` as tests
+grow.
 """
 from __future__ import annotations
 
@@ -26,6 +31,8 @@ except ModuleNotFoundError:
 
     import functools
     import inspect
+    import os
+    import sys
     import zlib
 
     import numpy as np
@@ -86,12 +93,23 @@ except ModuleNotFoundError:
             def wrapper(*args, **kwargs):
                 n = getattr(wrapper, "_fallback_max_examples",
                             _DEFAULT_MAX_EXAMPLES)
-                seed = zlib.crc32(fn.__qualname__.encode())
+                hyp_seed = int(os.environ.get("HYP_SEED", "0"))
+                seed = (zlib.crc32(fn.__qualname__.encode()), hyp_seed)
                 rng = np.random.default_rng(seed)
-                for _ in range(n):
+                for i in range(n):
                     drawn = {name: s.draw(rng)
                              for name, s in zip(drawn_names, strategies)}
-                    fn(*args, **kwargs, **drawn)
+                    try:
+                        fn(*args, **kwargs, **drawn)
+                    except Exception as e:  # reproduce-locally breadcrumb
+                        note = (f"[tests._hyp fallback] example #{i} of "
+                                f"{fn.__qualname__} with {drawn!r}; "
+                                f"reproduce with HYP_SEED={hyp_seed}")
+                        if hasattr(e, "add_note"):        # py >= 3.11
+                            e.add_note(note)
+                        else:  # py 3.10: keep the breadcrumb visible
+                            print(note, file=sys.stderr)
+                        raise
             # hide the drawn parameters from pytest's fixture resolution;
             # leading params remain visible as fixtures
             wrapper.__signature__ = sig.replace(

@@ -117,28 +117,80 @@ def test_engine_insert_matches_index_insert():
     np.testing.assert_array_equal(eng.query(u, v), R[u, v])
 
 
-def test_insert_flushes_outstanding_pendings():
-    """With donation on, insert() must resolve deferred submits that still
-    reference the old index's buffers before those buffers are consumed.
-    (On CPU donation is a no-op at the XLA level, but the flush-before-
-    donate bookkeeping runs identically.)"""
+def test_insert_defers_pendings_and_resolves_as_of_submit():
+    """insert() must NOT force outstanding submits to resolve: they stay in
+    flight across the epoch bump and later resolve against the NEWEST
+    snapshot with a per-lane edge-count cutoff, bitwise equal to their
+    submit-epoch oracle.  (The old snapshot's buffers are never touched
+    again, so a donated insert is free to consume them.)"""
     idx, src, dst = _power_law_index(n=128, m=500, m_extra=64, max_iters=64)
     eng = QueryEngine(idx, bfs_chunk=64, max_iters=64, donate=True)
     rng = np.random.default_rng(8)
     u = rng.integers(0, 128, 600).astype(np.int32)
     v = rng.integers(0, 128, 600).astype(np.int32)
     pend = eng.submit(eng.index, u, v)
+    assert pend.epoch == 0 and pend.m_at_submit == 500
     ns = rng.integers(0, 128, 8).astype(np.int32)
     nd = rng.integers(0, 128, 8).astype(np.int32)
     eng.insert(ns, nd)
-    # the pending was resolved against its submission-time snapshot
-    assert pend._result is not None
+    # the insert did NOT serialize the pipeline...
+    assert pend._result is None and eng.epoch == 1
+    # ...and resolution is still exact for the submission-time snapshot
     R_old = reach_oracle(128, src, dst)
     np.testing.assert_array_equal(pend.resolve(), R_old[u, v])
     # post-insert queries see the new graph
     R_new = reach_oracle(128, np.concatenate([src, ns]),
                          np.concatenate([dst, nd]))
     np.testing.assert_array_equal(eng.query(u, v), R_new[u, v])
+    # latest consistency on the same deferred stream answers every
+    # still-unknown lane at the flush epoch instead
+    pend2 = eng.submit(eng.index, u, v)
+    ns2 = rng.integers(0, 128, 8).astype(np.int32)
+    nd2 = rng.integers(0, 128, 8).astype(np.int32)
+    eng.insert(ns2, nd2)
+    out2 = eng.flush([pend2], consistency="latest")[0]
+    R_new2 = reach_oracle(128, np.concatenate([src, ns, ns2]),
+                          np.concatenate([dst, nd, nd2]))
+    assert (out2 >= R_new[u, v]).all() and (out2 <= R_new2[u, v]).all()
+
+
+def test_mixed_epoch_10k_stream_dispatch_shapes():
+    """Dispatch-shape regression for epoch coalescing: a 10k-query stream
+    whose batches span FOUR snapshot epochs and resolve in cross-epoch
+    flushes must still compile <=2 BFS dispatch shapes (one coalesced
+    chunk executable; coalescing must not reintroduce shape churn), and
+    answers must stay bitwise exact per submit epoch."""
+    idx, src, dst = _power_law_index(m_extra=256)
+    rng = np.random.default_rng(11)
+    eng = QueryEngine(idx, bfs_chunk=256, max_iters=64)
+    cur_s, cur_d = list(src), list(dst)
+    pendings, snapshots = [], []
+    for _ in range(3):
+        for q in (2000, 1500):
+            u = rng.integers(0, 256, q).astype(np.int32)
+            v = rng.integers(0, 256, q).astype(np.int32)
+            pendings.append((eng.submit(eng.index, u, v), u, v))
+            snapshots.append((list(cur_s), list(cur_d)))
+        ns = rng.integers(0, 256, 32).astype(np.int32)
+        nd = rng.integers(0, 256, 32).astype(np.int32)
+        eng.insert(ns, nd)
+        cur_s += ns.tolist()
+        cur_d += nd.tolist()
+    u = rng.integers(0, 256, 2500).astype(np.int32)
+    v = rng.integers(0, 256, 2500).astype(np.int32)
+    pendings.append((eng.submit(eng.index, u, v), u, v))
+    snapshots.append((list(cur_s), list(cur_d)))
+    assert sum(p.q for p, _, _ in pendings) >= 10_000
+    outs = eng.flush([p for p, _, _ in pendings])
+    assert eng.stats.stale_lanes > 0, \
+        "stream must exercise cross-epoch residue lanes"
+    counts = eng.dispatch_shape_counts()
+    assert counts["bfs"] <= 2, (
+        f"mixed-epoch coalescing reintroduced BFS shape churn: {counts}")
+    assert counts["label"] <= 3
+    for (pend, u, v), (s, d), out in zip(pendings, snapshots, outs):
+        R = reach_oracle(256, np.asarray(s), np.asarray(d))
+        np.testing.assert_array_equal(out, R[u, v])
 
 
 def test_server_engine_config_conflicts_rejected():
@@ -163,8 +215,14 @@ def test_engine_empty_and_errors():
         QueryEngine(backend="cuda")   # unknown backend
     with pytest.raises(ValueError):
         idx.query([0], [1], driver="nope")
+    with pytest.raises(ValueError):
+        QueryEngine(consistency="eventual")   # unknown consistency mode
+    with pytest.raises(ValueError):
+        eng.flush([], consistency="nope")
     assert select_backend("jnp") == "jnp"
     assert select_backend("auto") in ("jnp", "pallas")
+    # "latest-snapshot" is accepted as an alias for "latest"
+    assert QueryEngine(consistency="latest-snapshot").consistency == "latest"
 
 
 def test_engine_for_is_memoized():
@@ -190,6 +248,91 @@ def test_server_round_trip_and_stats():
     assert 0.0 <= s["rho"] <= 1.0
     assert es["dispatch_shapes"] <= 2
     assert es["backend"] in ("jnp", "pallas")
+
+
+def test_rebind_resolves_inflight_pendings_first():
+    """Re-binding the engine to a new index must resolve in-flight submits
+    from the outgoing lineage against THAT lineage (their cutoffs still
+    apply) before letting go of it — under donation the old lineage's
+    buffers are unreachable afterwards."""
+    idx, src, dst = _power_law_index(n=128, m=500, m_extra=64, max_iters=64)
+    idx2, src2, dst2 = _power_law_index(n=128, m=400, m_extra=8, max_iters=64)
+    eng = QueryEngine(idx, bfs_chunk=64, max_iters=64, donate=True)
+    rng = np.random.default_rng(13)
+    u = rng.integers(0, 128, 600).astype(np.int32)
+    v = rng.integers(0, 128, 600).astype(np.int32)
+    pend = eng.submit(eng.index, u, v)
+    ns = rng.integers(0, 128, 8).astype(np.int32)
+    nd = rng.integers(0, 128, 8).astype(np.int32)
+    eng.insert(ns, nd)                    # epoch bump, pend stays in flight
+    assert pend._result is None
+    eng.index = idx2                      # re-bind -> pend resolved now
+    assert pend._result is not None
+    R_old = reach_oracle(128, src, dst)
+    np.testing.assert_array_equal(pend.resolve(), R_old[u, v])
+    np.testing.assert_array_equal(
+        eng.query(u, v), reach_oracle(128, src2, dst2)[u, v])
+
+
+def test_foreign_engine_flush_uses_pendings_own_index():
+    """A pending flushed through a DIFFERENT engine must never be grouped
+    into that engine's lineage (per-engine lineage counters collide) — it
+    resolves against its own submit-time index."""
+    idx1, src1, dst1 = _power_law_index(n=128, m=500, m_extra=8, max_iters=64)
+    idx2, _, _ = _power_law_index(n=128, m=400, m_extra=8, max_iters=64)
+    eng1 = QueryEngine(idx1, bfs_chunk=64, max_iters=64)
+    eng2 = QueryEngine(idx2, bfs_chunk=64, max_iters=64)
+    rng = np.random.default_rng(14)
+    u = rng.integers(0, 128, 600).astype(np.int32)
+    v = rng.integers(0, 128, 600).astype(np.int32)
+    pend = eng1.submit(eng1.index, u, v)
+    out = eng2.flush([pend])[0]           # wrong engine on purpose
+    R1 = reach_oracle(128, src1, dst1)
+    np.testing.assert_array_equal(out, R1[u, v])
+
+
+def test_server_flush_keeps_queue_on_bad_consistency():
+    idx, src, dst = _power_law_index(n=64, m=160, m_extra=8, max_iters=40)
+    srv = ReachabilityServer(idx, bfs_chunk=32, max_iters=40)
+    rng = np.random.default_rng(15)
+    u = rng.integers(0, 64, 100).astype(np.int32)
+    v = rng.integers(0, 64, 100).astype(np.int32)
+    srv.submit(u, v)
+    with pytest.raises(ValueError):
+        srv.flush(consistency="not-a-mode")
+    outs = srv.flush()                    # queue survived the bad call
+    assert len(outs) == 1
+    np.testing.assert_array_equal(outs[0], reach_oracle(64, src, dst)[u, v])
+
+
+def test_server_pipelined_submit_flush_across_inserts():
+    """ReachabilityServer's pipelined surface: submits accumulate across
+    insert() epoch bumps and one flush() resolves them as-of-submit."""
+    idx, src, dst = _power_law_index(n=128, m=500, m_extra=64, max_iters=64)
+    srv = ReachabilityServer(idx, bfs_chunk=64, max_iters=64)
+    rng = np.random.default_rng(9)
+    batches, snapshots = [], []
+    cur_s, cur_d = list(src), list(dst)
+    for _ in range(3):
+        u = rng.integers(0, 128, 700).astype(np.int32)
+        v = rng.integers(0, 128, 700).astype(np.int32)
+        srv.submit(u, v)
+        batches.append((u, v))
+        snapshots.append((list(cur_s), list(cur_d)))
+        ns = rng.integers(0, 128, 8).astype(np.int32)
+        nd = rng.integers(0, 128, 8).astype(np.int32)
+        srv.insert(ns, nd)
+        cur_s += ns.tolist()
+        cur_d += nd.tolist()
+    assert srv.epoch == 3
+    outs = srv.flush()
+    for (u, v), (s, d), out in zip(batches, snapshots, outs):
+        R = reach_oracle(128, np.asarray(s), np.asarray(d))
+        np.testing.assert_array_equal(out, R[u, v])
+    s = srv.stats.as_dict()
+    assert s["queries"] == 2100 and s["flushes"] == 1
+    es = srv.engine_stats()
+    assert es["epoch"] == 3 and es["consistency"] == "as-of-submit"
 
 
 def test_warmup_precompiles():

@@ -152,6 +152,102 @@ def test_bfs_prune_parity_random_shapes(seed, wd, wb, n, q):
                                   np.asarray(want))
 
 
+# -------------------------------------- per-lane edge-count cutoff sweeps
+def _draw_cuts(rng, q, m_total):
+    """Randomized per-lane cutoffs with the degenerate cases mixed in:
+    cutoff=0 (every lane stale) and cutoff=m_total (every lane fresh)."""
+    mode = rng.integers(0, 4)
+    if mode == 0:
+        return np.zeros(q, np.int32)                      # all stale
+    if mode == 1:
+        return np.full(q, m_total, np.int32)              # all fresh
+    if mode == 2:
+        return rng.integers(0, m_total + 1, q).astype(np.int32)
+    # mix: exact boundary values sprinkled into random cuts
+    cuts = rng.integers(0, m_total + 1, q).astype(np.int32)
+    cuts[:: max(1, q // 7)] = rng.choice([0, m_total])
+    return cuts
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 3), st.integers(1, 3),
+       st.sampled_from((3, 37, 100, 127, 130, 250)),
+       st.sampled_from((5, 33, 100, 129, 256)))
+@settings(max_examples=25, deadline=None)
+def test_bfs_prune_cutoff_parity_random_shapes(seed, wd, wb, n, q):
+    """bfs_admit_plane with randomized per-lane edge-count cutoffs (incl.
+    cutoff=0 and cutoff=full) == admit_ref, over non-block-multiple n/Q.
+    Stale lanes must drop exactly the DL-intersection term."""
+    rng = np.random.default_rng(seed)
+    blin_all = _rand_words(rng, (wb, n))
+    blout_all = _rand_words(rng, (wb, n))
+    dlin_all = _rand_words(rng, (wd, n))
+    blin_v = _rand_words(rng, (wb, q))
+    blout_v = _rand_words(rng, (wb, q))
+    dlo_u = _rand_words(rng, (wd, q))
+    m_total = int(rng.integers(1, 500))
+    cuts = _draw_cuts(rng, q, m_total)
+    want = admit_ref(blin_all, blout_all, dlin_all, blin_v, blout_v, dlo_u,
+                     jnp.asarray(cuts), jnp.int32(m_total))
+    # degenerate-cutoff laws vs the cutoff-free plane
+    base = admit_ref(blin_all, blout_all, dlin_all, blin_v, blout_v, dlo_u)
+    if (cuts >= m_total).all():
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(base))
+    assert bool(jnp.all(want | ~base)), \
+        "cutoff admit plane must be a superset of the full plane"
+
+    def pad(x, mult, axis, value=0):
+        rem = (-x.shape[axis]) % mult
+        cfg = [(0, 0)] * x.ndim
+        cfg[axis] = (0, rem)
+        return jnp.pad(x, cfg, constant_values=value)
+
+    nb, qb = 64, 64
+    got = bfs_admit_plane(
+        pad(blin_all, nb, 1), pad(blout_all, nb, 1), pad(dlin_all, nb, 1),
+        pad(blin_v, qb, 1), pad(blout_v, qb, 1), pad(dlo_u, qb, 1),
+        pad(jnp.asarray(cuts).reshape(1, q), qb, 1, value=2**31 - 1),
+        jnp.full((1, 1), m_total, jnp.int32),
+        n_block=nb, q_block=qb, interpret=True)[:n, :q]
+    np.testing.assert_array_equal(np.asarray(got).astype(bool),
+                                  np.asarray(want))
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4), st.integers(1, 4),
+       st.sampled_from(_ODD_QS), st.sampled_from((128, 256)))
+@settings(max_examples=20, deadline=None)
+def test_dbl_query_cutoff_parity_random_shapes(seed, wd, wb, q, q_block):
+    """dbl_query verdicts with per-lane edge-count cutoffs == verdict_ref:
+    stale label positives downgrade to unknown, negatives and self-queries
+    survive any cutoff; cutoff=full is bitwise the plain kernel."""
+    rng = np.random.default_rng(seed)
+    n = 50
+    p = _rand_packed_labels(rng, n, wd, wb)
+    u = jnp.asarray(rng.integers(0, n, q).astype(np.int32))
+    v = jnp.asarray(rng.integers(0, n, q).astype(np.int32))
+    m_total = int(rng.integers(1, 300))
+    cuts = _draw_cuts(rng, q, m_total)
+    from repro.kernels.dbl_query.ops import verdicts_device
+    got = query_verdicts(p, u, v, q_block=q_block, interpret=True)
+    got_cut = np.asarray(verdicts_device(
+        p, u, v, jnp.asarray(cuts), jnp.int32(m_total),
+        q_block=q_block, interpret=True))
+    streams = [p.dl_out[u].T, p.dl_in[v].T, p.dl_out[v].T, p.dl_in[u].T,
+               p.bl_in[u].T, p.bl_in[v].T, p.bl_out[v].T, p.bl_out[u].T]
+    want = np.asarray(verdict_ref(
+        streams[0], streams[1], streams[2], streams[3],
+        streams[4], streams[5], streams[7], streams[6], (u == v),
+        jnp.asarray(cuts), jnp.int32(m_total)))
+    np.testing.assert_array_equal(got_cut, want)
+    if (cuts >= m_total).all():
+        np.testing.assert_array_equal(got_cut, np.asarray(got))
+    # downgrade law vs the cutoff-free kernel: only +1 -> -1 on stale lanes
+    stale = (cuts < m_total) & np.asarray(u != v)
+    base = np.asarray(got)
+    np.testing.assert_array_equal(got_cut[~stale], base[~stale])
+    np.testing.assert_array_equal(
+        got_cut[stale], np.where(base[stale] == 1, -1, base[stale]))
+
+
 @given(st.integers(0, 2**31 - 1), st.sampled_from((45, 107, 200)))
 @settings(max_examples=8, deadline=None)
 def test_bfs_prune_ops_random_graph_sizes(seed, q):
@@ -164,4 +260,23 @@ def test_bfs_prune_ops_random_graph_sizes(seed, q):
     v = jnp.asarray(rng.integers(0, n, q).astype(np.int32))
     got = admit_plane(idx.packed, u, v, n_block=32, q_block=32, interpret=True)
     want = Q._admit_plane(idx.packed, u, v, n)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from((17, 64, 119)))
+@settings(max_examples=8, deadline=None)
+def test_bfs_prune_ops_cutoff_matches_core_dl_gate(seed, q):
+    """End-to-end on a real index: the kernel wrapper's per-lane cutoff
+    equals core ``_admit_plane`` with the equivalent per-lane DL gate."""
+    rng = np.random.default_rng(seed)
+    n, src, dst = random_graph(rng, n_max=50, m_max=200)
+    g = make_graph(src, dst, n)
+    idx = DBLIndex.build(g, n_cap=n, k=min(8, n), k_prime=8, max_iters=n + 2)
+    u = jnp.asarray(rng.integers(0, n, q).astype(np.int32))
+    v = jnp.asarray(rng.integers(0, n, q).astype(np.int32))
+    m_total = len(src)
+    cuts = jnp.asarray(_draw_cuts(rng, q, m_total))
+    got = admit_plane(idx.packed, u, v, cuts, jnp.int32(m_total),
+                      n_block=32, q_block=32, interpret=True)
+    want = Q._admit_plane(idx.packed, u, v, n, dl_on=cuts >= m_total)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -1,0 +1,203 @@
+"""Metamorphic monotonicity suite for snapshot-epoch serving.
+
+Insert-only updates make reachability *monotone*: once reach(u, v) is TRUE
+it stays TRUE at every later snapshot epoch.  These property-based stream
+tests pin the two consistency contracts of the epoch-coalescing QueryEngine
+against that invariant and against the dense transitive-closure oracle:
+
+(a) monotonicity — any pair TRUE at epoch e is TRUE at every epoch > e;
+(b) coalesced flushes — batches submitted at different epochs and resolved
+    by ONE cross-epoch flush must equal the oracle evaluated at each
+    query's *submit* epoch ("as-of-submit", bitwise), and in "latest" mode
+    must equal the deterministic latest-resolution oracle (submit-epoch
+    label verdicts, still-unknown lanes answered at the flush epoch) while
+    staying inside the monotone sandwich R_submit <= ans <= R_latest;
+    including streams whose insert batches merge SCCs (reversed edges).
+
+Shapes are pinned (fixed n_cap / m_cap / batch sizes) and one engine is
+shared module-wide, so the jitted executables compile once and the >=200
+generated examples run at full speed; only edge *content* varies."""
+import numpy as np
+
+from repro.core import DBLIndex, make_graph
+from repro.core import query as Q
+from repro.serve.engine import QueryEngine
+from tests._hyp import given, settings, st
+from tests.conftest import reach_oracle
+
+N = 16            # vertices (fixed -> fixed label-plane shapes)
+M0 = 24           # initial edges
+BATCH = 4         # edges per insert batch
+ROUNDS = 3        # insert batches per stream (=> 4 snapshot epochs)
+M_CAP = M0 + BATCH * ROUNDS
+MAX_ITERS = N + 2
+K = 3             # few landmarks -> a real BFS residue on most streams
+
+# one engine for every example: bfs_chunk=16 has a single chunk bucket, so
+# the whole suite runs on exactly two compiled dispatch shapes
+ENG = QueryEngine(None, bfs_chunk=16, max_iters=MAX_ITERS)
+
+
+def _all_pairs():
+    u, v = np.meshgrid(np.arange(N), np.arange(N), indexing="ij")
+    return u.ravel().astype(np.int32), v.ravel().astype(np.int32)
+
+
+U_ALL, V_ALL = _all_pairs()
+
+
+def _build(src, dst):
+    g = make_graph(src, dst, N, m_cap=M_CAP)
+    return DBLIndex.build(g, n_cap=N, k=K, k_prime=K, max_iters=MAX_ITERS)
+
+
+def _random_stream(seed, *, scc_merge=False):
+    """(initial edges, per-round insert batches) for one generated stream."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, N, M0).astype(np.int32)
+    dst = rng.integers(0, N, M0).astype(np.int32)
+    batches = []
+    cur_s, cur_d = list(src), list(dst)
+    for _ in range(ROUNDS):
+        if scc_merge:
+            picks = rng.integers(0, len(cur_s), BATCH)
+            ns = np.asarray([cur_d[i] for i in picks], np.int32)  # reversed
+            nd = np.asarray([cur_s[i] for i in picks], np.int32)
+        else:
+            ns = rng.integers(0, N, BATCH).astype(np.int32)
+            nd = rng.integers(0, N, BATCH).astype(np.int32)
+        batches.append((ns, nd))
+        cur_s += ns.tolist()
+        cur_d += nd.tolist()
+    return src, dst, batches
+
+
+def _drive_coalesced(src, dst, batches):
+    """Submit all-pairs at every epoch, insert between, NEVER flush until
+    the end — the maximal cross-epoch coalescing stream.  Returns the
+    pendings plus the edge lists visible at each submit epoch."""
+    ENG.index = _build(src, dst)
+    cur_s, cur_d = list(src), list(dst)
+    pendings, snapshots = [], []
+    for ns, nd in batches:
+        pendings.append(ENG.submit(ENG.index, U_ALL, V_ALL))
+        snapshots.append((list(cur_s), list(cur_d)))
+        ENG.insert(ns, nd)
+        cur_s += ns.tolist()
+        cur_d += nd.tolist()
+    pendings.append(ENG.submit(ENG.index, U_ALL, V_ALL))
+    snapshots.append((list(cur_s), list(cur_d)))
+    return pendings, snapshots
+
+
+# ------------------------------------------------------- (a) monotonicity
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=60, deadline=None)
+def test_true_at_epoch_e_stays_true_forever(seed):
+    """Engine answers across successive epochs: TRUE never reverts, and each
+    epoch equals the oracle on its own edge set."""
+    src, dst, batches = _random_stream(seed)
+    ENG.index = _build(src, dst)
+    cur_s, cur_d = list(src), list(dst)
+    prev = None
+    for r in range(ROUNDS + 1):
+        ans = ENG.query(U_ALL, V_ALL)
+        R = reach_oracle(N, np.asarray(cur_s), np.asarray(cur_d))
+        np.testing.assert_array_equal(ans, R[U_ALL, V_ALL])
+        if prev is not None:
+            assert (ans >= prev).all(), \
+                "a pair TRUE at an earlier epoch reverted to FALSE"
+        prev = ans
+        if r < ROUNDS:
+            ns, nd = batches[r]
+            ENG.insert(ns, nd)
+            cur_s += ns.tolist()
+            cur_d += nd.tolist()
+
+
+# ------------------------------------- (b) coalesced flush, as-of-submit
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=80, deadline=None)
+def test_coalesced_flush_equals_submit_epoch_oracle(seed):
+    """One flush resolves batches spanning every epoch of the stream; each
+    batch must equal the transitive-closure oracle at ITS submit epoch."""
+    src, dst, batches = _random_stream(seed)
+    pendings, snapshots = _drive_coalesced(src, dst, batches)
+    outs = ENG.flush(pendings)                      # as-of-submit default
+    for (s, d), out in zip(snapshots, outs):
+        R = reach_oracle(N, np.asarray(s), np.asarray(d))
+        np.testing.assert_array_equal(
+            out, R[U_ALL, V_ALL],
+            err_msg="as-of-submit coalesced flush diverged from the "
+                    "submit-epoch oracle")
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_scc_merge_cascades_across_epochs(seed):
+    """Insert batches built from REVERSED existing edges collapse paths into
+    SCCs — the cascade case DBL handles without DAG maintenance.  Epoch
+    coalescing must stay exact through the merges."""
+    src, dst, batches = _random_stream(seed, scc_merge=True)
+    pendings, snapshots = _drive_coalesced(src, dst, batches)
+    outs = ENG.flush(pendings)
+    for (s, d), out in zip(snapshots, outs):
+        R = reach_oracle(N, np.asarray(s), np.asarray(d))
+        np.testing.assert_array_equal(out, R[U_ALL, V_ALL])
+
+
+# --------------------------------------- (b) coalesced flush, latest mode
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_latest_mode_oracle_and_monotone_sandwich(seed):
+    """"latest" consistency: submit-time label verdicts are kept (positives
+    are monotone, negatives valid at their snapshot), still-unknown lanes
+    are answered at the flush epoch.  Answers must be bitwise equal to that
+    deterministic oracle and sit inside R_submit <= ans <= R_latest."""
+    src, dst, batches = _random_stream(seed)
+    ENG.index = _build(src, dst)
+    cur_s, cur_d = list(src), list(dst)
+    pendings, verdicts, snapshots = [], [], []
+    for ns, nd in batches:
+        verdicts.append(np.asarray(Q.label_verdicts(
+            ENG.index.packed, U_ALL, V_ALL)))       # submit-epoch labels
+        pendings.append(ENG.submit(ENG.index, U_ALL, V_ALL))
+        snapshots.append((list(cur_s), list(cur_d)))
+        ENG.insert(ns, nd)
+        cur_s += ns.tolist()
+        cur_d += nd.tolist()
+    outs = ENG.flush(pendings, consistency="latest")
+    R_latest = reach_oracle(N, np.asarray(cur_s), np.asarray(cur_d))
+    for (s, d), verd, out in zip(snapshots, verdicts, outs):
+        R_submit = reach_oracle(N, np.asarray(s), np.asarray(d))
+        want = np.where(verd == 1, True,
+                        np.where(verd == 0, False,
+                                 R_latest[U_ALL, V_ALL]))
+        np.testing.assert_array_equal(
+            out, want, err_msg="latest-mode flush diverged from the "
+                               "deterministic latest-resolution oracle")
+        assert (out >= R_submit[U_ALL, V_ALL]).all(), \
+            "latest-mode answer dropped a submit-epoch TRUE (monotone floor)"
+        assert (out <= R_latest[U_ALL, V_ALL]).all(), \
+            "latest-mode answer exceeded the flush-epoch closure (ceiling)"
+
+
+# ------------------------------------------- host-driver differential
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_coalesced_flush_matches_host_driver_per_epoch(seed):
+    """Bitwise differential against the seed host driver: the coalesced
+    as-of-submit flush equals ``driver="host"`` run on a functional mirror
+    of each submit-epoch index."""
+    src, dst, batches = _random_stream(seed)
+    pendings, _ = _drive_coalesced(src, dst, batches)
+    outs = ENG.flush(pendings)
+    idx_f = _build(src, dst)                         # functional mirror
+    for r, out in enumerate(outs):
+        host = idx_f.query(U_ALL, V_ALL, bfs_chunk=16, max_iters=MAX_ITERS,
+                           driver="host")
+        np.testing.assert_array_equal(
+            out, np.asarray(host),
+            err_msg=f"epoch {r}: coalesced engine diverged from host driver")
+        if r < len(batches):
+            idx_f = idx_f.insert_edges(*batches[r], max_iters=MAX_ITERS)

@@ -224,16 +224,126 @@ def epoch_stream(bg, *, rounds: int = 8, queries_per_round: int = 4,
     }
 
 
+def deletion_stream(bg, *, rounds: int = 8, queries_per_round: int = 2,
+                    insert_b: int = 32, delete_b: int = 24,
+                    repeats: int = 3, seed: int = 21):
+    """Fully-dynamic mixed insert/delete/query stream: lazy tombstones vs
+    EAGER full label rebuild after every delete batch.
+
+    Both runs see the identical op stream.  The eager baseline is what a
+    scheme without the verdict-downgrade rule must do to stay correct:
+    recompute labels (Alg 1 over live edges) on every delete.  The lazy run
+    tombstones in O(mask) work, serves queries in dirty mode (BL negatives
+    from labels, the residue on the live-edge BFS with the DL prune off),
+    and rebuilds ONCE at the end of the stream — the rebuild cost amortizes
+    across the whole dirty window instead of being paid per delete batch.
+    Answers are checked bitwise between the two modes (both are exact for
+    the live edge set at every point)."""
+    idx0 = bg.index(m_extra=rounds * insert_b + insert_b)
+    rng = np.random.default_rng(seed)
+    sizes = [2048, 512, 1024, 4096]
+    ops, mirror, si = [], list(zip(bg.src.tolist(), bg.dst.tolist())), 0
+    for _ in range(rounds):
+        for _ in range(queries_per_round):
+            q = sizes[si % len(sizes)]
+            si += 1
+            ops.append(("query",
+                        rng.integers(0, bg.n, q).astype(np.int32),
+                        rng.integers(0, bg.n, q).astype(np.int32)))
+        ns = rng.integers(0, bg.n, insert_b).astype(np.int32)
+        nd = rng.integers(0, bg.n, insert_b).astype(np.int32)
+        ops.append(("insert", ns, nd))
+        mirror += list(zip(ns.tolist(), nd.tolist()))
+        picks = rng.integers(0, len(mirror), delete_b)
+        pairs = {mirror[i] for i in picks}
+        ds = np.asarray([p[0] for p in pairs], np.int32)
+        dd = np.asarray([p[1] for p in pairs], np.int32)
+        ops.append(("delete", ds, dd))
+        mirror = [e for e in mirror if e not in pairs]
+    n_queries = sum(len(u) for kind, u, _ in ops if kind == "query")
+    n_deletes = sum(1 for kind, _, _ in ops if kind == "delete")
+
+    def run(eager: bool):
+        eng = QueryEngine(idx0, bfs_chunk=256, max_iters=64, donate=False)
+        t_q = t_del = 0.0
+        answers, pending = [], []
+
+        def drain():
+            nonlocal t_q, pending
+            t0 = time.perf_counter()
+            answers.extend(np.asarray(a) for a in eng.flush(pending))
+            pending = []
+            t_q += time.perf_counter() - t0
+
+        for kind, a, b in ops:
+            if kind == "query":
+                t0 = time.perf_counter()
+                pending.append(eng.submit(eng.index, a, b))
+                t_q += time.perf_counter() - t0
+            elif kind == "insert":
+                eng.insert(a, b)
+                eng.index.packed.dl_in.block_until_ready()
+            else:
+                drain()                 # deletes drain either way
+                t0 = time.perf_counter()
+                eng.delete(a, b)
+                if eager:
+                    eng.rebuild()
+                    eng.index.packed.dl_in.block_until_ready()
+                else:
+                    eng.index.graph.del_at.block_until_ready()
+                t_del += time.perf_counter() - t0
+        drain()
+        t_final_rebuild = 0.0
+        if not eager:
+            t0 = time.perf_counter()
+            eng.rebuild()
+            eng.index.packed.dl_in.block_until_ready()
+            t_final_rebuild = time.perf_counter() - t0
+        return t_q, t_del, t_final_rebuild, answers
+
+    # answers bitwise identical between modes — checked once, untimed
+    _, _, _, ans_lazy = run(False)
+    _, _, _, ans_eager = run(True)
+    ok = (len(ans_lazy) == len(ans_eager)
+          and all(np.array_equal(x, y)
+                  for x, y in zip(ans_lazy, ans_eager)))
+
+    lazy = min((run(False) for _ in range(repeats)),
+               key=lambda r: r[0] + r[1] + r[2])
+    eager = min((run(True) for _ in range(repeats)), key=lambda r: r[0] + r[1])
+    # stream wall-clock includes EVERY label cost each mode pays: the lazy
+    # side's one final rebuild is counted against it, the eager side's
+    # per-delete rebuilds are inside its delete time
+    t_lazy = lazy[0] + lazy[1] + lazy[2]
+    t_eager = eager[0] + eager[1]
+    return {
+        "n_queries": n_queries,
+        "n_delete_batches": n_deletes,
+        "qps_tombstone": n_queries / t_lazy,
+        "qps_eager_rebuild": n_queries / t_eager,
+        "stream_s_tombstone": t_lazy,
+        "stream_s_eager_rebuild": t_eager,
+        "stream_speedup": t_eager / t_lazy,
+        "delete_ms_per_batch_tombstone": 1e3 * lazy[1] / n_deletes,
+        "delete_ms_per_batch_eager_rebuild": 1e3 * eager[1] / n_deletes,
+        "final_rebuild_ms_tombstone": 1e3 * lazy[2],
+        "delete_path_speedup": eager[1] / max(lazy[1], 1e-9),
+        "answers_bitwise_lazy_vs_eager": bool(ok),
+    }
+
+
 def main(scale: float = 0.1, datasets=("LJ", "Email", "Reddit"),
          json_path: str | None = None):
-    """Runs the perf suite and writes the PR-2 trajectory file
-    ``BENCH_PR2.json`` (override with ``json_path`` / ``$BENCH_JSON``):
-    queries/s, BFS dispatch counts, and flush latency for epoch-coalesced
-    vs. per-epoch flush, plus bitwise answer checks in both consistency
-    modes."""
-    json_path = json_path or os.environ.get("BENCH_JSON", "BENCH_PR2.json")
+    """Runs the perf suite and writes the PR-3 trajectory file
+    ``BENCH_PR3.json`` (override with ``json_path`` / ``$BENCH_JSON``):
+    the PR-2 sections (mixed-stream engine vs host, epoch coalescing) plus
+    the fully-dynamic section — tombstone-mode (lazy rebuild) vs eager
+    rebuild-per-delete-batch on one mixed insert/delete/query stream, with
+    bitwise answer checks between the modes."""
+    json_path = json_path or os.environ.get("BENCH_JSON", "BENCH_PR3.json")
     report = {"scale": scale, "backend": jax.default_backend(),
-              "datasets": {}, "epoch_coalescing": {}}
+              "datasets": {}, "epoch_coalescing": {}, "fully_dynamic": {}}
     print("dataset,update_pruned_ms,rebuild_ms,update_speedup,"
           "query_packed_ms,query_bool_ms,label_bytes_packed,label_bytes_bool")
     rows = []
@@ -294,6 +404,21 @@ def main(scale: float = 0.1, datasets=("LJ", "Email", "Reddit"),
               f"{r['dispatch_reduction']:.1f}x,"
               f"{r['answers_bitwise_host_as_of_submit']},"
               f"{r['answers_bitwise_host_latest']}")
+
+    print("\ndataset,qps_tombstone,qps_eager,stream_speedup,"
+          "del_ms_tombstone,del_ms_eager,delete_speedup,bitwise"
+          "  (fully-dynamic stream)")
+    for name in datasets:
+        bg = load(name, scale=scale)
+        r = deletion_stream(bg)
+        report["fully_dynamic"][name] = r
+        print(f"{name},{r['qps_tombstone']:.0f},"
+              f"{r['qps_eager_rebuild']:.0f},"
+              f"{r['stream_speedup']:.2f}x,"
+              f"{r['delete_ms_per_batch_tombstone']:.2f},"
+              f"{r['delete_ms_per_batch_eager_rebuild']:.2f},"
+              f"{r['delete_path_speedup']:.1f}x,"
+              f"{r['answers_bitwise_lazy_vs_eager']}")
 
     with open(json_path, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)

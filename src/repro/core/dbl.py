@@ -3,17 +3,38 @@
     idx = DBLIndex.build(g, n_cap=..., k=64, k_prime=64)
     ans = idx.query(u, v)                  # Alg 2
     idx = idx.insert_edges(src, dst)       # Alg 3 (batched)
+    idx = idx.delete_edges(src, dst)       # tombstones + dirty flag (cheap)
+    idx = idx.rebuild()                    # lazy label rebuild over live edges
 
 The index is a pytree (usable under jit / pjit / checkpointing).  Bool planes
 are the mutable source of truth; packed uint32 words are kept in sync and feed
 the query path + Pallas kernels.
+
+**Fully-dynamic mode.**  Deletions never touch a DAG and never recompute
+labels eagerly: ``delete_edges`` stamps epoch-versioned tombstones on the
+graph and leaves the labels as a sound *over-approximation* (deletions only
+shrink reachability).  While ``dirty`` (``graph.del_epoch`` is ahead of
+``label_del_epoch``, the delete epoch the labels were last rebuilt for),
+queries downgrade every verdict that rests on positive label evidence — DL
+positives and the theorem-1/2 negatives — to "unknown -> BFS over live
+edges", while BL-containment negatives stay valid (they only need label
+completeness, and bits are never removed).  ``rebuild`` re-runs Alg 1 over
+the live edge set, clears the dirty state, and bumps the snapshot epoch.
+
+**Pytree dtype discipline.**  ``epoch`` / ``label_del_epoch`` are always
+int32 scalars and ``saturated`` a bool scalar *as jax.Arrays* from
+construction on — a leaf that flips between a weak-typed Python int and a
+traced array changes the pytree's aval and forces jit retraces (and breaks
+checkpoint/restore round-trips), so every construction path normalizes.
 """
 from __future__ import annotations
 
+import warnings
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import bitset
 from . import graph as G
@@ -21,6 +42,21 @@ from . import labels as L
 from . import query as Q
 from . import select as S
 from . import update as U
+
+
+class LabelSaturationWarning(UserWarning):
+    """An insert's label fixpoint hit max_iters without converging — labels
+    are stale and queries may return FALSE negatives until a rebuild."""
+
+
+class LabelSaturationError(RuntimeError):
+    """Strict-mode variant of LabelSaturationWarning."""
+
+
+def _saturation_message(max_iters) -> str:
+    return (f"label propagation hit max_iters={max_iters} without "
+            "converging: labels are stale and queries may return wrong "
+            "answers. Re-run with a larger max_iters or rebuild() the index.")
 
 
 class DBLIndex(NamedTuple):
@@ -31,10 +67,16 @@ class DBLIndex(NamedTuple):
     bl_in: jax.Array            # (n_cap, k') uint8 plane
     bl_out: jax.Array
     packed: Q.PackedLabels      # uint32 word views
-    # snapshot epoch: bumped by every insert batch.  With append-only edges,
-    # (epoch, graph.m) names the exact edge set this index snapshot observed
-    # — the serving engine keys cross-snapshot BFS coalescing off it.
+    # snapshot epoch: bumped by every insert AND delete batch.  Within one
+    # delete epoch, (epoch, graph.m) names the exact edge set this index
+    # snapshot observed — the serving engine keys cross-snapshot BFS
+    # coalescing off it.
     epoch: jax.Array | int = 0
+    # the graph delete-epoch the labels were last (re)built for; labels are
+    # dirty (deletion-stale) whenever graph.del_epoch is ahead of this
+    label_del_epoch: jax.Array | int = 0
+    # sticky flag: some insert's label fixpoint hit max_iters (stale labels)
+    saturated: jax.Array | bool = False
 
     # ---- static helpers -------------------------------------------------
     @property
@@ -49,19 +91,50 @@ class DBLIndex(NamedTuple):
     def k_prime(self) -> int:
         return self.bl_in.shape[1]
 
+    @property
+    def dirty_flag(self) -> jax.Array:
+        """() bool (traced-friendly): labels carry un-rebuilt deletions."""
+        return self.graph.del_epoch > jnp.asarray(self.label_del_epoch,
+                                                  jnp.int32)
+
+    @property
+    def is_dirty(self) -> bool:
+        """Host-side dirty check (syncs one scalar)."""
+        return bool(np.asarray(self.dirty_flag))
+
     # ---- construction (Alg 1) -------------------------------------------
     @staticmethod
     def build(g: G.Graph, *, n_cap: int, k: int = 64, k_prime: int = 64,
               selection: str = "product", leaf_r: int = 0,
-              max_iters: int = 256) -> "DBLIndex":
+              max_iters: int = 256, check: str = "warn") -> "DBLIndex":
+        """Alg 1.  A build whose fixpoints hit ``max_iters`` without
+        converging produces INCOMPLETE labels (same failure mode as a
+        saturated insert): the ``saturated`` flag is set and ``check``
+        behaves as in ``insert_edges`` ("warn" default / "raise" /
+        "defer")."""
+        if check not in ("warn", "raise", "defer"):
+            raise ValueError(f"unknown check mode {check!r}")
         landmarks = S.select_landmarks(g, n_cap=n_cap, k=k, method=selection)
-        dl_in, dl_out = L.build_dl(g, landmarks, n_cap=n_cap, k=k,
-                                   max_iters=max_iters)
+        dl_in, dl_out, it_dl = L.build_dl(g, landmarks, n_cap=n_cap, k=k,
+                                          max_iters=max_iters)
         sources, sinks = S.leaf_masks(g, n_cap=n_cap, leaf_r=leaf_r)
-        bl_in, bl_out = L.build_bl(g, sources, sinks, n_cap=n_cap,
-                                   k_prime=k_prime, max_iters=max_iters)
+        bl_in, bl_out, it_bl = L.build_bl(g, sources, sinks, n_cap=n_cap,
+                                          k_prime=k_prime,
+                                          max_iters=max_iters)
+        sat = U.saturated(jnp.concatenate([it_dl, it_bl]), max_iters)
+        if check != "defer" and bool(np.asarray(sat)):
+            if check == "raise":
+                raise LabelSaturationError(_saturation_message(max_iters))
+            warnings.warn(_saturation_message(max_iters),
+                          LabelSaturationWarning, stacklevel=2)
         packed = Q.pack_labels(dl_in, dl_out, bl_in, bl_out)
-        return DBLIndex(g, landmarks, dl_in, dl_out, bl_in, bl_out, packed)
+        # NB: a real copy, not asarray — label_del_epoch must not alias the
+        # graph's del_epoch buffer (the engine's insert path donates the
+        # graph; an aliased leaf would be invalidated with it)
+        return DBLIndex(g, landmarks, dl_in, dl_out, bl_in, bl_out, packed,
+                        epoch=jnp.int32(0),
+                        label_del_epoch=jnp.array(g.del_epoch, jnp.int32),
+                        saturated=sat)
 
     # ---- queries (Alg 2) --------------------------------------------------
     def query(self, u, v, *, bfs_chunk: int = 64, max_iters: int = 256,
@@ -69,11 +142,12 @@ class DBLIndex(NamedTuple):
         """Batched reachability.  ``driver="engine"`` (default) runs the
         device-resident QueryEngine (fused label phase + compacted BFS
         chunks); ``driver="host"`` runs the original host-side loop, kept
-        as the reference implementation for differential testing."""
+        as the reference implementation for differential testing.  Both
+        drivers honor the dirty (deletion-stale) state."""
         if driver == "host":
             return Q.query(self.graph, self.packed, u, v, n_cap=self.n_cap,
                            bfs_chunk=bfs_chunk, max_iters=max_iters,
-                           return_stats=return_stats)
+                           return_stats=return_stats, dirty=self.is_dirty)
         if driver != "engine":
             raise ValueError(f"unknown driver {driver!r}")
         from repro.serve.engine import engine_for  # lazy: core <-> serve
@@ -85,17 +159,65 @@ class DBLIndex(NamedTuple):
                                 jnp.asarray(v, jnp.int32))
 
     # ---- updates (Alg 3) --------------------------------------------------
-    def insert_edges(self, new_src, new_dst, *, max_iters: int = 256
-                     ) -> "DBLIndex":
+    def insert_edges(self, new_src, new_dst, *, max_iters: int = 256,
+                     check: str = "warn") -> "DBLIndex":
+        """Batched Alg-3 insert.  ``check`` controls saturation handling —
+        the fixpoint's iteration vector is NOT discarded: if any label
+        plane hit ``max_iters`` without converging the labels are silently
+        stale, so ``"warn"`` (default) syncs the one-bit flag and warns,
+        ``"raise"`` raises ``LabelSaturationError`` (strict mode), and
+        ``"defer"`` skips the host sync and only folds the flag into the
+        index's sticky ``saturated`` field (the serving engine uses this
+        and checks at flush boundaries)."""
+        if check not in ("warn", "raise", "defer"):
+            raise ValueError(f"unknown check mode {check!r}")
         new_src = jnp.asarray(new_src, jnp.int32)
         new_dst = jnp.asarray(new_dst, jnp.int32)
-        g2, dl_in, dl_out, bl_in, bl_out, _, epoch2 = U.insert_and_update(
+        g2, dl_in, dl_out, bl_in, bl_out, iters, epoch2 = U.insert_and_update(
             self.graph, self.dl_in, self.dl_out, self.bl_in, self.bl_out,
             new_src, new_dst, self.epoch, n_cap=self.n_cap,
             max_iters=max_iters)
+        sat_now = U.saturated(iters, max_iters)
+        if check != "defer" and bool(np.asarray(sat_now)):
+            if check == "raise":
+                raise LabelSaturationError(_saturation_message(max_iters))
+            warnings.warn(_saturation_message(max_iters),
+                          LabelSaturationWarning, stacklevel=2)
         packed = Q.pack_labels(dl_in, dl_out, bl_in, bl_out)
-        return DBLIndex(g2, self.landmarks, dl_in, dl_out, bl_in, bl_out,
-                        packed, epoch2)
+        return self._replace(
+            graph=g2, dl_in=dl_in, dl_out=dl_out, bl_in=bl_in, bl_out=bl_out,
+            packed=packed, epoch=epoch2,
+            saturated=jnp.asarray(self.saturated) | sat_now)
+
+    def delete_edges(self, del_src, del_dst) -> "DBLIndex":
+        """Tombstone every live edge matching a (src, dst) pair — O(m) mask
+        work, NO label recomputation.  The returned index is dirty: queries
+        downgrade label positives / theorem negatives to live-edge BFS until
+        ``rebuild()`` (BL negatives stay sound; see module docstring)."""
+        g2, epoch2 = U.delete_and_mark(
+            self.graph, jnp.asarray(del_src, jnp.int32),
+            jnp.asarray(del_dst, jnp.int32), self.epoch)
+        return self._replace(graph=g2, epoch=epoch2)
+
+    def rebuild(self, *, selection: str = "product", leaf_r: int = 0,
+                max_iters: int = 256, compact: bool = True,
+                check: str = "warn") -> "DBLIndex":
+        """Lazy label rebuild: re-run Alg 1 over the LIVE edge set, clearing
+        the dirty state.  The ``saturated`` flag comes out reflecting THIS
+        build's convergence (a rebuild whose own fixpoints are cut off at
+        ``max_iters`` is just as stale as a saturated insert — ``check``
+        surfaces it, as in ``build``).  ``compact=True`` also squeezes
+        tombstones out of the edge arrays, reclaiming capacity; slot
+        renumbering is safe here because a rebuild starts a new snapshot
+        lineage (the serving engine re-binds and resolves in-flight batches
+        first).  The snapshot epoch keeps increasing monotonically across
+        the rebuild."""
+        g = G.compact(self.graph) if compact else self.graph
+        idx = DBLIndex.build(g, n_cap=self.n_cap, k=self.k,
+                             k_prime=self.k_prime, selection=selection,
+                             leaf_r=leaf_r, max_iters=max_iters, check=check)
+        return idx._replace(
+            epoch=jnp.asarray(self.epoch, jnp.int32) + jnp.int32(1))
 
     # ---- introspection ----------------------------------------------------
     def label_bytes(self) -> int:

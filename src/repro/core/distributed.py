@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import query as Q
+from . import update as U
 from .dbl import DBLIndex
 from .graph import Graph
 
@@ -36,10 +37,11 @@ def index_shardings(mesh: Mesh) -> DBLIndex:
     vec = NamedSharding(mesh, P(ax))          # (n,) / (m,) arrays
     plane = NamedSharding(mesh, P(ax, None))  # (n, k) planes
     scal = NamedSharding(mesh, P())
-    g = Graph(src=vec, dst=vec, n=scal, m=scal)
+    g = Graph(src=vec, dst=vec, n=scal, m=scal, del_at=vec, del_epoch=scal)
     packed = Q.PackedLabels(plane, plane, plane, plane)
     return DBLIndex(graph=g, landmarks=scal, dl_in=plane, dl_out=plane,
-                    bl_in=plane, bl_out=plane, packed=packed, epoch=scal)
+                    bl_in=plane, bl_out=plane, packed=packed, epoch=scal,
+                    label_del_epoch=scal, saturated=scal)
 
 
 def shard_index(idx: DBLIndex, mesh: Mesh) -> DBLIndex:
@@ -51,10 +53,7 @@ def shard_index(idx: DBLIndex, mesh: Mesh) -> DBLIndex:
 def distributed_build(g: Graph, mesh: Mesh, *, n_cap: int, k: int = 64,
                       k_prime: int = 64, **kw) -> DBLIndex:
     """Build on sharded inputs; label planes come out vertex-partitioned."""
-    ax = _axes(mesh)
-    g = jax.device_put(g, Graph(
-        src=NamedSharding(mesh, P(ax)), dst=NamedSharding(mesh, P(ax)),
-        n=NamedSharding(mesh, P()), m=NamedSharding(mesh, P())))
+    g = jax.device_put(g, index_shardings(mesh).graph)
     idx = DBLIndex.build(g, n_cap=n_cap, k=k, k_prime=k_prime, **kw)
     return shard_index(idx, mesh)
 
@@ -69,7 +68,60 @@ def distributed_label_verdicts(idx: DBLIndex, mesh: Mesh, u, v):
     return fn(idx.packed, u, v)
 
 
+@functools.lru_cache(maxsize=16)
+def _sharded_insert_fn(mesh: Mesh, n_cap: int, max_iters: int):
+    """Jitted Alg-3 insert with the index sharding scheme injected at the
+    jit boundary: inputs arrive in their resident shardings (no reshuffle),
+    outputs are CONSTRAINED to the same scheme, so the sharded index never
+    round-trips through the host between insert batches.  Cached per
+    (mesh, n_cap, max_iters) so repeated inserts reuse one executable."""
+    sh = index_shardings(mesh)
+    plane = sh.dl_in
+    repl = NamedSharding(mesh, P())
+
+    def impl(g, dl_in, dl_out, bl_in, bl_out, ns, nd, epoch):
+        g2, a, b, c, d, iters, epoch2 = U.insert_and_update(
+            g, dl_in, dl_out, bl_in, bl_out, ns, nd, epoch,
+            n_cap=n_cap, max_iters=max_iters)
+        sat = U.saturated(iters, max_iters)
+        return g2, a, b, c, d, Q.pack_labels(a, b, c, d), epoch2, sat
+
+    in_sh = (sh.graph, plane, plane, plane, plane, repl, repl, repl)
+    out_sh = (sh.graph, plane, plane, plane, plane,
+              Q.PackedLabels(plane, plane, plane, plane), repl, repl)
+    return jax.jit(impl, in_shardings=in_sh, out_shardings=out_sh)
+
+
 def distributed_insert(idx: DBLIndex, mesh: Mesh, new_src, new_dst,
-                       *, max_iters: int = 256) -> DBLIndex:
-    idx2 = idx.insert_edges(new_src, new_dst, max_iters=max_iters)
-    return shard_index(idx2, mesh)
+                       *, max_iters: int = 256, check: str = "warn"
+                       ) -> DBLIndex:
+    """Device-resident sharded insert: the old path ran the update
+    unsharded and re-``device_put`` the whole index afterwards (a full host
+    round-trip per batch); this threads ``index_shardings(mesh)`` through
+    the jit boundary instead, so labels stay vertex-partitioned on device
+    across insert batches.  ``check`` surfaces fixpoint saturation exactly
+    like ``DBLIndex.insert_edges`` ("warn" default / "raise" / "defer" —
+    defer skips the one-scalar host sync and only folds the flag into the
+    index's sticky ``saturated`` field)."""
+    import warnings
+
+    import numpy as np
+
+    from .dbl import (LabelSaturationError, LabelSaturationWarning,
+                      _saturation_message)
+    if check not in ("warn", "raise", "defer"):
+        raise ValueError(f"unknown check mode {check!r}")
+    fn = _sharded_insert_fn(mesh, idx.n_cap, max_iters)
+    ns = jnp.asarray(new_src, jnp.int32)
+    nd = jnp.asarray(new_dst, jnp.int32)
+    g2, a, b, c, d, packed, epoch2, sat = fn(
+        idx.graph, idx.dl_in, idx.dl_out, idx.bl_in, idx.bl_out,
+        ns, nd, jnp.asarray(idx.epoch, jnp.int32))
+    if check != "defer" and bool(np.asarray(sat)):
+        if check == "raise":
+            raise LabelSaturationError(_saturation_message(max_iters))
+        warnings.warn(_saturation_message(max_iters),
+                      LabelSaturationWarning, stacklevel=2)
+    return idx._replace(
+        graph=g2, dl_in=a, dl_out=b, bl_in=c, bl_out=d, packed=packed,
+        epoch=epoch2, saturated=jnp.asarray(idx.saturated) | sat)

@@ -20,24 +20,31 @@ from .select import leaf_hash
 
 @functools.partial(jax.jit, static_argnames=("n_cap", "k", "max_iters"))
 def build_dl(g: Graph, landmarks: jax.Array, *, n_cap: int, k: int,
-             max_iters: int = 256) -> tuple[jax.Array, jax.Array]:
-    """Build (dl_in, dl_out) bool planes (n_cap, k) uint8."""
+             max_iters: int = 256
+             ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Build (dl_in, dl_out, iters (2,)) — bool planes (n_cap, k) uint8.
+
+    ``iters`` carries both fixpoints' round counts (``max_iters + 1`` when
+    truncated, see ``propagate``) so the caller can surface saturation —
+    a cut-off BUILD produces incomplete labels just like a cut-off insert.
+    """
     live = edge_mask(g)
     seed = jnp.zeros((n_cap, k), jnp.uint8)
     seed = seed.at[landmarks, jnp.arange(k)].set(1, mode="drop")
     frontier = jnp.zeros((n_cap,), jnp.bool_).at[landmarks].set(True, mode="drop")
-    dl_in, _ = propagate(seed, g.src, g.dst, live, frontier,
-                         n_cap=n_cap, monoid="or", max_iters=max_iters)
-    dl_out, _ = propagate(seed, g.src, g.dst, live, frontier,
-                          n_cap=n_cap, monoid="or", max_iters=max_iters,
-                          reverse=True)
-    return dl_in, dl_out
+    dl_in, it0 = propagate(seed, g.src, g.dst, live, frontier,
+                           n_cap=n_cap, monoid="or", max_iters=max_iters)
+    dl_out, it1 = propagate(seed, g.src, g.dst, live, frontier,
+                            n_cap=n_cap, monoid="or", max_iters=max_iters,
+                            reverse=True)
+    return dl_in, dl_out, jnp.stack([it0, it1])
 
 
 @functools.partial(jax.jit, static_argnames=("n_cap", "k_prime", "max_iters"))
 def build_bl(g: Graph, sources: jax.Array, sinks: jax.Array, *, n_cap: int,
-             k_prime: int, max_iters: int = 256) -> tuple[jax.Array, jax.Array]:
-    """Build (bl_in, bl_out) hashed leaf planes (n_cap, k') uint8.
+             k_prime: int, max_iters: int = 256
+             ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Build (bl_in, bl_out, iters (2,)) hashed leaf planes (n_cap, k') uint8.
 
     BL_in(v)  ⊇ {h(u) : u is a source leaf reaching v} (self-seeded),
     BL_out(v) ⊇ {h(u) : u is a sink leaf reachable from v}.
@@ -48,11 +55,11 @@ def build_bl(g: Graph, sources: jax.Array, sinks: jax.Array, *, n_cap: int,
     onehot = (jnp.arange(k_prime, dtype=jnp.int32)[None, :] == h[:, None])
 
     seed_in = (onehot & sources[:, None]).astype(jnp.uint8)
-    bl_in, _ = propagate(seed_in, g.src, g.dst, live, sources,
-                         n_cap=n_cap, monoid="or", max_iters=max_iters)
+    bl_in, it0 = propagate(seed_in, g.src, g.dst, live, sources,
+                           n_cap=n_cap, monoid="or", max_iters=max_iters)
 
     seed_out = (onehot & sinks[:, None]).astype(jnp.uint8)
-    bl_out, _ = propagate(seed_out, g.src, g.dst, live, sinks,
-                          n_cap=n_cap, monoid="or", max_iters=max_iters,
-                          reverse=True)
-    return bl_in, bl_out
+    bl_out, it1 = propagate(seed_out, g.src, g.dst, live, sinks,
+                            n_cap=n_cap, monoid="or", max_iters=max_iters,
+                            reverse=True)
+    return bl_in, bl_out, jnp.stack([it0, it1])

@@ -51,7 +51,13 @@ def propagate(labels: jax.Array, src: jax.Array, dst: jax.Array,
               live: jax.Array, frontier: jax.Array, *, n_cap: int,
               monoid: Monoid = "or", max_iters: int = 256,
               reverse: bool = False) -> tuple[jax.Array, jax.Array]:
-    """Run the fixpoint. Returns (labels, iterations_executed).
+    """Run the fixpoint. Returns (labels, iters).
+
+    ``iters`` is the number of relaxation rounds executed, EXCEPT when the
+    loop was cut off at ``max_iters`` with the frontier still non-empty —
+    then it reports ``max_iters + 1`` so callers can tell a truncated
+    fixpoint (stale labels!) from one that converged in exactly
+    ``max_iters`` rounds (``core.update.saturated`` keys off this).
 
     labels   : (n_cap, k) uint8 for "or" (0/1 planes) or int32 for "min".
     src, dst : (m_cap,) int32 edge endpoints; ``reverse=True`` pushes dst->src.
@@ -71,8 +77,9 @@ def propagate(labels: jax.Array, src: jax.Array, dst: jax.Array,
         new, changed = step(labels, src, dst, live, frontier, n_cap)
         return new, changed, it + 1
 
-    labels, _, iters = jax.lax.while_loop(
+    labels, frontier, iters = jax.lax.while_loop(
         cond, body, (labels, frontier.astype(jnp.bool_), jnp.int32(0)))
+    iters = jnp.where(frontier.any(), jnp.int32(max_iters + 1), iters)
     return labels, iters
 
 

@@ -37,18 +37,77 @@ def pack_labels(dl_in, dl_out, bl_in, bl_out) -> PackedLabels:
                         bitset.pack(bl_in), bitset.pack(bl_out))
 
 
+def _verdict_parts(p: PackedLabels, u: jax.Array, v: jax.Array):
+    """(pos_lbl, bl_neg, thm) boolean evidence masks behind the four rules.
+
+    Kept separate because the rules degrade differently when the index is
+    *dirty* (tombstoned deletions not yet rebuilt into labels):
+
+    - ``pos_lbl`` (Lemma 1) and ``thm`` (Theorems 1/2) are built on POSITIVE
+      label evidence ("a landmark path exists") — under deletions the labels
+      over-approximate reachability, so this evidence can be stale and the
+      verdicts it feeds must downgrade to unknown;
+    - ``bl_neg`` (Lemma 2) only needs label *completeness* (every true fact
+      has its bit).  Bits are never removed, so BL containment violations
+      stay sound proofs of unreachability under any number of deletions.
+    """
+    dlo_u, dli_v = p.dl_out[u], p.dl_in[v]
+    dlo_v, dli_u = p.dl_out[v], p.dl_in[u]
+    pos_lbl = bitset.intersect_any(dlo_u, dli_v)
+    bl_neg = (~bitset.subset(p.bl_in[u], p.bl_in[v])
+              | ~bitset.subset(p.bl_out[v], p.bl_out[u]))
+    thm = (bitset.intersect_any(dlo_v, dli_u)
+           | bitset.intersect_any(dlo_u, dli_u)
+           | bitset.intersect_any(dlo_v, dli_v))
+    return pos_lbl, bl_neg, thm
+
+
 @jax.jit
 def label_verdicts(p: PackedLabels, u: jax.Array, v: jax.Array) -> jax.Array:
     """(Q,) int8 verdicts from labels only (Alg 2 lines 6-13)."""
-    dlo_u, dli_v = p.dl_out[u], p.dl_in[v]
-    dlo_v, dli_u = p.dl_out[v], p.dl_in[u]
-    pos = bitset.intersect_any(dlo_u, dli_v) | (u == v)
-    bl_neg = (~bitset.subset(p.bl_in[u], p.bl_in[v])
-              | ~bitset.subset(p.bl_out[v], p.bl_out[u]))
-    thm1 = bitset.intersect_any(dlo_v, dli_u)
-    thm2 = (bitset.intersect_any(dlo_u, dli_u)
-            | bitset.intersect_any(dlo_v, dli_v))
-    neg = ~pos & (bl_neg | thm1 | thm2)
+    pos_lbl, bl_neg, thm = _verdict_parts(p, u, v)
+    pos = pos_lbl | (u == v)
+    neg = ~pos & (bl_neg | thm)
+    return jnp.where(pos, jnp.int8(1), jnp.where(neg, jnp.int8(0), jnp.int8(-1)))
+
+
+@jax.jit
+def dirty_label_verdicts(p: PackedLabels, u: jax.Array, v: jax.Array
+                         ) -> jax.Array:
+    """(Q,) int8 verdicts SOUND FOR A DIRTY INDEX (pending deletions).
+
+    Only the deletion-monotone rules survive: self-queries stay +1 and BL
+    containment violations stay 0; everything else is unknown and rides the
+    live-edge BFS.  This is the verdict-downgrade half of fully-dynamic DBL.
+    """
+    _, bl_neg, _ = _verdict_parts(p, u, v)
+    same = u == v
+    return jnp.where(same, jnp.int8(1),
+                     jnp.where(bl_neg, jnp.int8(0), jnp.int8(-1)))
+
+
+def cut_verdicts(p: PackedLabels, u: jax.Array, v: jax.Array,
+                 m_cut: jax.Array, m_total: jax.Array,
+                 d_fresh: jax.Array | bool) -> jax.Array:
+    """(Q,) int8 verdicts with BOTH staleness cutoffs applied — the traceable
+    jnp twin of the ``dbl_query`` kernel's cutoff path:
+
+    - per-lane *edge-count* cutoff (insert staleness): label positives on
+      lanes with ``m_cut < m_total`` degrade to unknown (``asof_verdicts``);
+    - *tombstone* cutoff (deletion staleness): when ``d_fresh`` is False the
+      labels carry deletions not yet rebuilt, so positives AND theorem-1/2
+      negatives degrade — only self-queries and BL negatives survive.
+
+    ``d_fresh`` broadcasts: a scalar (whole dispatch clean/dirty) or (Q,).
+    """
+    pos_lbl, bl_neg, thm = _verdict_parts(p, u, v)
+    same = u == v
+    d_fresh = jnp.asarray(d_fresh, jnp.bool_)
+    m_fresh = m_cut >= m_total
+    pos0 = pos_lbl | same
+    neg0 = ~pos0 & (bl_neg | thm)
+    pos = (pos_lbl & m_fresh & d_fresh) | same
+    neg = jnp.where(d_fresh, neg0, ~same & bl_neg)
     return jnp.where(pos, jnp.int8(1), jnp.where(neg, jnp.int8(0), jnp.int8(-1)))
 
 
@@ -122,6 +181,7 @@ def _admit_plane(p: PackedLabels, u: jax.Array, v: jax.Array,
 def pruned_bfs(g: Graph, p: PackedLabels, u: jax.Array, v: jax.Array,
                admit: jax.Array | None = None,
                m_cut: jax.Array | None = None,
+               dl_clean: jax.Array | None = None,
                *, n_cap: int, max_iters: int = 256) -> jax.Array:
     """(Qc,) bool — resolve unknown queries by label-pruned BFS lanes.
 
@@ -136,14 +196,26 @@ def pruned_bfs(g: Graph, p: PackedLabels, u: jax.Array, v: jax.Array,
     lets the QueryEngine coalesce residues across snapshots into one
     dispatch.  Lanes with m_cut >= g.m see every live edge and keep the DL
     prune; stale lanes drop it (see ``_admit_plane``).
+
+    ``dl_clean`` (() bool, default True) gates the DL prune on the LABELS
+    being deletion-clean: when the graph carries tombstones the labels have
+    not been rebuilt for, the DL-intersection evidence the prune rests on
+    may be stale, so a dirty dispatch drops it for every lane.  The BL
+    containment prunes stay on — along any live path x -> ... -> v the
+    edge-wise label-coherence invariant (maintained by build, kept by
+    deletes which only remove constraints, and restored by every insert
+    fixpoint) guarantees BL(x) ⊆ BL(v), so the containment test never cuts
+    a live path even under tombstones.  Tombstoned edges are excluded from
+    traversal automatically via ``edge_mask``.
     """
     qc = u.shape[0]
     live = edge_mask(g)
+    clean = jnp.asarray(True if dl_clean is None else dl_clean, jnp.bool_)
     if m_cut is None:
-        dl_on = None
+        dl_on = None if dl_clean is None else jnp.broadcast_to(clean, u.shape)
     else:
         eids = jnp.arange(g.src.shape[0], dtype=jnp.int32)
-        dl_on = m_cut >= g.m
+        dl_on = (m_cut >= g.m) & clean
     if admit is None:
         admit = _admit_plane(p, u, v, n_cap, dl_on)  # (n_cap, Qc)
     ids = jnp.arange(n_cap, dtype=jnp.int32)
@@ -178,26 +250,33 @@ def pruned_bfs(g: Graph, p: PackedLabels, u: jax.Array, v: jax.Array,
 
 def query(g: Graph, p: PackedLabels, u, v, *, n_cap: int,
           bfs_chunk: int = 64, max_iters: int = 256,
-          return_stats: bool = False):
+          return_stats: bool = False, dirty: bool = False):
     """Full Alg 2 over a query batch — the HOST-SIDE reference driver.
 
     Materializes verdicts on the host, slices unknowns with numpy, and
     re-dispatches one BFS chunk at a time.  Kept as the differential-testing
     oracle for ``repro.serve.engine.QueryEngine``, which runs the same
     pipeline device-resident; production callers should prefer the engine.
+
+    ``dirty=True`` runs the fully-dynamic downgrade path: labels carry
+    un-rebuilt deletions, so only self-positives and BL negatives answer
+    from labels, everything else rides the live-edge BFS with the DL prune
+    disabled (tombstoned edges are masked out of traversal either way).
     """
     u = jnp.asarray(u, jnp.int32)
     v = jnp.asarray(v, jnp.int32)
-    verdicts = np.asarray(label_verdicts(p, u, v))
+    verd_fn = dirty_label_verdicts if dirty else label_verdicts
+    verdicts = np.asarray(verd_fn(p, u, v))
     answers = verdicts == 1
     unknown = np.flatnonzero(verdicts == -1)
+    dl_clean = None if not dirty else jnp.asarray(False)
     for lo in range(0, unknown.size, bfs_chunk):
         idx = unknown[lo:lo + bfs_chunk]
         pad = bfs_chunk - idx.size
         uu = jnp.asarray(np.pad(np.asarray(u)[idx], (0, pad)), jnp.int32)
         vv = jnp.asarray(np.pad(np.asarray(v)[idx], (0, pad)), jnp.int32)
-        hit = np.asarray(pruned_bfs(g, p, uu, vv, n_cap=n_cap,
-                                    max_iters=max_iters))
+        hit = np.asarray(pruned_bfs(g, p, uu, vv, dl_clean=dl_clean,
+                                    n_cap=n_cap, max_iters=max_iters))
         answers[idx] = hit[:idx.size]
     if return_stats:
         rho = 1.0 - unknown.size / max(1, verdicts.size)

@@ -61,3 +61,33 @@ def insert_and_update(g: G.Graph,
     iters = jnp.stack([it0, it1, it2, it3])
     epoch2 = jnp.asarray(epoch, jnp.int32) + jnp.int32(1)
     return g2, dl_in2, dl_out2, bl_in2, bl_out2, iters, epoch2
+
+
+def saturated(iters: jax.Array, max_iters: int) -> jax.Array:
+    """() bool — True when any label plane's fixpoint was cut off at
+    ``max_iters`` without converging (``propagate`` reports a truncated run
+    as ``max_iters + 1``, so converging in exactly ``max_iters`` rounds is
+    NOT saturation).  A saturated update leaves labels silently stale
+    (missing bits => query FALSE negatives), so callers must surface it:
+    ``DBLIndex.insert_edges`` warns (or raises in strict mode) and folds it
+    into the index's ``saturated`` flag."""
+    return jnp.any(iters > jnp.int32(max_iters))
+
+
+@jax.jit
+def delete_and_mark(g: G.Graph, del_src: jax.Array, del_dst: jax.Array,
+                    epoch: jax.Array | int = 0):
+    """Returns (graph', epoch').  Tombstones the matching live edges and bumps
+    BOTH clocks: the graph's ``del_epoch`` (one delete batch) and the snapshot
+    ``epoch`` (a delete batch is a new snapshot, same as an insert batch).
+
+    Deliberately does NOT touch labels — that is the fully-dynamic design:
+    deletions only *shrink* reachability, so existing labels stay a sound
+    over-approximation.  Label-based FALSE verdicts (BL containment) remain
+    valid forever; label-based TRUE verdicts (DL intersection) and the
+    theorem-1/2 negative rules become optimistic and must be downgraded to
+    "unknown -> BFS over live edges" until a rebuild (see ``core.query``).
+    """
+    g2 = G.delete_edges(g, del_src, del_dst)
+    epoch2 = jnp.asarray(epoch, jnp.int32) + jnp.int32(1)
+    return g2, epoch2

@@ -19,6 +19,14 @@ lane's verdict to be non-positive at the *same* snapshot as the labels), so
 the kernel drops the ``d`` term for them.  The BL containment prunes are
 monotone-safe and stay on for every lane.  Fresh lanes (m_cut >= m_total)
 get the full admit plane — bit-identical to the cutoff-free kernel.
+
+Fully-dynamic serving adds the *tombstone* operand pair (``d_cut`` (1, Q)
+int32 against ``d_total`` (1, 1) int32, the newest delete epoch): labels
+that have not been rebuilt since a delete batch over-approximate
+reachability, so the DL-intersection evidence can be stale and the ``d``
+term drops for deletion-stale lanes too.  The BL containment prunes remain
+sound under tombstones — bits are never removed, and the edge-wise label
+coherence invariant holds along every live path — so they stay on.
 """
 from __future__ import annotations
 
@@ -29,10 +37,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _make_kernel(wd: int, wb: int, with_cut: bool):
+def _make_kernel(wd: int, wb: int, with_cut: bool, with_del: bool):
     def kernel(blin_all, blout_all, dlin_all, blin_v, blout_v, dlo_u,
                *rest):
-        if with_cut:
+        if with_del:
+            m_cut, m_total, d_cut, d_total, out = rest
+        elif with_cut:
             m_cut, m_total, out = rest
         else:
             (out,) = rest
@@ -51,6 +61,12 @@ def _make_kernel(wd: int, wb: int, with_cut: bool):
             d |= (dou[w, None, :] & dia[w, :, None]) != z
         if with_cut:
             fresh = m_cut[...][0, :] >= m_total[...][0, 0]   # (QB,)
+            if with_del:
+                # tombstone operand: a lane answered from deletion-stale
+                # labels (d_cut < d_total) loses the DL prune too — its
+                # soundness rests on positive DL evidence, which may
+                # certify paths that tombstoned edges no longer carry
+                fresh &= d_cut[...][0, :] >= d_total[...][0, 0]
             d &= fresh[None, :]
         out[...] = (c1 & c2 & ~d).astype(jnp.int8)
     return kernel
@@ -58,7 +74,7 @@ def _make_kernel(wd: int, wb: int, with_cut: bool):
 
 @functools.partial(jax.jit, static_argnames=("n_block", "q_block", "interpret"))
 def bfs_admit_plane(blin_all, blout_all, dlin_all, blin_v, blout_v, dlo_u,
-                    m_cut=None, m_total=None,
+                    m_cut=None, m_total=None, d_cut=None, d_total=None,
                     *, n_block: int = 1024, q_block: int = 128,
                     interpret: bool = True) -> jax.Array:
     """word-major inputs: *_all (W, n); per-query (W, Q). -> (n, Q) int8.
@@ -67,12 +83,21 @@ def bfs_admit_plane(blin_all, blout_all, dlin_all, blin_v, blout_v, dlo_u,
     ``m_total`` (1, 1) int32 newest edge count: stale lanes
     (m_cut < m_total) lose the DL prune (see module docstring).  Omitting
     both reproduces the cutoff-free plane exactly.
+
+    Optional ``d_cut`` (1, Q) int32 per-lane tombstone cutoff and
+    ``d_total`` (1, 1) int32 newest delete epoch (requires the m-cut
+    pair): lanes answered from deletion-stale labels (d_cut < d_total)
+    lose the DL prune as well; the BL containment prunes stay on for
+    every lane (sound under deletions — see module docstring).
     """
     wb, n = blin_all.shape
     wd = dlin_all.shape[0]
     q = blin_v.shape[1]
     assert n % n_block == 0 and q % q_block == 0, (n, n_block, q, q_block)
     assert (m_cut is None) == (m_total is None), "pass m_cut and m_total together"
+    assert (d_cut is None) == (d_total is None), "pass d_cut and d_total together"
+    assert d_cut is None or m_cut is not None, \
+        "the tombstone cutoff requires the edge-count cutoff operands"
     grid = (n // n_block, q // q_block)
 
     in_specs = [
@@ -85,13 +110,18 @@ def bfs_admit_plane(blin_all, blout_all, dlin_all, blin_v, blout_v, dlo_u,
     ]
     args = [blin_all, blout_all, dlin_all, blin_v, blout_v, dlo_u]
     with_cut = m_cut is not None
+    with_del = d_cut is not None
     if with_cut:
         in_specs += [pl.BlockSpec((1, q_block), lambda i, j: (0, j)),
                      pl.BlockSpec((1, 1), lambda i, j: (0, 0))]
         args += [m_cut.astype(jnp.int32), m_total.astype(jnp.int32)]
+    if with_del:
+        in_specs += [pl.BlockSpec((1, q_block), lambda i, j: (0, j)),
+                     pl.BlockSpec((1, 1), lambda i, j: (0, 0))]
+        args += [d_cut.astype(jnp.int32), d_total.astype(jnp.int32)]
 
     return pl.pallas_call(
-        _make_kernel(wd, wb, with_cut),
+        _make_kernel(wd, wb, with_cut, with_del),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((n_block, q_block), lambda i, j: (i, j)),

@@ -15,13 +15,17 @@ from .bfs_prune import bfs_admit_plane
 def admit_plane(p: PackedLabels, u: jax.Array, v: jax.Array,
                 m_cut: jax.Array | None = None,
                 m_total: jax.Array | None = None,
+                d_cut: jax.Array | None = None,
+                d_total: jax.Array | None = None,
                 *, n_block: int = 1024, q_block: int = 128,
                 interpret: bool = True) -> jax.Array:
     """Returns (n_cap, Qc) bool admit plane for the pruned-BFS lanes.
 
     Optional ``m_cut`` (Qc,) int32 / ``m_total`` scalar: per-lane edge-count
     cutoffs for epoch-coalesced lanes (stale lanes lose the DL prune).
-    Padding lanes get a fresh cutoff so they keep the default plane.
+    Optional ``d_cut`` (Qc,) int32 / ``d_total`` scalar: per-lane tombstone
+    cutoffs (deletion-stale lanes lose the DL prune too; requires m_cut).
+    Padding lanes get fresh cutoffs so they keep the default plane.
     """
     n = p.bl_in.shape[0]
     q = u.shape[0]
@@ -31,13 +35,17 @@ def admit_plane(p: PackedLabels, u: jax.Array, v: jax.Array,
     blin_v = _pad_axis(p.bl_in[v].T, q_block, 1)
     blout_v = _pad_axis(p.bl_out[v].T, q_block, 1)
     dlo_u = _pad_axis(p.dl_out[u].T, q_block, 1)
-    cut = tot = None
+    cut = tot = dcut = dtot = None
     if m_cut is not None:
         cut = _pad_axis(jnp.reshape(m_cut.astype(jnp.int32), (1, q)),
                         q_block, 1, value=FRESH_CUT)
         tot = jnp.reshape(jnp.asarray(m_total, jnp.int32), (1, 1))
+    if d_cut is not None:
+        dcut = _pad_axis(jnp.reshape(d_cut.astype(jnp.int32), (1, q)),
+                         q_block, 1, value=FRESH_CUT)
+        dtot = jnp.reshape(jnp.asarray(d_total, jnp.int32), (1, 1))
     out = bfs_admit_plane(blin_all, blout_all, dlin_all,
-                          blin_v, blout_v, dlo_u, cut, tot,
+                          blin_v, blout_v, dlo_u, cut, tot, dcut, dtot,
                           n_block=n_block, q_block=q_block,
                           interpret=interpret)
     return out[:n, :q].astype(jnp.bool_)

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 
 
 def admit_ref(blin_all, blout_all, dlin_all, blin_v, blout_v, dlo_u,
-              m_cut=None, m_total=None):
+              m_cut=None, m_total=None, d_cut=None, d_total=None):
     """Inputs word-major: *_all (W, n); per-query (W, Q). -> (n, Q) bool.
 
     admit[x, q] = BL_Contain(x, v_q) ∧ ¬DL_Intersec(u_q, x)
@@ -18,6 +18,10 @@ def admit_ref(blin_all, blout_all, dlin_all, blin_v, blout_v, dlo_u,
     (m_cut < m_total) drop the DL-intersection term — it is the one prune
     that is not monotone-safe for a BFS restricted to the lane's old edge
     prefix (see the kernel docstring).
+
+    ``d_cut`` (Q,) or (1, Q) int32 per-lane tombstone cutoff with
+    ``d_total`` scalar/(1, 1): deletion-stale lanes (d_cut < d_total) drop
+    the DL term as well — its evidence may certify tombstoned paths.
     """
     z = jnp.uint32(0)
     c1 = jnp.all((blin_all[:, :, None] & ~blin_v[:, None, :]) == z, axis=0)
@@ -25,5 +29,7 @@ def admit_ref(blin_all, blout_all, dlin_all, blin_v, blout_v, dlo_u,
     d = jnp.any((dlo_u[:, None, :] & dlin_all[:, :, None]) != z, axis=0)
     if m_cut is not None:
         fresh = jnp.ravel(m_cut) >= jnp.ravel(m_total)[0]   # (Q,)
+        if d_cut is not None:
+            fresh = fresh & (jnp.ravel(d_cut) >= jnp.ravel(d_total)[0])
         d = d & fresh[None, :]
     return c1 & c2 & ~d

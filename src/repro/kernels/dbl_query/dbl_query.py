@@ -11,6 +11,16 @@ lanes and words on sublanes (the reduction axis).
 Block shape: (W, QB) per stream with QB a multiple of 128; W is tiny (k/32,
 e.g. 2 for k=64) so a block is a few KB and many grid steps stay resident in
 VMEM while the DMA pipeline streams the next blocks.
+
+Fully-dynamic serving adds a second per-lane cutoff operand pair alongside
+the edge-count cutoff: ``d_cut`` (Q,) int32 against ``d_total`` (1,) int32
+(the newest tombstone delete epoch).  A lane with ``d_cut < d_total`` is
+answered from labels that have NOT been rebuilt since some delete batch —
+the labels over-approximate reachability, so the kernel downgrades every
+verdict resting on positive label evidence (DL positives, theorem-1/2
+negatives) to unknown and keeps only self-positives and BL-containment
+negatives (sound under deletion: bits are never removed, so completeness —
+all the BL rule needs — is preserved).
 """
 from __future__ import annotations
 
@@ -21,10 +31,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _make_kernel(with_cut: bool):
+def _make_kernel(with_cut: bool, with_del: bool):
     def kernel(dlo_u, dli_v, dlo_v, dli_u,
                blin_u, blin_v, blout_u, blout_v, same, *rest):
-        if with_cut:
+        if with_del:
+            m_cut, m_total, d_cut, d_total, out = rest
+        elif with_cut:
             m_cut, m_total, out = rest
         else:
             (out,) = rest
@@ -44,7 +56,19 @@ def _make_kernel(with_cut: bool):
             # snapshot did not have — downgrade it to unknown; negatives and
             # self-queries are monotone-safe and survive any cutoff.
             fresh = m_cut[...] >= m_total[...][0]
-            pos = (pos_lbl & fresh) | is_same
+            if with_del:
+                # tombstone cutoff: lanes whose labels carry un-rebuilt
+                # DELETIONS (d_cut < d_total) lose every verdict that rests
+                # on positive label evidence — DL positives AND the
+                # theorem-1/2 negatives — since stale bits may certify
+                # paths that no longer exist.  Only self-queries and
+                # BL-containment negatives (which need completeness, not
+                # exactness, and bits are never removed) survive.
+                d_fresh = d_cut[...] >= d_total[...][0]
+                pos = (pos_lbl & fresh & d_fresh) | is_same
+                neg = jnp.where(d_fresh, neg, ~is_same & bl_neg)
+            else:
+                pos = (pos_lbl & fresh) | is_same
         out[...] = jnp.where(pos, jnp.int32(1),
                              jnp.where(neg, jnp.int32(0), jnp.int32(-1)))
     return kernel
@@ -53,7 +77,7 @@ def _make_kernel(with_cut: bool):
 @functools.partial(jax.jit, static_argnames=("q_block", "interpret"))
 def dbl_query_verdicts(dlo_u, dli_v, dlo_v, dli_u,
                        blin_u, blin_v, blout_u, blout_v, same,
-                       m_cut=None, m_total=None,
+                       m_cut=None, m_total=None, d_cut=None, d_total=None,
                        *, q_block: int = 512, interpret: bool = True):
     """All label args (W, Q) uint32 word-major; same (Q,) int32. -> (Q,) int32.
 
@@ -64,12 +88,22 @@ def dbl_query_verdicts(dlo_u, dli_v, dlo_v, dli_u,
     cutoff — label positives on stale lanes (m_cut < m_total) degrade to
     unknown (they must ride a cutoff BFS), negatives stay (monotone under
     insert-only updates).  Omitting both is the plain snapshot verdict.
+
+    Optional ``d_cut`` (Q,) int32 per-lane *tombstone* cutoff + ``d_total``
+    (1,) int32 newest delete epoch (requires the m-cut pair): lanes whose
+    labels carry un-rebuilt deletions (d_cut < d_total) keep ONLY
+    self-positives and BL-containment negatives — DL positives and the
+    theorem-1/2 negatives degrade to unknown and ride the live-edge BFS.
+    Fresh d-cuts (d_cut >= d_total) are bitwise the m-cut-only kernel.
     """
     wd = dlo_u.shape[0]
     wb = blin_u.shape[0]
     q = dlo_u.shape[1]
     assert q % q_block == 0, (q, q_block)
     assert (m_cut is None) == (m_total is None), "pass m_cut and m_total together"
+    assert (d_cut is None) == (d_total is None), "pass d_cut and d_total together"
+    assert d_cut is None or m_cut is not None, \
+        "the tombstone cutoff requires the edge-count cutoff operands"
     grid = (q // q_block,)
 
     def dl_spec():
@@ -84,14 +118,20 @@ def dbl_query_verdicts(dlo_u, dli_v, dlo_v, dli_u,
     args = [dlo_u, dli_v, dlo_v, dli_u,
             blin_u, blin_v, blout_u, blout_v, same]
     with_cut = m_cut is not None
+    with_del = d_cut is not None
     if with_cut:
         in_specs += [pl.BlockSpec((q_block,), lambda i: (i,)),
                      pl.BlockSpec((1,), lambda i: (0,))]
         args += [m_cut.astype(jnp.int32),
                  jnp.reshape(m_total, (1,)).astype(jnp.int32)]
+    if with_del:
+        in_specs += [pl.BlockSpec((q_block,), lambda i: (i,)),
+                     pl.BlockSpec((1,), lambda i: (0,))]
+        args += [d_cut.astype(jnp.int32),
+                 jnp.reshape(d_total, (1,)).astype(jnp.int32)]
 
     return pl.pallas_call(
-        _make_kernel(with_cut),
+        _make_kernel(with_cut, with_del),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((q_block,), lambda i: (i,)),

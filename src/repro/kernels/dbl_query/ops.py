@@ -18,30 +18,38 @@ from .dbl_query import dbl_query_verdicts
 def verdicts_device(p: PackedLabels, u: jax.Array, v: jax.Array,
                     m_cut: jax.Array | None = None,
                     m_total: jax.Array | None = None,
+                    d_cut: jax.Array | None = None,
+                    d_total: jax.Array | None = None,
                     *, q_block: int = 512, interpret: bool = True
                     ) -> jax.Array:
     """Traceable (un-jitted) body of ``query_verdicts`` so larger programs —
     the QueryEngine's fused label phase — can inline it into one executable.
 
     ``m_cut`` (Q,) / ``m_total`` scalar thread the per-lane edge-count
-    cutoff through to the kernel (stale label positives -> unknown); padding
-    lanes are marked fresh so they never ride a BFS."""
+    cutoff through to the kernel (stale label positives -> unknown);
+    ``d_cut`` (Q,) / ``d_total`` scalar thread the tombstone cutoff
+    (deletion-stale labels keep only self-positives and BL negatives).
+    Padding lanes are marked fresh on both so they never ride a BFS."""
     q = u.shape[0]
     streams = [p.dl_out[u], p.dl_in[v], p.dl_out[v], p.dl_in[u],
                p.bl_in[u], p.bl_in[v], p.bl_out[v], p.bl_out[u]]
     # word-major (W, Q), pad Q to a block multiple
     streams = [_pad_to(s.T, q_block, 1) for s in streams]
     same = _pad_to((u == v).astype(jnp.int32), q_block, 0)
-    cut = tot = None
+    cut = tot = dcut = dtot = None
     if m_cut is not None:
         cut = _pad_to(m_cut.astype(jnp.int32), q_block, 0, value=FRESH_CUT)
         tot = jnp.asarray(m_total, jnp.int32)
+    if d_cut is not None:
+        dcut = _pad_to(d_cut.astype(jnp.int32), q_block, 0, value=FRESH_CUT)
+        dtot = jnp.asarray(d_total, jnp.int32)
     # note arg order: kernel wants (dlo_u, dli_v, dlo_v, dli_u,
     #                               blin_u, blin_v, blout_u, blout_v)
     dlo_u, dli_v, dlo_v, dli_u, blin_u, blin_v, blout_v, blout_u = streams
     out = dbl_query_verdicts(dlo_u, dli_v, dlo_v, dli_u,
                              blin_u, blin_v, blout_u, blout_v, same,
-                             cut, tot, q_block=q_block, interpret=interpret)
+                             cut, tot, dcut, dtot,
+                             q_block=q_block, interpret=interpret)
     return out[:q]
 
 

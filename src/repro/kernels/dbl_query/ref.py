@@ -11,7 +11,7 @@ import jax.numpy as jnp
 
 def verdict_ref(dlo_u, dli_v, dlo_v, dli_u,
                 blin_u, blin_v, blout_u, blout_v, same,
-                m_cut=None, m_total=None):
+                m_cut=None, m_total=None, d_cut=None, d_total=None):
     """All label inputs (W, Q) uint32; ``same`` (Q,) bool (u == v).
 
     Returns (Q,) int32: +1 reachable / 0 unreachable / -1 unknown.
@@ -20,6 +20,11 @@ def verdict_ref(dlo_u, dli_v, dlo_v, dli_u,
     ``m_cut`` (Q,) int32 / ``m_total`` scalar: per-lane edge-count cutoff —
     label positives on stale lanes (m_cut < m_total) degrade to unknown;
     negatives and self-queries are monotone-safe and survive any cutoff.
+
+    ``d_cut`` (Q,) int32 / ``d_total`` scalar: per-lane tombstone cutoff —
+    lanes answered from deletion-stale labels (d_cut < d_total) keep only
+    self-positives and BL-containment negatives; DL positives and the
+    theorem-1/2 negatives degrade to unknown (stale positive evidence).
     """
     pos_lbl = jnp.any(dlo_u & dli_v, axis=0)
     pos = pos_lbl | same
@@ -30,6 +35,11 @@ def verdict_ref(dlo_u, dli_v, dlo_v, dli_u,
     neg = ~pos & (bl_neg | thm1 | thm2)
     if m_cut is not None:
         fresh = jnp.ravel(m_cut) >= jnp.ravel(m_total)[0]
-        pos = (pos_lbl & fresh) | same
+        if d_cut is not None:
+            d_fresh = jnp.ravel(d_cut) >= jnp.ravel(d_total)[0]
+            pos = (pos_lbl & fresh & d_fresh) | same
+            neg = jnp.where(d_fresh, neg, ~same & bl_neg)
+        else:
+            pos = (pos_lbl & fresh) | same
     return jnp.where(pos, jnp.int32(1),
                      jnp.where(neg, jnp.int32(0), jnp.int32(-1)))

@@ -39,15 +39,28 @@ keeps the whole pipeline device-resident:
   the query batch out across devices (``launch.sharding.reach_query_
   shardings``), labels replicated.
 
+- **fully-dynamic serving** — ``delete()`` tombstones edges (epoch-versioned
+  ``del_at`` marks, no label recomputation) and leaves the index *dirty*;
+  while dirty, the verdict phases downgrade every verdict resting on
+  positive label evidence (DL positives, theorem-1/2 negatives) to
+  "unknown → BFS over live edges", and the BFS drops the DL prune — BL
+  negatives and the BL containment prunes stay on (sound under deletion:
+  bits are never removed).  Deletes drain in-flight submits first
+  (cross-delete coalescing would break the BL prune's coherence argument);
+  ``rebuild()`` re-runs Alg 1 over the live edges, compacts tombstones, and
+  re-binds the engine with the usual donation-safety rules.
+
 ``core.query.query`` is retained verbatim as the reference implementation;
 ``tests/test_property_engine.py`` / ``tests/test_metamorphic.py`` check the
 engine against it and against the dense transitive-closure oracle on random
-insert/query interleavings, at every query's submit epoch.
+insert/query interleavings, at every query's submit epoch;
+``tests/test_deletions.py`` is the fully-dynamic differential suite.
 """
 from __future__ import annotations
 
 import functools
 import math
+import warnings
 import weakref
 from dataclasses import dataclass
 
@@ -57,7 +70,8 @@ import numpy as np
 
 from repro.core import query as Q
 from repro.core import update as U
-from repro.core.dbl import DBLIndex
+from repro.core.dbl import (DBLIndex, LabelSaturationWarning,
+                            _saturation_message)
 from repro.kernels.dbl_query.ops import verdicts_device
 from repro.kernels.bfs_prune.ops import admit_plane as bfs_admit_plane_op
 
@@ -94,16 +108,21 @@ class EngineStats:
     bfs_answered: int = 0
     batches: int = 0
     inserts: int = 0
+    deletes: int = 0          # delete-batch pairs tombstoned
+    rebuilds: int = 0         # lazy label rebuilds (dirty -> clean)
     bfs_dispatches: int = 0
     flushes: int = 0
     stale_lanes: int = 0      # residue lanes resolved across an epoch gap
+    saturation_events: int = 0  # inserts whose label fixpoint hit max_iters
 
     def as_dict(self) -> dict:
         rho = self.label_answered / max(self.queries, 1)
         return {"queries": self.queries, "rho": rho,
                 "batches": self.batches, "inserts": self.inserts,
+                "deletes": self.deletes, "rebuilds": self.rebuilds,
                 "bfs_dispatches": self.bfs_dispatches,
-                "flushes": self.flushes, "stale_lanes": self.stale_lanes}
+                "flushes": self.flushes, "stale_lanes": self.stale_lanes,
+                "saturation_events": self.saturation_events}
 
 
 class _Pending:
@@ -180,6 +199,9 @@ class QueryEngine:
         # resolve them against the lineage they belong to before the engine
         # lets go of it (older snapshots' buffers may already be donated)
         self._inflight: list = []
+        # deferred saturation flags (one () bool per insert); drained at
+        # flush boundaries so the insert path never forces a host sync
+        self._sat_flags: list = []
         self._build_executables()
         if index is not None:
             self.index = index
@@ -200,13 +222,7 @@ class QueryEngine:
         re-bind the engine no longer owns it.  A re-bind therefore never
         changes answers — it only bounds how far coalescing can defer."""
         if self._index is not None:
-            live = [r() for r in self._inflight]
-            stale = [p for p in live
-                     if p is not None and p._result is None
-                     and p.lineage == self._lineage]
-            if stale:
-                self.flush(stale)
-        self._inflight = []
+            self._drain_inflight()    # also clears the inflight list
         self._lineage += 1
         self._index = idx
         if idx is not None:
@@ -215,6 +231,21 @@ class QueryEngine:
         else:
             self.epoch = 0
             self._m_now = 0
+
+    def _drain_inflight(self):
+        """Resolve every unresolved submit of the CURRENT lineage (with its
+        as-of-submit cutoffs) and forget the inflight list.  Called before a
+        re-bind, a rebuild, and every delete batch: tombstones change which
+        edges post-submit label updates propagate over, so the BL-containment
+        prune (and hence coalescing) is only sound while every pooled lane
+        shares the dispatch's tombstone set."""
+        live = [r() for r in self._inflight]
+        stale = [p for p in live
+                 if p is not None and p._result is None
+                 and p.lineage == self._lineage]
+        if stale:
+            self.flush(stale)
+        self._inflight = []
 
     # ------------------------------------------------------------ compile
     def _build_executables(self):
@@ -226,18 +257,34 @@ class QueryEngine:
         max_iters = self.max_iters
         use_bfs_kernel = self.bfs_kernel
 
-        def label_phase(p: Q.PackedLabels, u, v):
+        def _d_cut_vec(d_stale, shape):
+            """Per-lane tombstone-cutoff operand from a traced dirty scalar:
+            0 < 1 when dirty, 1 >= 1 when clean — one compiled executable
+            serves both states (the flag flips at delete/rebuild time)."""
+            return jnp.broadcast_to(
+                jnp.where(d_stale, jnp.int32(0), jnp.int32(1)), shape)
+
+        def label_phase(p: Q.PackedLabels, u, v, d_stale):
             """Verdicts + on-device compaction of unknown lanes, fused.
 
             Compaction is an O(Q) cumsum/scatter (not a sort): unknown lanes
             keep submission order at slots [0, nu), known lanes fill the
             tail, and endpoints are scattered straight into compacted
-            position so no second gather pass is needed."""
+            position so no second gather pass is needed.
+
+            ``d_stale`` (() bool) is the index's dirty flag: with pending
+            tombstones only self-positives and BL negatives answer from
+            labels; DL positives / theorem negatives join the unknown lanes
+            and ride the live-edge BFS."""
             if backend in ("pallas", "pallas-interpret"):
-                verd = verdicts_device(p, u, v, q_block=q_block,
-                                       interpret=interpret).astype(jnp.int8)
+                verd = verdicts_device(
+                    p, u, v,
+                    jnp.full(u.shape, Q.FRESH_CUT, jnp.int32), jnp.int32(0),
+                    _d_cut_vec(d_stale, u.shape), jnp.int32(1),
+                    q_block=q_block, interpret=interpret).astype(jnp.int8)
             else:
-                verd = Q.label_verdicts(p, u, v)
+                verd = Q.cut_verdicts(p, u, v, jnp.int32(1), jnp.int32(0),
+                                      ~d_stale)
             unknown = verd == jnp.int8(-1)
             n_unknown = unknown.sum().astype(jnp.int32)
             rank_u = jnp.cumsum(unknown.astype(jnp.int32))
@@ -252,7 +299,8 @@ class QueryEngine:
             return answers, order, u_c, v_c, n_unknown
 
         def make_coalesced_phase(chunk: int):
-            def coalesced(g: Q.Graph, p: Q.PackedLabels, uu, vv, m_cut):
+            def coalesced(g: Q.Graph, p: Q.PackedLabels, uu, vv, m_cut,
+                          d_stale):
                 """One (chunk,)-shaped epoch-coalesced residue dispatch.
 
                 Fuses the monotone label re-check against the NEWEST labels
@@ -262,12 +310,20 @@ class QueryEngine:
 
                 - re-check verdict 0 → answer False (new-unreachable ⇒
                   old-unreachable, valid for every consistency mode);
-                - re-check verdict +1 → answer True; ``asof_verdicts`` has
+                - re-check verdict +1 → answer True; ``cut_verdicts`` has
                   already downgraded stale-lane positives to unknown when
                   the lane's cutoff demands as-of-submit semantics, so a
                   surviving +1 is always a legal answer;
                 - still-unknown lanes run the cutoff BFS (stale lanes lose
                   the DL prune inside, which keeps it sound).
+
+                ``d_stale`` (() bool): the group's index carries un-rebuilt
+                tombstones.  The re-check keeps only self-positives and BL
+                negatives, the BFS drops the DL prune for every lane, and
+                traversal sees only live edges (``edge_mask``).  The engine
+                drains in-flight submits before tombstoning, so all pooled
+                lanes share the dispatch's tombstone set and the edge-count
+                cutoffs stay exact under it.
 
                 Dead lanes (padding / answered) carry an out-of-range
                 source so they never extend the BFS while-loop."""
@@ -277,20 +333,23 @@ class QueryEngine:
                 if backend in ("pallas", "pallas-interpret"):
                     verd = verdicts_device(
                         p, uu_safe, vv, m_cut, g.m,
+                        _d_cut_vec(d_stale, uu.shape), jnp.int32(1),
                         q_block=min(q_block, chunk),
                         interpret=interpret).astype(jnp.int8)
                 else:
-                    verd = Q.label_verdicts(p, uu_safe, vv)
-                    verd = Q.asof_verdicts(verd, uu_safe, vv, m_cut, g.m)
+                    verd = Q.cut_verdicts(p, uu_safe, vv, m_cut, g.m,
+                                          ~d_stale)
                 need = live_lane & (verd == jnp.int8(-1))
                 uu2 = jnp.where(need, uu, jnp.int32(n_cap))
                 admit = None
                 if use_bfs_kernel:
                     admit = bfs_admit_plane_op(
                         p, jnp.minimum(uu2, jnp.int32(n_cap - 1)), vv,
-                        m_cut, g.m, n_block=min(1024, max(8, n_cap)),
+                        m_cut, g.m,
+                        _d_cut_vec(d_stale, uu.shape), jnp.int32(1),
+                        n_block=min(1024, max(8, n_cap)),
                         q_block=min(128, chunk), interpret=interpret)
-                hit = Q.pruned_bfs(g, p, uu2, vv, admit, m_cut,
+                hit = Q.pruned_bfs(g, p, uu2, vv, admit, m_cut, ~d_stale,
                                    n_cap=n_cap, max_iters=max_iters)
                 return ((verd == jnp.int8(1)) & live_lane) | hit
             return coalesced
@@ -300,7 +359,7 @@ class QueryEngine:
             qsh, repl = reach_query_shardings(self.mesh)
             label_shardings = Q.PackedLabels(repl, repl, repl, repl)
             self._label_phase = jax.jit(
-                label_phase, in_shardings=(label_shardings, qsh, qsh))
+                label_phase, in_shardings=(label_shardings, qsh, qsh, repl))
         else:
             self._label_phase = jax.jit(label_phase)
 
@@ -313,13 +372,18 @@ class QueryEngine:
 
         def insert_impl(g, dl_in, dl_out, bl_in, bl_out, ns, nd, epoch):
             n_cap = dl_in.shape[0]
-            g2, a, b, c, d, _, epoch2 = U.insert_and_update(
+            g2, a, b, c, d, iters, epoch2 = U.insert_and_update(
                 g, dl_in, dl_out, bl_in, bl_out, ns, nd, epoch,
                 n_cap=n_cap, max_iters=max_iters)
-            return g2, a, b, c, d, Q.pack_labels(a, b, c, d), epoch2
+            sat = U.saturated(iters, max_iters)
+            return g2, a, b, c, d, Q.pack_labels(a, b, c, d), epoch2, sat
 
         donate_ins = (0, 1, 2, 3, 4) if self.donate else ()
         self._insert_fn = jax.jit(insert_impl, donate_argnums=donate_ins)
+        # delete path: tombstone + epoch bump only, labels untouched
+        self._delete_fn = jax.jit(
+            lambda g, ds, dd, e: U.delete_and_mark(g, ds, dd, e),
+            donate_argnums=(0,) if self.donate else ())
 
     def _chunk_buckets(self):
         sizes, c = [], 16
@@ -363,7 +427,7 @@ class QueryEngine:
             uj = jax.device_put(uj, qsh)
             vj = jax.device_put(vj, qsh)
         answers, order, u_c, v_c, n_unknown = self._label_phase(
-            index.packed, uj, vj)
+            index.packed, uj, vj, index.dirty_flag)
         if self._index is not None and index is self._index:
             tag = dict(lineage=self._lineage, epoch=self.epoch,
                        m_at_submit=self._m_now)
@@ -420,6 +484,8 @@ class QueryEngine:
         for key, grp in groups.items():
             self._finish_group(grp, results, mode, key[0] == "lineage")
         self.stats.flushes += 1
+        if self._sat_flags:
+            self.check_saturation()   # flush already syncs; piggy-back here
         return [results[i] for i in range(len(pendings))]
 
     def _finish_group(self, grp, results, mode, engine_group):
@@ -456,12 +522,14 @@ class QueryEngine:
                 cuts = np.concatenate([cuts,
                                        np.full(pad, Q.FRESH_CUT, np.int32)])
             fn = self._coal_phases[chunk]
+            d_stale = jnp.asarray(index.dirty_flag)
             hit_parts = []
             for start in range(0, total, chunk):
                 hit_parts.append(fn(index.graph, index.packed,
                                     jnp.asarray(uu[start:start + chunk]),
                                     jnp.asarray(vv[start:start + chunk]),
-                                    jnp.asarray(cuts[start:start + chunk])))
+                                    jnp.asarray(cuts[start:start + chunk]),
+                                    d_stale))
                 self.stats.bfs_dispatches += 1
             # all chunks are enqueued before the first D2H forces a wait
             hits_all = np.concatenate([np.asarray(h)
@@ -513,16 +581,70 @@ class QueryEngine:
         idx = self._index
         ns = jnp.asarray(np.asarray(new_src, np.int32))
         nd = jnp.asarray(np.asarray(new_dst, np.int32))
-        g2, a, b, c, d, packed, epoch2 = self._insert_fn(
+        g2, a, b, c, d, packed, epoch2, sat = self._insert_fn(
             idx.graph, idx.dl_in, idx.dl_out, idx.bl_in, idx.bl_out,
             ns, nd, jnp.int32(self.epoch))
         # direct field write: an insert advances the epoch WITHIN the
         # current lineage (the property setter would start a new one)
-        self._index = DBLIndex(g2, idx.landmarks, a, b, c, d, packed, epoch2)
+        self._index = idx._replace(
+            graph=g2, dl_in=a, dl_out=b, bl_in=c, bl_out=d, packed=packed,
+            epoch=epoch2, saturated=jnp.asarray(idx.saturated) | sat)
+        self._sat_flags.append(sat)   # checked lazily at flush boundaries
         self.epoch += 1
         self._m_now += int(ns.size)
         self.stats.inserts += int(ns.size)
         return self._index
+
+    def delete(self, del_src, del_dst) -> DBLIndex:
+        """Tombstone every live edge matching a (src, dst) pair — NO label
+        recomputation.  The bound index goes (or stays) *dirty*: until the
+        next ``rebuild()``, label positives and theorem negatives downgrade
+        to live-edge BFS while BL negatives keep answering from labels.
+
+        Outstanding submits ARE drained first (unlike ``insert``): label
+        maintenance after the delete propagates over a different live edge
+        set than the one the in-flight lanes observed, which breaks the
+        BL-containment prune's coherence argument for those lanes — so
+        cross-DELETE coalescing is unsound, and deletes (rare next to
+        inserts) pay the drain instead of every query paying the prune."""
+        if self._index is None:
+            raise ValueError("engine has no bound index; use run()")
+        self._drain_inflight()
+        idx = self._index
+        ds = jnp.asarray(np.asarray(del_src, np.int32))
+        dd = jnp.asarray(np.asarray(del_dst, np.int32))
+        g2, epoch2 = self._delete_fn(idx.graph, ds, dd,
+                                     jnp.int32(self.epoch))
+        self._index = idx._replace(graph=g2, epoch=epoch2)
+        self.epoch += 1
+        self.stats.deletes += int(ds.size)
+        return self._index
+
+    def rebuild(self, **build_kw) -> DBLIndex:
+        """Lazy label rebuild over the live edge set (clears the dirty
+        state, compacts tombstones by default).  Re-binds the engine to the
+        rebuilt index, which resolves in-flight submits against the outgoing
+        lineage first — the same donation-safety rules as any re-bind."""
+        if self._index is None:
+            raise ValueError("engine has no bound index; use run()")
+        build_kw.setdefault("max_iters", self.max_iters)
+        new_idx = self._index.rebuild(**build_kw)
+        self.index = new_idx          # property setter: drain + new lineage
+        self.stats.rebuilds += 1
+        return new_idx
+
+    def check_saturation(self, *, warn: bool = True) -> int:
+        """Drain the deferred per-insert saturation flags (syncs them) and
+        return how many insert batches saturated; optionally warns.  Called
+        automatically at every ``flush()``."""
+        flags, self._sat_flags = self._sat_flags, []
+        n = sum(bool(np.asarray(f)) for f in flags)
+        if n:
+            self.stats.saturation_events += n
+            if warn:
+                warnings.warn(_saturation_message(self.max_iters),
+                              LabelSaturationWarning, stacklevel=2)
+        return n
 
     # ------------------------------------------------------ introspection
     def dispatch_shape_counts(self) -> dict:
@@ -549,7 +671,8 @@ class QueryEngine:
                 index.graph, index.packed,
                 jnp.full((c,), n_cap, jnp.int32),
                 jnp.zeros((c,), jnp.int32),
-                jnp.full((c,), Q.FRESH_CUT, jnp.int32))
+                jnp.full((c,), Q.FRESH_CUT, jnp.int32),
+                jnp.asarray(False))
         return self
 
 

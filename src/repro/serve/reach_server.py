@@ -1,10 +1,14 @@
-"""Batched reachability serving on a live DBL index.
+"""Batched reachability serving on a live, fully-dynamic DBL index.
 
 The serving analogue of the paper's query workload: interleaved batches of
-queries and edge insertions against one index.  All query traffic goes
-through the device-resident ``QueryEngine`` (fused label phase, compacted
-BFS chunks, persistent executables); insertions run the engine's donated
-Alg-3 path and bump the snapshot epoch WITHOUT draining in-flight queries.
+queries, edge insertions, and edge deletions against one index.  All query
+traffic goes through the device-resident ``QueryEngine`` (fused label phase,
+compacted BFS chunks, persistent executables); insertions run the engine's
+donated Alg-3 path and bump the snapshot epoch WITHOUT draining in-flight
+queries; deletions tombstone edges (dirty mode: verdicts that rest on
+positive label evidence downgrade to live-edge BFS) and labels are rebuilt
+LAZILY — scheduled when the tombstone ratio crosses a policy threshold,
+executed at the next flush/query boundary.
 
 Two serving surfaces:
 
@@ -35,24 +39,41 @@ class ServeStats:
     label_answered: int = 0
     bfs_answered: int = 0
     inserts: int = 0
+    deletes: int = 0
+    rebuilds: int = 0
     flushes: int = 0
     query_s: float = 0.0
     insert_s: float = 0.0
+    delete_s: float = 0.0
+    rebuild_s: float = 0.0
     flush_s: float = 0.0
 
     def as_dict(self):
         rho = self.label_answered / max(self.queries, 1)
         return {"queries": self.queries, "rho": rho,
-                "inserts": self.inserts, "flushes": self.flushes,
+                "inserts": self.inserts, "deletes": self.deletes,
+                "rebuilds": self.rebuilds, "flushes": self.flushes,
                 "query_s": self.query_s, "insert_s": self.insert_s,
+                "delete_s": self.delete_s, "rebuild_s": self.rebuild_s,
                 "flush_s": self.flush_s}
 
 
 class ReachabilityServer:
+    """Fully-dynamic serving: ``insert`` (Alg 3, epoch bump, pipeline rides
+    across it), ``delete`` (epoch-versioned tombstones + dirty flag, no label
+    recomputation — in-flight submits drain first), and a *lazy* label
+    rebuild.  ``rebuild_dead_ratio`` is the laziness knob: once tombstones
+    exceed that fraction of the edge prefix, a rebuild over the live edge
+    set is SCHEDULED and executed at the next flush/query boundary (not
+    inside the delete call), so delete latency stays O(tombstone mask) and
+    rebuild cost amortizes across the whole dirty window.  Set it to
+    ``None`` to only ever rebuild explicitly."""
+
     def __init__(self, index: DBLIndex | None, *, bfs_chunk: int = 256,
                  max_iters: int = 256, backend: str = "auto",
                  mesh=None, engine: QueryEngine | None = None,
-                 consistency: str = "as-of-submit"):
+                 consistency: str = "as-of-submit",
+                 rebuild_dead_ratio: float | None = 0.25):
         if engine is not None:
             # a supplied engine carries its own configuration; conflicting
             # per-server knobs would be silently ignored, so reject them
@@ -70,8 +91,12 @@ class ReachabilityServer:
                 backend=backend, mesh=mesh, consistency=consistency)
         if self.engine.index is None:
             raise ValueError("server needs an index (directly or via engine)")
+        if rebuild_dead_ratio is not None and not 0 < rebuild_dead_ratio <= 1:
+            raise ValueError("rebuild_dead_ratio must be in (0, 1] or None")
+        self.rebuild_dead_ratio = rebuild_dead_ratio
         self.stats = ServeStats()
         self._pending = []
+        self._rebuild_due = False
 
     @property
     def index(self) -> DBLIndex:
@@ -81,8 +106,13 @@ class ReachabilityServer:
     def epoch(self) -> int:
         return self.engine.epoch
 
+    @property
+    def dirty(self) -> bool:
+        return self.engine.index.is_dirty
+
     # ------------------------------------------------------- synchronous
     def query(self, u, v) -> np.ndarray:
+        self._maybe_rebuild()
         t = time.perf_counter()
         ans, info = self.engine.query(np.asarray(u, np.int32),
                                       np.asarray(v, np.int32),
@@ -108,7 +138,8 @@ class ReachabilityServer:
 
     def flush(self, *, consistency: str | None = None) -> list:
         """Resolve every outstanding micro-batch in one epoch-coalesced
-        dispatch sequence; returns their answers in submission order."""
+        dispatch sequence; returns their answers in submission order.
+        A scheduled lazy rebuild runs here, after the resolution."""
         t = time.perf_counter()
         # flush BEFORE clearing the queue: if the engine rejects the
         # consistency mode, the submitted batches must stay enqueued
@@ -122,6 +153,7 @@ class ReachabilityServer:
             self.stats.queries += len(ans)
             self.stats.bfs_answered += nu
             self.stats.label_answered += len(ans) - nu
+        self._maybe_rebuild()
         return outs
 
     def insert(self, src, dst):
@@ -134,6 +166,44 @@ class ReachabilityServer:
         self.stats.insert_s += time.perf_counter() - t
         self.stats.inserts += len(np.asarray(src))
 
+    # ------------------------------------------------------ fully dynamic
+    def delete(self, src, dst):
+        """Tombstone matching live edges and go dirty — O(mask) work, no
+        label recomputation.  Drains in-flight submits (see engine.delete),
+        then *schedules* a lazy rebuild if the tombstone ratio crossed the
+        policy threshold; the rebuild itself runs at the next flush/query
+        boundary so the delete call returns immediately."""
+        from repro.core import graph as G
+        t = time.perf_counter()
+        idx = self.engine.delete(np.asarray(src, np.int32),
+                                 np.asarray(dst, np.int32))
+        idx.graph.del_at.block_until_ready()
+        self.stats.delete_s += time.perf_counter() - t
+        self.stats.deletes += len(np.asarray(src))
+        if self.rebuild_dead_ratio is not None and not self._rebuild_due:
+            dead = int(np.asarray(G.dead_edge_count(idx.graph)))
+            m = max(int(np.asarray(idx.graph.m)), 1)
+            if dead / m >= self.rebuild_dead_ratio:
+                self._rebuild_due = True
+
+    def rebuild(self, **build_kw):
+        """Rebuild labels over the live edge set now (clears dirty state;
+        compacts tombstones; re-binds the engine, resolving in-flight
+        submits first)."""
+        t = time.perf_counter()
+        idx = self.engine.rebuild(**build_kw)
+        idx.packed.dl_in.block_until_ready()
+        self.stats.rebuild_s += time.perf_counter() - t
+        self.stats.rebuilds += 1
+        self._rebuild_due = False
+        # queued pendings were resolved by the re-bind drain; they stay in
+        # the queue so the next flush() still returns their answers in order
+        return idx
+
+    def _maybe_rebuild(self):
+        if self._rebuild_due:
+            self.rebuild()
+
     def engine_stats(self) -> dict:
         """Engine-level telemetry: dispatch shapes + batch/BFS counters."""
         d = self.engine.stats.as_dict()
@@ -141,4 +211,6 @@ class ReachabilityServer:
         d["backend"] = self.engine.backend
         d["epoch"] = self.engine.epoch
         d["consistency"] = self.engine.consistency
+        d["dirty"] = self.dirty
+        d["rebuild_due"] = self._rebuild_due
         return d

@@ -51,6 +51,33 @@ def main():
         a = np.asarray(getattr(ref2, name))
         b = np.asarray(getattr(idx2, name))
         assert (a == b).all(), f"sharded insert diverged on {name}"
+    # device-resident contract: the sharded insert must come out in the
+    # index sharding scheme (no host round-trip / re-device_put), with the
+    # epoch a committed replicated int32 scalar
+    want_sh = D.index_shardings(mesh)
+    assert idx2.dl_in.sharding == want_sh.dl_in, idx2.dl_in.sharding
+    assert idx2.graph.src.sharding == want_sh.graph.src
+    assert idx2.packed.dl_in.sharding == want_sh.packed.dl_in
+    assert idx2.epoch.dtype == jnp.int32 and int(idx2.epoch) == 1
+    # a second batch reuses the cached executable and stays resident
+    idx3b = D.distributed_insert(idx2, mesh, nd[:8], ns[:8], max_iters=64)
+    assert idx3b.dl_in.sharding == want_sh.dl_in
+
+    # fully-dynamic: sharded tombstone delete + dirty query + rebuild
+    del_s, del_d = src[:32], dst[:32]
+    refd = ref2.delete_edges(del_s, del_d)
+    idxd = idx2.delete_edges(del_s, del_d)
+    u2 = rng.integers(0, n, 1024).astype(np.int32)
+    v2 = rng.integers(0, n, 1024).astype(np.int32)
+    ad = np.asarray(refd.query(u2, v2, bfs_chunk=128, max_iters=64,
+                               driver="host"))
+    bd = np.asarray(idxd.query(u2, v2, bfs_chunk=128, max_iters=64,
+                               driver="host"))
+    assert (ad == bd).all(), "sharded dirty query diverged"
+    refr = refd.rebuild(max_iters=64)
+    br = np.asarray(refr.query(u2, v2, bfs_chunk=128, max_iters=64,
+                               driver="host"))
+    assert (ad == br).all(), "rebuild changed dirty-mode answers"
 
     # elastic re-placement: different mesh shape, same results
     mesh2 = make_mesh_compat((8,), ("data",))

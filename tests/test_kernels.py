@@ -248,6 +248,125 @@ def test_dbl_query_cutoff_parity_random_shapes(seed, wd, wb, q, q_block):
         got_cut[stale], np.where(base[stale] == 1, -1, base[stale]))
 
 
+# ------------------------------- tombstone (d_cut / d_total) operand sweeps
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4), st.integers(1, 4),
+       st.sampled_from(_ODD_QS), st.sampled_from((128, 256)))
+@settings(max_examples=20, deadline=None)
+def test_dbl_query_tombstone_cutoff_parity_random_shapes(seed, wd, wb, q,
+                                                         q_block):
+    """dbl_query verdicts with the tombstone cutoff pair == verdict_ref over
+    non-multiple-of-128 query counts: deletion-stale lanes keep ONLY
+    self-positives and BL negatives; d-fresh lanes are bitwise the
+    m-cut-only kernel."""
+    rng = np.random.default_rng(seed)
+    n = 50
+    p = _rand_packed_labels(rng, n, wd, wb)
+    u = jnp.asarray(rng.integers(0, n, q).astype(np.int32))
+    v = jnp.asarray(rng.integers(0, n, q).astype(np.int32))
+    m_total = int(rng.integers(1, 300))
+    d_total = int(rng.integers(1, 9))
+    m_cuts = _draw_cuts(rng, q, m_total)
+    d_cuts = _draw_cuts(rng, q, d_total)
+    from repro.kernels.dbl_query.ops import verdicts_device
+    got = np.asarray(verdicts_device(
+        p, u, v, jnp.asarray(m_cuts), jnp.int32(m_total),
+        jnp.asarray(d_cuts), jnp.int32(d_total),
+        q_block=q_block, interpret=True))
+    streams = [p.dl_out[u].T, p.dl_in[v].T, p.dl_out[v].T, p.dl_in[u].T,
+               p.bl_in[u].T, p.bl_in[v].T, p.bl_out[v].T, p.bl_out[u].T]
+    want = np.asarray(verdict_ref(
+        streams[0], streams[1], streams[2], streams[3],
+        streams[4], streams[5], streams[7], streams[6], (u == v),
+        jnp.asarray(m_cuts), jnp.int32(m_total),
+        jnp.asarray(d_cuts), jnp.int32(d_total)))
+    np.testing.assert_array_equal(got, want)
+    # jnp twin used by the engine's non-Pallas path agrees bitwise
+    want_core = np.asarray(Q.cut_verdicts(
+        p, u, v, jnp.asarray(m_cuts), jnp.int32(m_total),
+        jnp.asarray(d_cuts) >= d_total))
+    np.testing.assert_array_equal(got, want_core)
+    # d-fresh lanes == the m-cut-only kernel
+    base_m = np.asarray(verdicts_device(
+        p, u, v, jnp.asarray(m_cuts), jnp.int32(m_total),
+        q_block=q_block, interpret=True))
+    d_fresh = d_cuts >= d_total
+    np.testing.assert_array_equal(got[d_fresh], base_m[d_fresh])
+    # d-stale lanes: only same/BL survive — no +1 off the diagonal, and any
+    # 0 must already be a 0 of the dirty rule (check against dirty verdicts)
+    dirty = np.asarray(Q.dirty_label_verdicts(p, u, v))
+    np.testing.assert_array_equal(got[~d_fresh], dirty[~d_fresh])
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 3), st.integers(1, 3),
+       st.sampled_from((3, 37, 100, 127, 130)),
+       st.sampled_from((5, 33, 100, 129)))
+@settings(max_examples=15, deadline=None)
+def test_bfs_prune_tombstone_cutoff_parity_random_shapes(seed, wd, wb, n, q):
+    """bfs_admit_plane with the tombstone operand == admit_ref over
+    non-block-multiple n/Q; deletion-stale lanes drop exactly the DL term
+    (their plane is a superset of the full plane)."""
+    rng = np.random.default_rng(seed)
+    blin_all = _rand_words(rng, (wb, n))
+    blout_all = _rand_words(rng, (wb, n))
+    dlin_all = _rand_words(rng, (wd, n))
+    blin_v = _rand_words(rng, (wb, q))
+    blout_v = _rand_words(rng, (wb, q))
+    dlo_u = _rand_words(rng, (wd, q))
+    m_total = int(rng.integers(1, 400))
+    d_total = int(rng.integers(1, 7))
+    m_cuts = _draw_cuts(rng, q, m_total)
+    d_cuts = _draw_cuts(rng, q, d_total)
+    want = admit_ref(blin_all, blout_all, dlin_all, blin_v, blout_v, dlo_u,
+                     jnp.asarray(m_cuts), jnp.int32(m_total),
+                     jnp.asarray(d_cuts), jnp.int32(d_total))
+    base = admit_ref(blin_all, blout_all, dlin_all, blin_v, blout_v, dlo_u)
+    assert bool(jnp.all(want | ~base)), \
+        "tombstone admit plane must be a superset of the full plane"
+    if (m_cuts >= m_total).all() and (d_cuts >= d_total).all():
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(base))
+
+    def pad(x, mult, axis, value=0):
+        rem = (-x.shape[axis]) % mult
+        cfg = [(0, 0)] * x.ndim
+        cfg[axis] = (0, rem)
+        return jnp.pad(x, cfg, constant_values=value)
+
+    nb, qb = 64, 64
+    got = bfs_admit_plane(
+        pad(blin_all, nb, 1), pad(blout_all, nb, 1), pad(dlin_all, nb, 1),
+        pad(blin_v, qb, 1), pad(blout_v, qb, 1), pad(dlo_u, qb, 1),
+        pad(jnp.asarray(m_cuts).reshape(1, q), qb, 1, value=2**31 - 1),
+        jnp.full((1, 1), m_total, jnp.int32),
+        pad(jnp.asarray(d_cuts).reshape(1, q), qb, 1, value=2**31 - 1),
+        jnp.full((1, 1), d_total, jnp.int32),
+        n_block=nb, q_block=qb, interpret=True)[:n, :q]
+    np.testing.assert_array_equal(np.asarray(got).astype(bool),
+                                  np.asarray(want))
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from((17, 64, 119)))
+@settings(max_examples=8, deadline=None)
+def test_bfs_prune_ops_tombstone_matches_core_dl_gate(seed, q):
+    """End-to-end on a real index: the ops wrapper's combined (m_cut, d_cut)
+    gate equals core ``_admit_plane`` with the equivalent per-lane DL gate
+    — the contract the engine's dirty dispatches rely on."""
+    rng = np.random.default_rng(seed)
+    n, src, dst = random_graph(rng, n_max=50, m_max=200)
+    g = make_graph(src, dst, n)
+    idx = DBLIndex.build(g, n_cap=n, k=min(8, n), k_prime=8, max_iters=n + 2)
+    u = jnp.asarray(rng.integers(0, n, q).astype(np.int32))
+    v = jnp.asarray(rng.integers(0, n, q).astype(np.int32))
+    m_total, d_total = len(src), int(rng.integers(1, 5))
+    m_cuts = jnp.asarray(_draw_cuts(rng, q, m_total))
+    d_cuts = jnp.asarray(_draw_cuts(rng, q, d_total))
+    got = admit_plane(idx.packed, u, v, m_cuts, jnp.int32(m_total),
+                      d_cuts, jnp.int32(d_total),
+                      n_block=32, q_block=32, interpret=True)
+    want = Q._admit_plane(idx.packed, u, v, n,
+                          dl_on=(m_cuts >= m_total) & (d_cuts >= d_total))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 @given(st.integers(0, 2**31 - 1), st.sampled_from((45, 107, 200)))
 @settings(max_examples=8, deadline=None)
 def test_bfs_prune_ops_random_graph_sizes(seed, q):

@@ -72,6 +72,16 @@ def _random_stream(seed, *, scc_merge=False):
     return src, dst, batches
 
 
+def _assert_not_saturated():
+    """Every stream insert must CONVERGE — a fixpoint cut off at max_iters
+    leaves labels silently stale, which would invalidate every monotonicity
+    conclusion this suite draws.  The engine's bound index carries the
+    sticky flag; max_iters = N + 2 bounds any BFS level count on N
+    vertices, so saturation here means a real propagation bug."""
+    assert not bool(np.asarray(ENG.index.saturated)), \
+        "label fixpoint saturated during a metamorphic stream"
+
+
 def _drive_coalesced(src, dst, batches):
     """Submit all-pairs at every epoch, insert between, NEVER flush until
     the end — the maximal cross-epoch coalescing stream.  Returns the
@@ -83,6 +93,7 @@ def _drive_coalesced(src, dst, batches):
         pendings.append(ENG.submit(ENG.index, U_ALL, V_ALL))
         snapshots.append((list(cur_s), list(cur_d)))
         ENG.insert(ns, nd)
+        _assert_not_saturated()
         cur_s += ns.tolist()
         cur_d += nd.tolist()
     pendings.append(ENG.submit(ENG.index, U_ALL, V_ALL))
@@ -111,6 +122,7 @@ def test_true_at_epoch_e_stays_true_forever(seed):
         if r < ROUNDS:
             ns, nd = batches[r]
             ENG.insert(ns, nd)
+            _assert_not_saturated()
             cur_s += ns.tolist()
             cur_d += nd.tolist()
 

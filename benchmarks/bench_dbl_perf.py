@@ -6,6 +6,10 @@
 2. *Packed-word query path vs bool-plane query path* — the "compact bitwise
    operations" claim: packed uint32 words cut label bytes 8x; on TPU the
    dbl_query kernel is HBM-bound so bytes ~ time.
+3. *Incremental (delta) rebuild vs full Alg-1 rebuild* — the maintenance-path
+   claim of PR 4: on a PR-3-style fully-dynamic stream, a rebuild that only
+   repairs the invalidated label state beats re-running Alg 1 from scratch
+   at low tombstone ratios, with bitwise-identical labels.
 """
 from __future__ import annotations
 
@@ -18,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import DBLIndex, bitset
+from repro.core import graph as G
 from repro.core import query as Q
 from repro.serve.engine import QueryEngine
 from .common import load, random_queries, timed
@@ -333,21 +338,131 @@ def deletion_stream(bg, *, rounds: int = 8, queries_per_round: int = 2,
     }
 
 
+def _dead_budget_pairs(src, dst, budget, rng):
+    """Distinct (src, dst) pairs whose tombstone multiplicity sums to at
+    most ``budget`` dead slots — deleting a pair kills ALL its live
+    duplicates, so power-law streams must budget deletions by resulting
+    dead slots, not by pair count."""
+    pairs, counts = np.unique(np.stack([src, dst], 1), axis=0,
+                              return_counts=True)
+    order = rng.permutation(len(pairs))
+    take, total = [], 0
+    for i in order:
+        if total + counts[i] > budget:
+            continue
+        take.append(i)
+        total += counts[i]
+        if total >= budget * 0.95:
+            break
+    sel = pairs[np.asarray(take, np.int64)]
+    return sel[:, 0].astype(np.int32), sel[:, 1].astype(np.int32)
+
+
+def delta_rebuild_stream(bg, *, checkpoints=(0.02, 0.05, 0.10),
+                         insert_b=8, repeats=5, max_iters=64, seed=21):
+    """Delta vs full rebuild latency on a PR-3-style fully-dynamic stream.
+
+    One growing dirty window: uniform insert batches and dead-budgeted
+    delete batches accumulate tombstones; at each dead-ratio checkpoint the
+    pending lazy rebuild is measured BOTH ways on the same dirty index
+    (rebuilds are pure, so the stream then continues dirty to the next
+    checkpoint).  Labels are checked bitwise between the modes once per
+    checkpoint, outside the timing.  Insert batches are small because the
+    rebuild window the dead-ratio policy opens is deletion-driven — inserts
+    are label-maintained by Alg 3 and only contribute seed churn (which the
+    delta path repairs as fresh columns, measured here too)."""
+    idx = bg.index(m_extra=len(checkpoints) * insert_b)
+    rng = np.random.default_rng(seed)
+    out = []
+    for target in checkpoints:
+        if insert_b:
+            ns = rng.integers(0, bg.n, insert_b).astype(np.int32)
+            nd = rng.integers(0, bg.n, insert_b).astype(np.int32)
+            idx = idx.insert_edges(ns, nd, max_iters=max_iters)
+        live = np.asarray(G.edge_mask(idx.graph))
+        s_np = np.asarray(idx.graph.src)[live]
+        d_np = np.asarray(idx.graph.dst)[live]
+        n_live = int(live.sum())
+        dead_now = int(np.asarray(G.dead_edge_count(idx.graph)))
+        budget = max(int(target * n_live) - dead_now, 0)
+        if budget:
+            ds, dd = _dead_budget_pairs(s_np, d_np, budget, rng)
+            idx = idx.delete_edges(ds, dd)
+        # dead over LIVE count — the same metric the server's
+        # rebuild_dead_ratio policy triggers on
+        dead = int(np.asarray(G.dead_edge_count(idx.graph)))
+        dead_ratio = dead / max(int(np.asarray(idx.graph.m)) - dead, 1)
+        delta, info = idx.rebuild_info(mode="delta", max_iters=max_iters)
+        full = idx.rebuild(mode="full", max_iters=max_iters)
+        ok = all(np.array_equal(np.asarray(a), np.asarray(b))
+                 for a, b in zip(delta.packed, full.packed))
+
+        def run(mode):
+            t0 = time.perf_counter()
+            idx.rebuild(mode=mode, max_iters=max_iters
+                        ).packed.dl_in.block_until_ready()
+            return time.perf_counter() - t0
+
+        # interleave the two modes sample-by-sample (after the warmup
+        # rebuilds above) so a noise burst on the shared CPU lands on both
+        # sides instead of skewing one sequential block
+        ts_d, ts_f = [], []
+        for _ in range(repeats):
+            ts_d.append(run("delta"))
+            ts_f.append(run("full"))
+        t_delta = sorted(ts_d)[len(ts_d) // 2]
+        t_full = sorted(ts_f)[len(ts_f) // 2]
+        out.append({
+            "dead_ratio": dead_ratio,
+            "delta_rebuild_ms": 1e3 * t_delta,
+            "full_rebuild_ms": 1e3 * t_full,
+            "speedup": t_full / t_delta,
+            "invalidation_frac": info["estimate"]["frac"],
+            "labels_bitwise_equal": bool(ok),
+        })
+    return out
+
+
 def main(scale: float = 0.1, datasets=("LJ", "Email", "Reddit"),
-         json_path: str | None = None):
-    """Runs the perf suite and writes the PR-3 trajectory file
-    ``BENCH_PR3.json`` (override with ``json_path`` / ``$BENCH_JSON``):
-    the PR-2 sections (mixed-stream engine vs host, epoch coalescing) plus
-    the fully-dynamic section — tombstone-mode (lazy rebuild) vs eager
-    rebuild-per-delete-batch on one mixed insert/delete/query stream, with
-    bitwise answer checks between the modes."""
-    json_path = json_path or os.environ.get("BENCH_JSON", "BENCH_PR3.json")
+         json_path: str | None = None, sections=None):
+    """Runs the perf suite and writes the PR-4 trajectory file
+    ``BENCH_PR4.json`` (override with ``json_path`` / ``$BENCH_JSON``):
+    the PR-2/PR-3 sections (mixed-stream engine vs host, epoch coalescing,
+    tombstone-mode vs eager rebuild-per-delete) plus the PR-4 section —
+    incremental (delta) rebuild vs full Alg-1 rebuild latency at growing
+    dead ratios on a PR-3-style fully-dynamic stream, labels checked
+    bitwise between the modes.  ``sections`` restricts which suites run
+    (subset of {"classic", "mixed", "epoch", "fully_dynamic", "delta"});
+    default runs everything."""
+    sections = set(sections or
+                   ("classic", "mixed", "epoch", "fully_dynamic", "delta"))
+    json_path = json_path or os.environ.get("BENCH_JSON", "BENCH_PR4.json")
     report = {"scale": scale, "backend": jax.default_backend(),
-              "datasets": {}, "epoch_coalescing": {}, "fully_dynamic": {}}
-    print("dataset,update_pruned_ms,rebuild_ms,update_speedup,"
-          "query_packed_ms,query_bool_ms,label_bytes_packed,label_bytes_bool")
+              "datasets": {}, "epoch_coalescing": {}, "fully_dynamic": {},
+              "delta_rebuild": {}}
+    # the delta section runs FIRST: rebuild latency is dispatch-overhead
+    # sensitive, and measuring it in a fresh process (before the other
+    # sections fill the jit caches and heap) matches how a serving process
+    # actually pays for a lazy rebuild
+    if "delta" in sections:
+        print("dataset,dead_ratio,delta_ms,full_ms,speedup,inval_frac,"
+              "bitwise  (delta vs full rebuild)")
+    for name in datasets if "delta" in sections else ():
+        bg = load(name, scale=scale)
+        pts = delta_rebuild_stream(bg)
+        report["delta_rebuild"][name] = pts
+        for p in pts:
+            print(f"{name},{p['dead_ratio']:.3f},"
+                  f"{p['delta_rebuild_ms']:.0f},{p['full_rebuild_ms']:.0f},"
+                  f"{p['speedup']:.2f}x,{p['invalidation_frac']:.3f},"
+                  f"{p['labels_bitwise_equal']}")
+
     rows = []
-    for name in datasets:
+    if "classic" in sections:
+        print("dataset,update_pruned_ms,rebuild_ms,update_speedup,"
+              "query_packed_ms,query_bool_ms,label_bytes_packed,"
+              "label_bytes_bool")
+    for name in datasets if "classic" in sections else ():
         bg = load(name, scale=scale)
         idx = bg.index(m_extra=200)
         rng = np.random.default_rng(3)
@@ -381,8 +496,9 @@ def main(scale: float = 0.1, datasets=("LJ", "Email", "Reddit"),
               f"{t_rebuild/t_upd:.1f}x,{1e3*t_packed:.2f},{1e3*t_bool:.2f},"
               f"{bytes_packed},{bytes_bool}")
 
-    print("\ndataset,host_qps,engine_qps,engine_speedup  (mixed stream)")
-    for name in datasets:
+    if "mixed" in sections:
+        print("\ndataset,host_qps,engine_qps,engine_speedup  (mixed stream)")
+    for name in datasets if "mixed" in sections else ():
         bg = load(name, scale=scale)
         host_qps, engine_qps = mixed_stream(bg)
         report["datasets"].setdefault(name, {})["mixed_stream"] = {
@@ -390,10 +506,11 @@ def main(scale: float = 0.1, datasets=("LJ", "Email", "Reddit"),
         print(f"{name},{host_qps:.0f},{engine_qps:.0f},"
               f"{engine_qps/host_qps:.1f}x")
 
-    print("\ndataset,qps_coalesced,qps_per_epoch,dispatches_coalesced,"
-          "dispatches_per_epoch,reduction,bitwise_asof,bitwise_latest"
-          "  (epoch coalescing)")
-    for name in datasets:
+    if "epoch" in sections:
+        print("\ndataset,qps_coalesced,qps_per_epoch,dispatches_coalesced,"
+              "dispatches_per_epoch,reduction,bitwise_asof,bitwise_latest"
+              "  (epoch coalescing)")
+    for name in datasets if "epoch" in sections else ():
         bg = load(name, scale=scale)
         r = epoch_stream(bg)
         report["epoch_coalescing"][name] = r
@@ -405,10 +522,11 @@ def main(scale: float = 0.1, datasets=("LJ", "Email", "Reddit"),
               f"{r['answers_bitwise_host_as_of_submit']},"
               f"{r['answers_bitwise_host_latest']}")
 
-    print("\ndataset,qps_tombstone,qps_eager,stream_speedup,"
-          "del_ms_tombstone,del_ms_eager,delete_speedup,bitwise"
-          "  (fully-dynamic stream)")
-    for name in datasets:
+    if "fully_dynamic" in sections:
+        print("\ndataset,qps_tombstone,qps_eager,stream_speedup,"
+              "del_ms_tombstone,del_ms_eager,delete_speedup,bitwise"
+              "  (fully-dynamic stream)")
+    for name in datasets if "fully_dynamic" in sections else ():
         bg = load(name, scale=scale)
         r = deletion_stream(bg)
         report["fully_dynamic"][name] = r
@@ -427,4 +545,14 @@ def main(scale: float = 0.1, datasets=("LJ", "Email", "Reddit"),
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser(description=main.__doc__)
+    ap.add_argument("--scale", type=float, default=0.1)
+    ap.add_argument("--datasets", nargs="+", default=["LJ", "Email", "Reddit"])
+    ap.add_argument("--json", dest="json_path", default=None)
+    ap.add_argument("--sections", nargs="+", default=None,
+                    choices=["classic", "mixed", "epoch", "fully_dynamic",
+                             "delta"])
+    a = ap.parse_args()
+    main(scale=a.scale, datasets=tuple(a.datasets), json_path=a.json_path,
+         sections=a.sections)

@@ -40,7 +40,8 @@ def index_shardings(mesh: Mesh) -> DBLIndex:
     g = Graph(src=vec, dst=vec, n=scal, m=scal, del_at=vec, del_epoch=scal)
     packed = Q.PackedLabels(plane, plane, plane, plane)
     return DBLIndex(graph=g, landmarks=scal, dl_in=plane, dl_out=plane,
-                    bl_in=plane, bl_out=plane, packed=packed, epoch=scal,
+                    bl_in=plane, bl_out=plane, packed=packed,
+                    bl_sources=vec, bl_sinks=vec, epoch=scal,
                     label_del_epoch=scal, saturated=scal)
 
 

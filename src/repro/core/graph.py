@@ -76,6 +76,18 @@ def edge_mask(g: Graph, at_del_epoch: jax.Array | int | None = None
     return in_prefix & (g.del_at > jnp.asarray(d, jnp.int32))
 
 
+def deleted_since(g: Graph, d: jax.Array | int) -> jax.Array:
+    """(m_cap,) bool — slots live at delete-epoch ``d`` but tombstoned now.
+
+    This is the edge set a *delta* label rebuild must account for: the labels
+    were last (re)built for delete-epoch ``d`` (``DBLIndex.label_del_epoch``),
+    so exactly these edges carried label evidence that the live graph no
+    longer supports.  Append-only inserts since ``d`` are NOT in this set —
+    insert maintenance keeps labels exact for them (Alg 3).
+    """
+    return edge_mask(g, d) & ~edge_mask(g)
+
+
 def live_edge_count(g: Graph) -> jax.Array:
     """() int32 — number of live (non-tombstoned) edges."""
     return edge_mask(g).sum().astype(jnp.int32)

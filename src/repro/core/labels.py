@@ -1,10 +1,20 @@
-"""DL / BL label construction (paper Algorithm 1, batched over sources).
+"""DL / BL label construction (paper Algorithm 1, batched over sources) and
+the partial-reset constructors behind the incremental (delta) rebuild.
 
 Instead of one BFS per landmark/leaf-bucket, all k sources propagate
 simultaneously as k lanes of a bool plane — the multi-source generalization of
 Alg 1 that the fixpoint engine executes in O(diameter) rounds of
 edge-parallel work.  Landmarks are self-seeded (l ∈ DL_in(l) ∩ DL_out(l)),
 matching Fig 1(b) and required by the Theorem 2 early-termination rule.
+
+The delta-rebuild constructors (``realign_landmarks``, ``bucket_churn``,
+``delta_plane_state``) produce a *partially reset* label state: entries that
+could have depended on a tombstoned edge (dirty rows) or whose seed set
+changed (fresh columns — landmark membership / leaf-bucket churn) are reset
+to their Alg-1 seed values, everything else keeps its old (still-exact) bits.
+Re-running the monotone fixpoint from that state over the live edges reaches
+the same least fixpoint a from-scratch Alg 1 does — see the soundness
+argument in ``core.dbl`` / README.
 """
 from __future__ import annotations
 
@@ -14,8 +24,22 @@ import jax
 import jax.numpy as jnp
 
 from .graph import Graph, edge_mask
-from .propagate import propagate
+from .propagate import propagate, push_boundary
 from .select import leaf_hash
+
+
+def dl_seed_plane(landmarks: jax.Array, *, n_cap: int, k: int) -> jax.Array:
+    """(n_cap, k) uint8 — Alg-1 DL seeds: lane l self-seeded at landmark l."""
+    seed = jnp.zeros((n_cap, k), jnp.uint8)
+    return seed.at[landmarks, jnp.arange(k)].set(1, mode="drop")
+
+
+def bl_seed_plane(mask: jax.Array, *, n_cap: int, k_prime: int) -> jax.Array:
+    """(n_cap, k') uint8 — Alg-1 BL seeds: leaf ``mask`` hashed to buckets."""
+    ids = jnp.arange(n_cap, dtype=jnp.int32)
+    h = leaf_hash(ids, k_prime)
+    onehot = jnp.arange(k_prime, dtype=jnp.int32)[None, :] == h[:, None]
+    return (onehot & mask[:, None]).astype(jnp.uint8)
 
 
 @functools.partial(jax.jit, static_argnames=("n_cap", "k", "max_iters"))
@@ -29,8 +53,7 @@ def build_dl(g: Graph, landmarks: jax.Array, *, n_cap: int, k: int,
     a cut-off BUILD produces incomplete labels just like a cut-off insert.
     """
     live = edge_mask(g)
-    seed = jnp.zeros((n_cap, k), jnp.uint8)
-    seed = seed.at[landmarks, jnp.arange(k)].set(1, mode="drop")
+    seed = dl_seed_plane(landmarks, n_cap=n_cap, k=k)
     frontier = jnp.zeros((n_cap,), jnp.bool_).at[landmarks].set(True, mode="drop")
     dl_in, it0 = propagate(seed, g.src, g.dst, live, frontier,
                            n_cap=n_cap, monoid="or", max_iters=max_iters)
@@ -50,16 +73,99 @@ def build_bl(g: Graph, sources: jax.Array, sinks: jax.Array, *, n_cap: int,
     BL_out(v) ⊇ {h(u) : u is a sink leaf reachable from v}.
     """
     live = edge_mask(g)
-    ids = jnp.arange(n_cap, dtype=jnp.int32)
-    h = leaf_hash(ids, k_prime)  # (n_cap,)
-    onehot = (jnp.arange(k_prime, dtype=jnp.int32)[None, :] == h[:, None])
-
-    seed_in = (onehot & sources[:, None]).astype(jnp.uint8)
+    seed_in = bl_seed_plane(sources, n_cap=n_cap, k_prime=k_prime)
     bl_in, it0 = propagate(seed_in, g.src, g.dst, live, sources,
                            n_cap=n_cap, monoid="or", max_iters=max_iters)
 
-    seed_out = (onehot & sinks[:, None]).astype(jnp.uint8)
+    seed_out = bl_seed_plane(sinks, n_cap=n_cap, k_prime=k_prime)
     bl_out, it1 = propagate(seed_out, g.src, g.dst, live, sinks,
                             n_cap=n_cap, monoid="or", max_iters=max_iters,
                             reverse=True)
     return bl_in, bl_out, jnp.stack([it0, it1])
+
+
+# --------------------------------------------------- delta-rebuild pieces
+@jax.jit
+def realign_landmarks(dl_in: jax.Array, dl_out: jax.Array,
+                      old_landmarks: jax.Array, new_landmarks: jax.Array
+                      ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Permute DL columns from the old lane order to the new landmark
+    vector's, matching lanes by landmark IDENTITY rather than rank.
+
+    ``select_landmarks`` returns landmarks sorted by centrality, so small
+    degree perturbations swap ranks without changing the top-k *set*; a
+    rank-keyed diff would invalidate both swapped lanes even though each
+    landmark's reachability column is unchanged.  Lanes whose landmark
+    survives anywhere in the old vector carry that landmark's old column;
+    only genuinely new landmarks come back as ``fresh`` lanes (their
+    gathered columns are garbage and must be reset to seeds by the caller).
+    Returns (dl_in', dl_out', fresh (k,) bool)."""
+    eq = new_landmarks[:, None] == old_landmarks[None, :]
+    j = jnp.argmax(eq, axis=1).astype(jnp.int32)
+    fresh = ~eq.any(axis=1)
+    return dl_in[:, j], dl_out[:, j], fresh
+
+
+@functools.partial(jax.jit, static_argnames=("k_prime",))
+def bucket_churn(old_mask: jax.Array, new_mask: jax.Array, *, k_prime: int
+                 ) -> jax.Array:
+    """(k',) bool — BL buckets whose leaf membership changed.
+
+    Bucket b's seed set is {x : h(x) = b, mask[x]}; any vertex flipping its
+    leaf status churns its bucket.  A removed leaf cannot be handled
+    monotonically (bits are never subtracted), so churned buckets are
+    rebuilt from scratch as fresh columns."""
+    ids = jnp.arange(old_mask.shape[0], dtype=jnp.int32)
+    h = leaf_hash(ids, k_prime)
+    diff = (old_mask ^ new_mask).astype(jnp.uint8)
+    return jax.ops.segment_max(diff, h, num_segments=k_prime).astype(jnp.bool_)
+
+
+@functools.partial(jax.jit, static_argnames=("n_cap", "k", "k_prime"))
+def delta_plane_state(g: Graph, dl_in, dl_out, bl_in, bl_out,
+                      old_landmarks, new_landmarks,
+                      old_sources, old_sinks, sources, sinks,
+                      dirty_fwd, dirty_bwd, *, n_cap: int, k: int,
+                      k_prime: int):
+    """Assemble the partially-reset fused label planes the delta fixpoint
+    restarts from, one (n_cap, k + k') plane per propagation direction
+    (DL lanes first, BL buckets after — both families share the direction's
+    dirty rows, boundary frontier, and live edge subset, so fusing them
+    halves the number of fixpoint dispatches).
+
+    An entry is reset to its Alg-1 seed value iff its row is dirty (the
+    vertex is in the deleted-edge invalidation closure for this direction)
+    or its column is fresh (landmark membership / leaf-bucket churn); every
+    other entry keeps its old bits, which are exact for the live graph —
+    a clean vertex's bits are certified by old paths that avoid every
+    tombstoned edge, i.e. live paths.
+
+    Returns (x_fwd, x_bwd, fresh_fwd, fresh_bwd, seed_fwd, seed_bwd,
+    frontier_fwd, frontier_bwd)."""
+    live = edge_mask(g)
+    dl_in_a, dl_out_a, dl_fresh = realign_landmarks(
+        dl_in, dl_out, old_landmarks, new_landmarks)
+    dl_seed = dl_seed_plane(new_landmarks, n_cap=n_cap, k=k)
+    blin_fresh = bucket_churn(old_sources, sources, k_prime=k_prime)
+    blout_fresh = bucket_churn(old_sinks, sinks, k_prime=k_prime)
+    seed_fwd = jnp.concatenate(
+        [dl_seed, bl_seed_plane(sources, n_cap=n_cap, k_prime=k_prime)], 1)
+    seed_bwd = jnp.concatenate(
+        [dl_seed, bl_seed_plane(sinks, n_cap=n_cap, k_prime=k_prime)], 1)
+    fresh_fwd = jnp.concatenate([dl_fresh, blin_fresh])
+    fresh_bwd = jnp.concatenate([dl_fresh, blout_fresh])
+
+    def reset(old_fused, seed, dirty, fresh):
+        invalid = dirty[:, None] | fresh[None, :]
+        return jnp.where(invalid, seed, old_fused)
+
+    x_fwd = reset(jnp.concatenate([dl_in_a, bl_in], 1), seed_fwd,
+                  dirty_fwd, fresh_fwd)
+    x_bwd = reset(jnp.concatenate([dl_out_a, bl_out], 1), seed_bwd,
+                  dirty_bwd, fresh_bwd)
+    frontier_fwd = dirty_fwd | push_boundary(g.src, g.dst, live, dirty_fwd,
+                                             n_cap=n_cap)
+    frontier_bwd = dirty_bwd | push_boundary(g.src, g.dst, live, dirty_bwd,
+                                             n_cap=n_cap, reverse=True)
+    return (x_fwd, x_bwd, fresh_fwd, fresh_bwd, seed_fwd, seed_bwd,
+            frontier_fwd, frontier_bwd)

@@ -83,6 +83,47 @@ def propagate(labels: jax.Array, src: jax.Array, dst: jax.Array,
     return labels, iters
 
 
+@functools.partial(jax.jit, static_argnames=("n_cap", "max_iters", "reverse"))
+def reach_mask(src: jax.Array, dst: jax.Array, live: jax.Array,
+               seeds: jax.Array, *, n_cap: int, max_iters: int,
+               reverse: bool = False) -> tuple[jax.Array, jax.Array]:
+    """(n_cap,) bool — the ``live``-edge reachability closure of ``seeds``
+    (inclusive), computed as a single-lane OR fixpoint on the same
+    segment-max machinery as the label planes.  Returns (mask, iters).
+
+    This is the *invalidation-frontier* operand of the delta rebuild
+    (``DBLIndex.rebuild(mode="delta")``): seeded from the endpoints of
+    tombstoned edges and propagated over the edge set the labels were built
+    against, the closure over-approximates every vertex whose label row
+    could have depended on a deleted edge — any label bit derived through a
+    deleted edge (u, v) certifies a path whose suffix starts at v, so its
+    owner is reachable from v (``reverse=True``: reachable-from-u on the
+    reverse graph, for the out-label planes).  With ``max_iters >= n_cap``
+    the closure always converges (a frontier BFS on n_cap vertices needs at
+    most n_cap rounds), so ``iters`` never reports truncation.
+    """
+    plane = seeds[:, None].astype(jnp.uint8)
+    out, iters = propagate(plane, src, dst, live, seeds, n_cap=n_cap,
+                           monoid="or", max_iters=max_iters, reverse=reverse)
+    return out[:, 0].astype(jnp.bool_), iters
+
+
+@functools.partial(jax.jit, static_argnames=("n_cap", "reverse"))
+def push_boundary(src: jax.Array, dst: jax.Array, live: jax.Array,
+                  dirty: jax.Array, *, n_cap: int,
+                  reverse: bool = False) -> jax.Array:
+    """(n_cap,) bool — vertices with a live edge INTO the dirty set (w.r.t.
+    the propagation direction).  Together with the dirty set itself these
+    form the initial frontier of a delta fixpoint: they are the only clean
+    vertices whose labels are not yet absorbed by every successor (their
+    dirty successors were just reset to seeds)."""
+    if reverse:
+        src, dst = dst, src
+    hit = jax.ops.segment_max((dirty[dst] & live).astype(jnp.uint8), src,
+                              num_segments=n_cap)
+    return hit.astype(jnp.bool_)
+
+
 def seed_scatter_or(base: jax.Array, values: jax.Array, at: jax.Array,
                     n_cap: int) -> tuple[jax.Array, jax.Array]:
     """OR ``values[i]`` (rows, (b, k)) into ``base`` at vertex ``at[i]``.

@@ -47,8 +47,11 @@ keeps the whole pipeline device-resident:
   negatives and the BL containment prunes stay on (sound under deletion:
   bits are never removed).  Deletes drain in-flight submits first
   (cross-delete coalescing would break the BL prune's coherence argument);
-  ``rebuild()`` re-runs Alg 1 over the live edges, compacts tombstones, and
-  re-binds the engine with the usual donation-safety rules.
+  ``rebuild()`` restores exact labels over the live edges (full Alg 1, or
+  the incremental delta repair — ``mode`` passes through to
+  ``DBLIndex.rebuild``), compacts tombstones, and re-binds the engine with
+  the usual donation-safety rules; a delta rebuild keeps every array shape,
+  so the re-bind compiles nothing new.
 
 ``core.query.query`` is retained verbatim as the reference implementation;
 ``tests/test_property_engine.py`` / ``tests/test_metamorphic.py`` check the
@@ -110,6 +113,7 @@ class EngineStats:
     inserts: int = 0
     deletes: int = 0          # delete-batch pairs tombstoned
     rebuilds: int = 0         # lazy label rebuilds (dirty -> clean)
+    delta_rebuilds: int = 0   # rebuilds served by the delta (incremental) path
     bfs_dispatches: int = 0
     flushes: int = 0
     stale_lanes: int = 0      # residue lanes resolved across an epoch gap
@@ -120,6 +124,7 @@ class EngineStats:
         return {"queries": self.queries, "rho": rho,
                 "batches": self.batches, "inserts": self.inserts,
                 "deletes": self.deletes, "rebuilds": self.rebuilds,
+                "delta_rebuilds": self.delta_rebuilds,
                 "bfs_dispatches": self.bfs_dispatches,
                 "flushes": self.flushes, "stale_lanes": self.stale_lanes,
                 "saturation_events": self.saturation_events}
@@ -185,6 +190,7 @@ class QueryEngine:
             donate = _donation_supported()
         self.donate = bool(donate)
         self.stats = EngineStats()
+        self.last_rebuild_info: dict | None = None   # set by rebuild()
         # batch shapes are padded to this granule so a serving stream with
         # varying batch sizes maps onto a handful of compiled shapes
         self._granule = math.lcm(self.q_block, self.bfs_chunk)
@@ -622,15 +628,23 @@ class QueryEngine:
 
     def rebuild(self, **build_kw) -> DBLIndex:
         """Lazy label rebuild over the live edge set (clears the dirty
-        state, compacts tombstones by default).  Re-binds the engine to the
-        rebuilt index, which resolves in-flight submits against the outgoing
-        lineage first — the same donation-safety rules as any re-bind."""
+        state, compacts tombstones by default).  ``mode`` passes through to
+        ``DBLIndex.rebuild`` ("full" default / "delta" / "auto"); whichever
+        path ran is recorded in ``last_rebuild_info`` and the delta counter.
+        A delta rebuild keeps every array shape (n_cap, k, m_cap), so the
+        re-bind compiles nothing new — the dispatch-shape budget survives.
+        Re-binds the engine to the rebuilt index, which resolves in-flight
+        submits against the outgoing lineage first — the same
+        donation-safety rules as any re-bind."""
         if self._index is None:
             raise ValueError("engine has no bound index; use run()")
         build_kw.setdefault("max_iters", self.max_iters)
-        new_idx = self._index.rebuild(**build_kw)
+        new_idx, info = self._index.rebuild_info(**build_kw)
         self.index = new_idx          # property setter: drain + new lineage
         self.stats.rebuilds += 1
+        if info["mode"] == "delta":
+            self.stats.delta_rebuilds += 1
+        self.last_rebuild_info = info
         return new_idx
 
     def check_saturation(self, *, warn: bool = True) -> int:

@@ -41,6 +41,7 @@ class ServeStats:
     inserts: int = 0
     deletes: int = 0
     rebuilds: int = 0
+    delta_rebuilds: int = 0
     flushes: int = 0
     query_s: float = 0.0
     insert_s: float = 0.0
@@ -52,7 +53,9 @@ class ServeStats:
         rho = self.label_answered / max(self.queries, 1)
         return {"queries": self.queries, "rho": rho,
                 "inserts": self.inserts, "deletes": self.deletes,
-                "rebuilds": self.rebuilds, "flushes": self.flushes,
+                "rebuilds": self.rebuilds,
+                "delta_rebuilds": self.delta_rebuilds,
+                "flushes": self.flushes,
                 "query_s": self.query_s, "insert_s": self.insert_s,
                 "delete_s": self.delete_s, "rebuild_s": self.rebuild_s,
                 "flush_s": self.flush_s}
@@ -63,17 +66,30 @@ class ReachabilityServer:
     across it), ``delete`` (epoch-versioned tombstones + dirty flag, no label
     recomputation — in-flight submits drain first), and a *lazy* label
     rebuild.  ``rebuild_dead_ratio`` is the laziness knob: once tombstones
-    exceed that fraction of the edge prefix, a rebuild over the live edge
-    set is SCHEDULED and executed at the next flush/query boundary (not
-    inside the delete call), so delete latency stays O(tombstone mask) and
-    rebuild cost amortizes across the whole dirty window.  Set it to
-    ``None`` to only ever rebuild explicitly."""
+    exceed that fraction of the LIVE edge count, a rebuild over the live
+    edge set is SCHEDULED and executed at the next flush/query boundary
+    (not inside the delete call), so delete latency stays O(tombstone mask)
+    and rebuild cost amortizes across the whole dirty window.  Set it to
+    ``None`` to only ever rebuild explicitly.
+
+    The policy denominator is the live count, NOT the raw edge prefix
+    ``m``: ``m`` includes the tombstones themselves, so a prefix-based
+    ratio would drift downwards as the dirty window grows, and after a
+    ``compact()`` squeezed old tombstones out the same number of fresh
+    deletions would trigger at a different point.
+
+    ``rebuild_mode`` is forwarded to ``DBLIndex.rebuild``: the default
+    ``"auto"`` lets the index pick the incremental (delta) path whenever
+    the invalidation estimate is small — the engine re-binds without
+    dispatch-shape churn either way — and fall back to a full Alg-1
+    rebuild otherwise."""
 
     def __init__(self, index: DBLIndex | None, *, bfs_chunk: int = 256,
                  max_iters: int = 256, backend: str = "auto",
                  mesh=None, engine: QueryEngine | None = None,
                  consistency: str = "as-of-submit",
-                 rebuild_dead_ratio: float | None = 0.25):
+                 rebuild_dead_ratio: float | None = 0.25,
+                 rebuild_mode: str = "auto"):
         if engine is not None:
             # a supplied engine carries its own configuration; conflicting
             # per-server knobs would be silently ignored, so reject them
@@ -93,7 +109,10 @@ class ReachabilityServer:
             raise ValueError("server needs an index (directly or via engine)")
         if rebuild_dead_ratio is not None and not 0 < rebuild_dead_ratio <= 1:
             raise ValueError("rebuild_dead_ratio must be in (0, 1] or None")
+        if rebuild_mode not in ("full", "delta", "auto"):
+            raise ValueError(f"unknown rebuild mode {rebuild_mode!r}")
         self.rebuild_dead_ratio = rebuild_dead_ratio
+        self.rebuild_mode = rebuild_mode
         self.stats = ServeStats()
         self._pending = []
         self._rebuild_due = False
@@ -182,19 +201,23 @@ class ReachabilityServer:
         self.stats.deletes += len(np.asarray(src))
         if self.rebuild_dead_ratio is not None and not self._rebuild_due:
             dead = int(np.asarray(G.dead_edge_count(idx.graph)))
-            m = max(int(np.asarray(idx.graph.m)), 1)
-            if dead / m >= self.rebuild_dead_ratio:
+            live = max(int(np.asarray(idx.graph.m)) - dead, 1)
+            if dead / live >= self.rebuild_dead_ratio:
                 self._rebuild_due = True
 
     def rebuild(self, **build_kw):
         """Rebuild labels over the live edge set now (clears dirty state;
         compacts tombstones; re-binds the engine, resolving in-flight
-        submits first)."""
+        submits first).  Defaults to the server's ``rebuild_mode`` policy
+        ("auto": the index picks delta vs full by invalidation estimate)."""
+        build_kw.setdefault("mode", self.rebuild_mode)
         t = time.perf_counter()
         idx = self.engine.rebuild(**build_kw)
         idx.packed.dl_in.block_until_ready()
         self.stats.rebuild_s += time.perf_counter() - t
         self.stats.rebuilds += 1
+        if self.engine.last_rebuild_info["mode"] == "delta":
+            self.stats.delta_rebuilds += 1
         self._rebuild_due = False
         # queued pendings were resolved by the re-bind drain; they stay in
         # the queue so the next flush() still returns their answers in order
@@ -213,4 +236,6 @@ class ReachabilityServer:
         d["consistency"] = self.engine.consistency
         d["dirty"] = self.dirty
         d["rebuild_due"] = self._rebuild_due
+        d["rebuild_mode"] = self.rebuild_mode
+        d["last_rebuild"] = self.engine.last_rebuild_info
         return d

@@ -12,10 +12,16 @@ against that invariant and against the dense transitive-closure oracle:
     must equal the deterministic latest-resolution oracle (submit-epoch
     label verdicts, still-unknown lanes answered at the flush epoch) while
     staying inside the monotone sandwich R_submit <= ans <= R_latest;
-    including streams whose insert batches merge SCCs (reversed edges).
+    including streams whose insert batches merge SCCs (reversed edges);
+
+(c) delta-rebuild epochs — an incremental ``rebuild(mode="auto"/"delta")``
+    landing mid-pipeline (in-flight submits drain at the re-bind with their
+    as-of-submit cutoffs) must leave both contracts intact: answers keep
+    matching each query's submit-epoch oracle and TRUE never reverts across
+    the rebuild's snapshot epoch.
 
 Shapes are pinned (fixed n_cap / m_cap / batch sizes) and one engine is
-shared module-wide, so the jitted executables compile once and the >=200
+shared module-wide, so the jitted executables compile once and the >=280
 generated examples run at full speed; only edge *content* varies."""
 import numpy as np
 
@@ -192,6 +198,91 @@ def test_latest_mode_oracle_and_monotone_sandwich(seed):
             "latest-mode answer dropped a submit-epoch TRUE (monotone floor)"
         assert (out <= R_latest[U_ALL, V_ALL]).all(), \
             "latest-mode answer exceeded the flush-epoch closure (ceiling)"
+
+
+# --------------------------------------- (c) delta-rebuild epochs inside
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_asof_contract_survives_auto_rebuild_midstream(seed):
+    """Fully-dynamic stream with an ``auto``-mode rebuild landing in the
+    middle of the pipeline: every batch — submitted before the deletes,
+    between delete and rebuild, or after — must still equal the dense
+    oracle of the exact edge set it observed at submit time."""
+    src, dst, batches = _random_stream(seed)
+    ENG.index = _build(src, dst)
+    cur = list(zip(src.tolist(), dst.tolist()))
+    rng = np.random.default_rng(seed)
+    pendings = []
+
+    def submit():
+        pendings.append((ENG.submit(ENG.index, U_ALL, V_ALL), list(cur)))
+
+    submit()                                        # epoch 0
+    ns, nd = batches[0]
+    ENG.insert(ns, nd)
+    cur += list(zip(ns.tolist(), nd.tolist()))
+    submit()                                        # epoch 1
+    picks = rng.integers(0, len(cur), 3)
+    kill = {cur[i] for i in picks}
+    ds = np.asarray([p[0] for p in kill], np.int32)
+    dd = np.asarray([p[1] for p in kill], np.int32)
+    ENG.delete(ds, dd)                              # drains epochs 0-1
+    cur = [e for e in cur if e not in kill]
+    assert ENG.index.is_dirty
+    submit()                                        # dirty-mode submit
+    ENG.rebuild(mode="auto")                        # mid-pipeline rebuild
+    _assert_not_saturated()
+    assert not ENG.index.is_dirty
+    submit()                                        # post-rebuild epoch
+    ns, nd = batches[1]
+    ENG.insert(ns, nd)
+    _assert_not_saturated()
+    cur += list(zip(ns.tolist(), nd.tolist()))
+    submit()
+    outs = ENG.flush([p for p, _ in pendings])
+    for r, ((pend, edges), out) in enumerate(zip(pendings, outs)):
+        s = np.asarray([e[0] for e in edges], np.int32)
+        d = np.asarray([e[1] for e in edges], np.int32)
+        R = reach_oracle(N, s, d)
+        np.testing.assert_array_equal(
+            out, R[U_ALL, V_ALL],
+            err_msg=f"batch {r}: as-of-submit answer diverged across the "
+                    "mid-pipeline auto rebuild")
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_monotonicity_survives_delta_rebuild_epoch(seed):
+    """Insert-only stream with a FORCED delta rebuild between epochs (pure
+    seed churn, no tombstones): answers must equal the oracle at every
+    epoch, the rebuild must not change any answer, and TRUE must never
+    revert across the rebuild's snapshot epoch."""
+    src, dst, batches = _random_stream(seed)
+    ENG.index = _build(src, dst)
+    cur_s, cur_d = list(src), list(dst)
+    prev = None
+    for r in range(ROUNDS + 1):
+        ans = ENG.query(U_ALL, V_ALL)
+        R = reach_oracle(N, np.asarray(cur_s), np.asarray(cur_d))
+        np.testing.assert_array_equal(ans, R[U_ALL, V_ALL])
+        if prev is not None:
+            assert (ans >= prev).all(), \
+                "a pair TRUE before the delta rebuild reverted to FALSE"
+        prev = ans
+        if r == 1:
+            before = ENG.query(U_ALL, V_ALL)
+            ENG.rebuild(mode="delta")
+            _assert_not_saturated()
+            assert ENG.last_rebuild_info["mode"] == "delta"
+            np.testing.assert_array_equal(
+                ENG.query(U_ALL, V_ALL), before,
+                err_msg="a delta rebuild changed answers on a clean index")
+        if r < ROUNDS:
+            ns, nd = batches[r]
+            ENG.insert(ns, nd)
+            _assert_not_saturated()
+            cur_s += ns.tolist()
+            cur_d += nd.tolist()
 
 
 # ------------------------------------------- host-driver differential

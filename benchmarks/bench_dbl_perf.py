@@ -423,6 +423,71 @@ def delta_rebuild_stream(bg, *, checkpoints=(0.02, 0.05, 0.10),
     return out
 
 
+def sharded_stream(bg, *, shards: int | None = None, rounds: int = 6,
+                   query_b: int = 256, insert_b: int = 64, seed: int = 13):
+    """Replicated vs vertex-sharded serving on an identical insert/query
+    stream — the PR-5 scale-out numbers: per-device label-plane bytes
+    (the HBM ceiling the sharded layout lifts), insert and flush latency,
+    verdict dispatch counts, and bitwise answer equality."""
+    from repro.core import distributed as D
+    from repro.core import planes as PL
+
+    shards = shards or len(jax.devices())
+    n_cap = -(-bg.n // shards) * shards     # round up to a shard multiple
+    m_cap = len(bg.src) + rounds * insert_b + 64
+    rng = np.random.default_rng(seed)
+    stream = [(rng.integers(0, bg.n, query_b).astype(np.int32),
+               rng.integers(0, bg.n, query_b).astype(np.int32),
+               rng.integers(0, bg.n, insert_b).astype(np.int32),
+               rng.integers(0, bg.n, insert_b).astype(np.int32))
+              for _ in range(rounds)]
+
+    def run(vertex: bool):
+        g = G.make_graph(bg.src, bg.dst, bg.n, m_cap=m_cap)
+        t0 = time.perf_counter()
+        if vertex:
+            mesh = D.vertex_mesh(shards)
+            idx, _ = D.build_vertex_sharded(g, mesh, n_cap=n_cap, k=64,
+                                            k_prime=64, max_iters=64)
+            eng = QueryEngine(idx, bfs_chunk=256, max_iters=64,
+                              vertex_mesh=mesh)
+        else:
+            idx = DBLIndex.build(g, n_cap=n_cap, k=64, k_prime=64,
+                                 max_iters=64)
+            eng = QueryEngine(idx, bfs_chunk=256, max_iters=64)
+        build_s = time.perf_counter() - t0
+        answers, insert_s, flush_s = [], 0.0, 0.0
+        pend = []
+        for u, v, ns, nd in stream:
+            pend.append(eng.submit(eng.index, u, v))
+            t0 = time.perf_counter()
+            eng.insert(ns, nd)
+            eng.index.packed.dl_in.block_until_ready()
+            insert_s += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        answers = eng.flush(pend)
+        flush_s = time.perf_counter() - t0
+        return {
+            "build_s": build_s,
+            "insert_ms_per_batch": insert_s / rounds * 1e3,
+            "flush_ms": flush_s * 1e3,
+            "per_device_label_bytes": PL.per_device_label_bytes(eng.index),
+            "verdict_dispatch_shapes": eng.dispatch_shapes(),
+            "bfs_dispatches": eng.stats.bfs_dispatches,
+        }, np.concatenate(answers)
+
+    rep, ans_r = run(False)
+    shd, ans_s = run(True)
+    return {
+        "shards": shards,
+        "replicated": rep,
+        "vertex_sharded": shd,
+        "label_bytes_ratio": rep["per_device_label_bytes"]
+        / max(shd["per_device_label_bytes"], 1),
+        "answers_bitwise_equal": bool((ans_r == ans_s).all()),
+    }
+
+
 def main(scale: float = 0.1, datasets=("LJ", "Email", "Reddit"),
          json_path: str | None = None, sections=None):
     """Runs the perf suite and writes the PR-4 trajectory file
@@ -439,7 +504,29 @@ def main(scale: float = 0.1, datasets=("LJ", "Email", "Reddit"),
     json_path = json_path or os.environ.get("BENCH_JSON", "BENCH_PR4.json")
     report = {"scale": scale, "backend": jax.default_backend(),
               "datasets": {}, "epoch_coalescing": {}, "fully_dynamic": {},
-              "delta_rebuild": {}}
+              "delta_rebuild": {}, "sharded": {}}
+    if "sharded" in sections and len(jax.devices()) < 2:
+        print("sharded section needs >=2 devices "
+              "(set XLA_FLAGS=--xla_force_host_platform_device_count=4); "
+              "skipping")
+        sections = sections - {"sharded"}
+    if "sharded" in sections:
+        print("dataset,shards,bytes/dev_repl,bytes/dev_shard,ratio,"
+              "insert_ms_repl,insert_ms_shard,flush_ms_repl,flush_ms_shard,"
+              "bitwise  (replicated vs vertex-sharded)")
+    for name in datasets if "sharded" in sections else ():
+        bg = load(name, scale=scale)
+        r = sharded_stream(bg)
+        report["sharded"][name] = r
+        print(f"{name},{r['shards']},"
+              f"{r['replicated']['per_device_label_bytes']},"
+              f"{r['vertex_sharded']['per_device_label_bytes']},"
+              f"{r['label_bytes_ratio']:.2f}x,"
+              f"{r['replicated']['insert_ms_per_batch']:.1f},"
+              f"{r['vertex_sharded']['insert_ms_per_batch']:.1f},"
+              f"{r['replicated']['flush_ms']:.1f},"
+              f"{r['vertex_sharded']['flush_ms']:.1f},"
+              f"{r['answers_bitwise_equal']}")
     # the delta section runs FIRST: rebuild latency is dispatch-overhead
     # sensitive, and measuring it in a fresh process (before the other
     # sections fill the jit caches and heap) matches how a serving process
@@ -552,7 +639,7 @@ if __name__ == "__main__":
     ap.add_argument("--json", dest="json_path", default=None)
     ap.add_argument("--sections", nargs="+", default=None,
                     choices=["classic", "mixed", "epoch", "fully_dynamic",
-                             "delta"])
+                             "delta", "sharded"])
     a = ap.parse_args()
     main(scale=a.scale, datasets=tuple(a.datasets), json_path=a.json_path,
          sections=a.sections)

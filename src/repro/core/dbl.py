@@ -68,6 +68,7 @@ import numpy as np
 from . import bitset
 from . import graph as G
 from . import labels as L
+from . import planes as PL
 from . import propagate as P
 from . import query as Q
 from . import select as S
@@ -145,6 +146,25 @@ class DBLIndex(NamedTuple):
     @property
     def k_prime(self) -> int:
         return self.bl_in.shape[1]
+
+    @property
+    def store(self) -> PL.PlaneStore:
+        """Zero-copy PlaneStore view of the label state (planes + landmarks
+        + BL leaf masks).  The store is where layout-aware operations live;
+        the flat index fields remain the serving pytree.  Layout is derived
+        from where the rows actually are: a plane device_put along a vertex
+        mesh reports ``vertex_sharded``."""
+        return PL.PlaneStore(self.dl_in, self.dl_out, self.bl_in,
+                             self.bl_out, self.landmarks, self.bl_sources,
+                             self.bl_sinks, layout=PL.layout_of(self.dl_in))
+
+    def with_store(self, store: PL.PlaneStore, **kw) -> "DBLIndex":
+        """Rebuild the flat index fields from a store (re-packs words)."""
+        return self._replace(
+            dl_in=store.dl_in, dl_out=store.dl_out, bl_in=store.bl_in,
+            bl_out=store.bl_out, landmarks=store.landmarks,
+            bl_sources=store.bl_sources, bl_sinks=store.bl_sinks,
+            packed=store.pack(), **kw)
 
     @property
     def dirty_flag(self) -> jax.Array:

@@ -1,29 +1,44 @@
 """Mesh-sharded DBL: vertex-partitioned label planes, edge-sharded relaxation.
 
-Sharding scheme (DESIGN.md §6):
-- label planes (n_cap, k): n → every mesh axis (flattened) — each device owns
-  a contiguous vertex range of every plane;
-- edge arrays (m_cap,):    m → same axes — edge-parallel relaxation is local
-  gather + cross-shard segment-reduce; the SPMD partitioner materializes the
-  frontier/label exchanges (all-gathers) that a hand-written vertex-cut
-  implementation would issue;
+Two sharding regimes coexist here:
+
+**GSPMD scheme** (the original; DESIGN.md §6) — shardings injected at the
+jit boundary and the SPMD partitioner materializes whatever exchanges the
+unmodified core/ code needs (including label all-gathers on the query
+path).  Kept for elasticity tests and as the auto-partitioned reference:
+- label planes (n_cap, k): n → every mesh axis (flattened);
+- edge arrays (m_cap,):    m → same axes;
 - query batches (Q,):      Q → axes (embarrassingly parallel fast path).
 
-The same jitted fixpoint/query code from core/ runs unmodified — shardings
-are injected at the jit boundary, which is what makes the index elastic:
-restoring onto a different mesh is just a different device_put.
+**Vertex-sharded scheme** (``build_vertex_sharded`` & co) — the layout
+``core.planes`` implements with hand-written collectives: label planes are
+row-partitioned along a 1-axis ``"vertex"`` mesh (per-device label bytes =
+1/shards of replicated), the graph/landmarks/scalars stay replicated
+(O(m + k) ints — cheap next to O(n·(k+k')) planes), and every lifecycle
+path runs shard-local with explicit halo exchanges: fixpoints move only
+boundary frontier rows (``planes.halo_propagate``), verdicts reconstruct
+only the (Q, W) row blocks with one psum (``planes.sharded_rows``), BFS
+residues exchange only boundary frontier bits — no label all-gather
+anywhere.  All results are bitwise identical to the replicated index.
 """
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from . import graph as G
+from . import labels as L
+from . import planes as PL
 from . import query as Q
+from . import select as S
 from . import update as U
-from .dbl import DBLIndex
+from .dbl import (DBLIndex, LabelSaturationError, LabelSaturationWarning,
+                  _saturation_message)
 from .graph import Graph
 
 
@@ -104,12 +119,6 @@ def distributed_insert(idx: DBLIndex, mesh: Mesh, new_src, new_dst,
     like ``DBLIndex.insert_edges`` ("warn" default / "raise" / "defer" —
     defer skips the one-scalar host sync and only folds the flag into the
     index's sticky ``saturated`` field)."""
-    import warnings
-
-    import numpy as np
-
-    from .dbl import (LabelSaturationError, LabelSaturationWarning,
-                      _saturation_message)
     if check not in ("warn", "raise", "defer"):
         raise ValueError(f"unknown check mode {check!r}")
     fn = _sharded_insert_fn(mesh, idx.n_cap, max_iters)
@@ -126,3 +135,226 @@ def distributed_insert(idx: DBLIndex, mesh: Mesh, new_src, new_dst,
     return idx._replace(
         graph=g2, dl_in=a, dl_out=b, bl_in=c, bl_out=d, packed=packed,
         epoch=epoch2, saturated=jnp.asarray(idx.saturated) | sat)
+
+
+# ===================================================================
+# Vertex-sharded lifecycle (all-gather-free; see core.planes)
+# ===================================================================
+def vertex_mesh(shards: int | None = None) -> Mesh:
+    """A 1-axis ``"vertex"`` mesh over ``shards`` devices (default: all)."""
+    from repro.launch.mesh import make_mesh_compat
+    shards = shards or len(jax.devices())
+    return make_mesh_compat((shards,), (PL.VERTEX_AXIS,))
+
+
+def vertex_index_shardings(mesh: Mesh) -> DBLIndex:
+    """DBLIndex-shaped NamedShardings for the vertex-sharded layout: label
+    planes (bool and packed) row-partitioned, the (n_cap,) leaf masks
+    row-partitioned alongside them, everything else — graph, landmarks,
+    epoch scalars — replicated (the graph is O(m) int32s, small next to
+    the O(n·(k+k')) planes it indexes into)."""
+    from repro.launch.sharding import reach_vertex_shardings
+    plane, vec, rep = reach_vertex_shardings(mesh)
+    g = Graph(src=rep, dst=rep, n=rep, m=rep, del_at=rep, del_epoch=rep)
+    packed = Q.PackedLabels(plane, plane, plane, plane)
+    return DBLIndex(graph=g, landmarks=rep, dl_in=plane, dl_out=plane,
+                    bl_in=plane, bl_out=plane, packed=packed,
+                    bl_sources=vec, bl_sinks=vec, epoch=rep,
+                    label_del_epoch=rep, saturated=rep)
+
+
+def place_vertex_sharded(idx: DBLIndex, mesh: Mesh) -> DBLIndex:
+    """device_put every leaf into the vertex-sharded scheme."""
+    PL._check_rows(idx.n_cap, PL.vertex_layout(mesh))
+    sh = vertex_index_shardings(mesh)
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), idx, sh)
+
+
+def _check_saturation(sat, max_iters: int, check: str, stacklevel: int = 3):
+    if check not in ("warn", "raise", "defer"):
+        raise ValueError(f"unknown check mode {check!r}")
+    if check != "defer" and bool(np.asarray(sat)):
+        if check == "raise":
+            raise LabelSaturationError(_saturation_message(max_iters))
+        warnings.warn(_saturation_message(max_iters),
+                      LabelSaturationWarning, stacklevel=stacklevel)
+
+
+def build_vertex_sharded(g: Graph, mesh: Mesh, *, n_cap: int, k: int = 64,
+                         k_prime: int = 64, selection: str = "product",
+                         leaf_r: int = 0, max_iters: int = 256,
+                         check: str = "warn"
+                         ) -> tuple[DBLIndex, PL.ShardPlan]:
+    """Alg 1 with vertex-sharded label planes: ONE fused (k + k')-lane
+    halo fixpoint per direction over row-partitioned seed planes.  Lanes
+    are independent under the OR monoid, so the fused pass computes exactly
+    the bits the four separate family fixpoints would — the labels are
+    bitwise identical to ``DBLIndex.build``.  Returns (index, plan); the
+    plan carries the edge partition + halo routing subsequent inserts,
+    rebuilds, and sharded BFS residues reuse."""
+    layout = PL.vertex_layout(mesh)
+    PL._check_rows(n_cap, layout)
+    sh = vertex_index_shardings(mesh)
+    g = jax.tree.map(lambda x, s: jax.device_put(x, s), g, sh.graph)
+    landmarks = S.select_landmarks(g, n_cap=n_cap, k=k, method=selection)
+    sources, sinks = S.leaf_masks(g, n_cap=n_cap, leaf_r=leaf_r)
+    seeds = PL.PlaneStore.seeds(landmarks, sources, sinks, n_cap=n_cap,
+                                k=k, k_prime=k_prime, layout=layout)
+    fr_fwd, fr_bwd = seeds.seed_frontiers()
+    plan = PL.shard_plan(g.src, g.dst, int(np.asarray(g.m)), n_cap, mesh)
+    live = G.edge_mask(g)
+    x_fwd = jax.device_put(seeds.fused(), sh.dl_in)
+    x_bwd = jax.device_put(seeds.fused(reverse=True), sh.dl_in)
+    vec_sh = sh.bl_sources
+    x_fwd, it0 = PL.halo_propagate(plan, x_fwd,
+                                   jax.device_put(fr_fwd, vec_sh), live,
+                                   max_iters=max_iters)
+    x_bwd, it1 = PL.halo_propagate(plan, x_bwd,
+                                   jax.device_put(fr_bwd, vec_sh), live,
+                                   reverse=True, max_iters=max_iters)
+    sat = U.saturated(jnp.stack([it0, it1]), max_iters)
+    _check_saturation(sat, max_iters, check)
+    store = seeds.with_fused(x_fwd, x_bwd)
+    idx = DBLIndex(g, landmarks, store.dl_in, store.dl_out, store.bl_in,
+                   store.bl_out, store.pack(), sources, sinks,
+                   epoch=jnp.int32(0),
+                   label_del_epoch=jnp.array(g.del_epoch, jnp.int32),
+                   saturated=sat)
+    return place_vertex_sharded(idx, mesh), plan
+
+
+def insert_vertex_sharded(idx: DBLIndex, plan: PL.ShardPlan, new_src,
+                          new_dst, *, max_iters: int = 256,
+                          check: str = "warn"
+                          ) -> tuple[DBLIndex, PL.ShardPlan, jax.Array]:
+    """Batched Alg-3 insert on the vertex-sharded layout.
+
+    The b inserted edges' seed rows cross shards once (psum of masked
+    gathers, O(b·(k+k'))); the fixpoint then runs shard-local with
+    per-round boundary-frontier halo exchange.  Labels come out bitwise
+    equal to ``DBLIndex.insert_edges``.  Returns (index', plan',
+    saturated_now) — the flag is returned rather than just folded in so
+    serving engines can defer the host sync (``check="defer"``).
+
+    Cost note: the routing tables are currently REBUILT from the full edge
+    arrays per batch — O(m log m) host work, the dominant insert cost on
+    large graphs (incremental extension over the append-only window is the
+    known follow-up; the granule-rounded extents already keep the compiled
+    fixpoints stable across batches)."""
+    mesh = plan.mesh
+    ns = jnp.asarray(np.asarray(new_src, np.int32))
+    nd = jnp.asarray(np.asarray(new_dst, np.int32))
+    g2 = G.insert_edges(idx.graph, ns, nd)
+    plan2 = PL.shard_plan(g2.src, g2.dst, int(np.asarray(g2.m)),
+                          idx.n_cap, mesh)
+    live = G.edge_mask(g2)
+    store = idx.store
+    seeded_f, fr_f = PL.sharded_seed_scatter(store.fused(), ns, nd,
+                                             mesh=mesh)
+    x_fwd, it0 = PL.halo_propagate(plan2, seeded_f, fr_f, live,
+                                   max_iters=max_iters)
+    seeded_b, fr_b = PL.sharded_seed_scatter(store.fused(reverse=True),
+                                             nd, ns, mesh=mesh)
+    x_bwd, it1 = PL.halo_propagate(plan2, seeded_b, fr_b, live,
+                                   reverse=True, max_iters=max_iters)
+    sat_now = U.saturated(jnp.stack([it0, it1]), max_iters)
+    _check_saturation(sat_now, max_iters, check)
+    idx2 = idx.with_store(
+        store.with_fused(x_fwd, x_bwd), graph=g2,
+        epoch=jnp.asarray(idx.epoch, jnp.int32) + jnp.int32(1),
+        saturated=jnp.asarray(idx.saturated) | sat_now)
+    # normalize placements: re-packing and epoch arithmetic produce leaves
+    # whose shardings the partitioner chose — pin them back to the scheme
+    # so downstream executables see ONE sharding flavor per leaf (no jit
+    # cache churn across insert batches; a no-op for already-placed leaves)
+    return place_vertex_sharded(idx2, plan2.mesh), plan2, sat_now
+
+
+def rebuild_vertex_sharded(idx: DBLIndex, plan: PL.ShardPlan | None, *,
+                           mesh: Mesh | None = None, mode: str = "full",
+                           selection: str = "product", leaf_r: int = 0,
+                           max_iters: int = 256, compact: bool = True,
+                           check: str = "warn",
+                           delta_threshold: float = 0.99
+                           ) -> tuple[DBLIndex, PL.ShardPlan, dict]:
+    """Sharded twin of ``DBLIndex.rebuild_info``: full Alg-1 rebuild or the
+    incremental delta repair, on row-partitioned planes.
+
+    The delta plan (invalidation closure, seed churn, estimate) is computed
+    by the same host-side ``DBLIndex._delta_plan``; the partial reset is
+    the PlaneStore's row/column seed-reset (row-parallel, stays sharded);
+    the repair fixpoint runs the halo exchange over the full live edge set
+    (the replicated path's dirty-region edge subset is a dispatch-size
+    optimization — relaxing the extra edges into clean rows is a no-op, so
+    labels remain bitwise equal to a full rebuild).  Returns
+    (index', plan', info)."""
+    mesh = mesh or (plan.mesh if plan is not None else None)
+    if mesh is None:
+        raise ValueError("rebuild_vertex_sharded needs a plan or a mesh")
+    if mode not in ("full", "delta", "auto"):
+        raise ValueError(f"unknown rebuild mode {mode!r}")
+    n_cap, k, kp = idx.n_cap, idx.k, idx.k_prime
+    build_kw = dict(n_cap=n_cap, k=k, k_prime=kp, selection=selection,
+                    leaf_r=leaf_r, max_iters=max_iters, check=check)
+
+    def full(reason):
+        g2 = G.compact(idx.graph) if compact else idx.graph
+        idx2, plan2 = build_vertex_sharded(g2, mesh, **build_kw)
+        idx2 = idx2._replace(
+            epoch=jnp.asarray(idx.epoch, jnp.int32) + jnp.int32(1))
+        return idx2, plan2, {"mode": "full", "reason": reason}
+
+    if mode == "full":
+        return full("forced")
+    if bool(np.asarray(idx.saturated)):
+        return full("saturated")
+    dplan = idx._delta_plan(selection=selection, leaf_r=leaf_r)
+    est = dplan["estimate"]
+    if mode == "auto" and est["frac"] > delta_threshold:
+        i2, p2, info = full("estimate")
+        return i2, p2, {**info, "estimate": est}
+    g = idx.graph
+    if plan is None or plan.m != int(np.asarray(g.m)):
+        plan = PL.shard_plan(g.src, g.dst, int(np.asarray(g.m)), n_cap,
+                             mesh)
+    (x_fwd, x_bwd, fresh_fwd, fresh_bwd, seed_fwd, seed_bwd,
+     fr_fwd, fr_bwd) = L.delta_plane_state(
+        g, idx.dl_in, idx.dl_out, idx.bl_in, idx.bl_out,
+        idx.landmarks, dplan["landmarks"], idx.bl_sources, idx.bl_sinks,
+        dplan["sources"], dplan["sinks"],
+        dplan["dirty_fwd_j"], dplan["dirty_bwd_j"],
+        n_cap=n_cap, k=k, k_prime=kp)
+    live = G.edge_mask(g)
+    iters = []
+    sh = vertex_index_shardings(mesh)
+    for rev, x, seed, fresh, fr in ((False, x_fwd, seed_fwd, fresh_fwd,
+                                     fr_fwd),
+                                    (True, x_bwd, seed_bwd, fresh_bwd,
+                                     fr_bwd)):
+        fr = fr | (seed & fresh[None, :]).any(axis=1)
+        x, it = PL.halo_propagate(plan, jax.device_put(x, sh.dl_in),
+                                  jax.device_put(fr, sh.bl_sources), live,
+                                  reverse=rev, max_iters=max_iters)
+        iters.append(it)
+        if rev:
+            x_bwd = x
+        else:
+            x_fwd = x
+    sat = U.saturated(jnp.stack(iters), max_iters)
+    _check_saturation(sat, max_iters, check)
+    g2 = G.compact(g) if compact else g
+    store = idx.store.with_fused(x_fwd, x_bwd,
+                                 landmarks=dplan["landmarks"],
+                                 bl_sources=dplan["sources"],
+                                 bl_sinks=dplan["sinks"])
+    idx2 = idx.with_store(
+        store, graph=g2,
+        epoch=jnp.asarray(idx.epoch, jnp.int32) + jnp.int32(1),
+        label_del_epoch=jnp.array(g2.del_epoch, jnp.int32),
+        saturated=sat)
+    idx2 = place_vertex_sharded(idx2, mesh)
+    plan2 = PL.shard_plan(g2.src, g2.dst, int(np.asarray(g2.m)), n_cap,
+                          mesh) if compact else plan
+    reason = "forced" if mode == "delta" else "estimate"
+    return idx2, plan2, {"mode": "delta", "reason": reason,
+                         "estimate": est}

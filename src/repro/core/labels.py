@@ -24,22 +24,11 @@ import jax
 import jax.numpy as jnp
 
 from .graph import Graph, edge_mask
+# seed construction moved into the PlaneStore abstraction (core.planes);
+# re-exported here because they are part of this module's historical API
+from .planes import PlaneStore, bl_seed_plane, dl_seed_plane  # noqa: F401
 from .propagate import propagate, push_boundary
 from .select import leaf_hash
-
-
-def dl_seed_plane(landmarks: jax.Array, *, n_cap: int, k: int) -> jax.Array:
-    """(n_cap, k) uint8 — Alg-1 DL seeds: lane l self-seeded at landmark l."""
-    seed = jnp.zeros((n_cap, k), jnp.uint8)
-    return seed.at[landmarks, jnp.arange(k)].set(1, mode="drop")
-
-
-def bl_seed_plane(mask: jax.Array, *, n_cap: int, k_prime: int) -> jax.Array:
-    """(n_cap, k') uint8 — Alg-1 BL seeds: leaf ``mask`` hashed to buckets."""
-    ids = jnp.arange(n_cap, dtype=jnp.int32)
-    h = leaf_hash(ids, k_prime)
-    onehot = jnp.arange(k_prime, dtype=jnp.int32)[None, :] == h[:, None]
-    return (onehot & mask[:, None]).astype(jnp.uint8)
 
 
 @functools.partial(jax.jit, static_argnames=("n_cap", "k", "max_iters"))
@@ -145,24 +134,21 @@ def delta_plane_state(g: Graph, dl_in, dl_out, bl_in, bl_out,
     live = edge_mask(g)
     dl_in_a, dl_out_a, dl_fresh = realign_landmarks(
         dl_in, dl_out, old_landmarks, new_landmarks)
-    dl_seed = dl_seed_plane(new_landmarks, n_cap=n_cap, k=k)
     blin_fresh = bucket_churn(old_sources, sources, k_prime=k_prime)
     blout_fresh = bucket_churn(old_sinks, sinks, k_prime=k_prime)
-    seed_fwd = jnp.concatenate(
-        [dl_seed, bl_seed_plane(sources, n_cap=n_cap, k_prime=k_prime)], 1)
-    seed_bwd = jnp.concatenate(
-        [dl_seed, bl_seed_plane(sinks, n_cap=n_cap, k_prime=k_prime)], 1)
+    # the realigned old state and the fresh Alg-1 seeds, as PlaneStores —
+    # the reset is the store's row/column seed-reset operation, shared with
+    # the vertex-sharded delta path (row-parallel: keeps any row sharding)
+    old = PlaneStore(dl_in_a, dl_out_a, bl_in, bl_out,
+                     new_landmarks, old_sources, old_sinks)
+    seeds = PlaneStore.seeds(new_landmarks, sources, sinks,
+                             n_cap=n_cap, k=k, k_prime=k_prime)
     fresh_fwd = jnp.concatenate([dl_fresh, blin_fresh])
     fresh_bwd = jnp.concatenate([dl_fresh, blout_fresh])
-
-    def reset(old_fused, seed, dirty, fresh):
-        invalid = dirty[:, None] | fresh[None, :]
-        return jnp.where(invalid, seed, old_fused)
-
-    x_fwd = reset(jnp.concatenate([dl_in_a, bl_in], 1), seed_fwd,
-                  dirty_fwd, fresh_fwd)
-    x_bwd = reset(jnp.concatenate([dl_out_a, bl_out], 1), seed_bwd,
-                  dirty_bwd, fresh_bwd)
+    x_fwd, x_bwd = old.reset_invalid(seeds, dirty_fwd, dirty_bwd,
+                                     fresh_fwd, fresh_bwd)
+    seed_fwd = seeds.fused()
+    seed_bwd = seeds.fused(reverse=True)
     frontier_fwd = dirty_fwd | push_boundary(g.src, g.dst, live, dirty_fwd,
                                              n_cap=n_cap)
     frontier_bwd = dirty_bwd | push_boundary(g.src, g.dst, live, dirty_bwd,

@@ -37,8 +37,34 @@ def pack_labels(dl_in, dl_out, bl_in, bl_out) -> PackedLabels:
                         bitset.pack(bl_in), bitset.pack(bl_out))
 
 
-def _verdict_parts(p: PackedLabels, u: jax.Array, v: jax.Array):
-    """(pos_lbl, bl_neg, thm) boolean evidence masks behind the four rules.
+class RowBlocks(NamedTuple):
+    """The eight gathered label rows every Alg-2 verdict rule reads.
+
+    Verdicts are a pure function of these (Q, W) row blocks — NOT of the
+    full (n_cap, W) planes — which is what makes the vertex-sharded verdict
+    path all-gather-free: each shard contributes the rows it owns (zeros
+    elsewhere) and one ``psum`` reconstructs the blocks on every device
+    (O(Q·W) traffic, never O(n_cap·W); see ``core.planes.sharded_rows``).
+    """
+    dlo_u: jax.Array   # DL_out[u]  (Q, Wk)
+    dli_v: jax.Array   # DL_in[v]
+    dlo_v: jax.Array   # DL_out[v]
+    dli_u: jax.Array   # DL_in[u]
+    blin_u: jax.Array  # BL_in[u]   (Q, Wk')
+    blin_v: jax.Array  # BL_in[v]
+    blout_v: jax.Array  # BL_out[v]
+    blout_u: jax.Array  # BL_out[u]
+
+
+def gather_rows(p: PackedLabels, u: jax.Array, v: jax.Array) -> RowBlocks:
+    """Local (replicated-layout) row gather behind every verdict rule."""
+    return RowBlocks(p.dl_out[u], p.dl_in[v], p.dl_out[v], p.dl_in[u],
+                     p.bl_in[u], p.bl_in[v], p.bl_out[v], p.bl_out[u])
+
+
+def verdict_parts_rows(r: RowBlocks):
+    """(pos_lbl, bl_neg, thm) boolean evidence masks behind the four rules,
+    computed from gathered row blocks.
 
     Kept separate because the rules degrade differently when the index is
     *dirty* (tombstoned deletions not yet rebuilt into labels):
@@ -51,15 +77,17 @@ def _verdict_parts(p: PackedLabels, u: jax.Array, v: jax.Array):
       has its bit).  Bits are never removed, so BL containment violations
       stay sound proofs of unreachability under any number of deletions.
     """
-    dlo_u, dli_v = p.dl_out[u], p.dl_in[v]
-    dlo_v, dli_u = p.dl_out[v], p.dl_in[u]
-    pos_lbl = bitset.intersect_any(dlo_u, dli_v)
-    bl_neg = (~bitset.subset(p.bl_in[u], p.bl_in[v])
-              | ~bitset.subset(p.bl_out[v], p.bl_out[u]))
-    thm = (bitset.intersect_any(dlo_v, dli_u)
-           | bitset.intersect_any(dlo_u, dli_u)
-           | bitset.intersect_any(dlo_v, dli_v))
+    pos_lbl = bitset.intersect_any(r.dlo_u, r.dli_v)
+    bl_neg = (~bitset.subset(r.blin_u, r.blin_v)
+              | ~bitset.subset(r.blout_v, r.blout_u))
+    thm = (bitset.intersect_any(r.dlo_v, r.dli_u)
+           | bitset.intersect_any(r.dlo_u, r.dli_u)
+           | bitset.intersect_any(r.dlo_v, r.dli_v))
     return pos_lbl, bl_neg, thm
+
+
+def _verdict_parts(p: PackedLabels, u: jax.Array, v: jax.Array):
+    return verdict_parts_rows(gather_rows(p, u, v))
 
 
 @jax.jit
@@ -100,7 +128,17 @@ def cut_verdicts(p: PackedLabels, u: jax.Array, v: jax.Array,
 
     ``d_fresh`` broadcasts: a scalar (whole dispatch clean/dirty) or (Q,).
     """
-    pos_lbl, bl_neg, thm = _verdict_parts(p, u, v)
+    return cut_verdicts_rows(gather_rows(p, u, v), u, v, m_cut, m_total,
+                             d_fresh)
+
+
+def cut_verdicts_rows(r: RowBlocks, u: jax.Array, v: jax.Array,
+                      m_cut: jax.Array, m_total: jax.Array,
+                      d_fresh: jax.Array | bool) -> jax.Array:
+    """``cut_verdicts`` from pre-gathered row blocks — the entry point the
+    vertex-sharded engine uses after its psum row reconstruction (the rows,
+    not the planes, cross shards)."""
+    pos_lbl, bl_neg, thm = verdict_parts_rows(r)
     same = u == v
     d_fresh = jnp.asarray(d_fresh, jnp.bool_)
     m_fresh = m_cut >= m_total
@@ -177,12 +215,23 @@ def _admit_plane(p: PackedLabels, u: jax.Array, v: jax.Array,
     return c1 & c2 & ~d
 
 
-@functools.partial(jax.jit, static_argnames=("n_cap", "max_iters"))
+#: dtypes selectable for the BFS frontier planes (``pruned_bfs`` and the
+#: sharded twin in ``core.planes``): "int8" is the default — the segment-max
+#: operand is (m_cap, Qc) at 1 byte/lane instead of the 4-byte int32 path,
+#: cutting the reduction's memory traffic 4x.  "int32" is kept as the wide
+#: reference path; both produce bitwise-identical hits (parity-swept in
+#: tests/test_kernels.py).
+FRONTIER_DTYPES = {"int8": jnp.int8, "int32": jnp.int32}
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_cap", "max_iters", "frontier_dtype"))
 def pruned_bfs(g: Graph, p: PackedLabels, u: jax.Array, v: jax.Array,
                admit: jax.Array | None = None,
                m_cut: jax.Array | None = None,
                dl_clean: jax.Array | None = None,
-               *, n_cap: int, max_iters: int = 256) -> jax.Array:
+               *, n_cap: int, max_iters: int = 256,
+               frontier_dtype: str = "int8") -> jax.Array:
     """(Qc,) bool — resolve unknown queries by label-pruned BFS lanes.
 
     ``admit`` lets callers supply a precomputed (n_cap, Qc) admit plane
@@ -207,7 +256,14 @@ def pruned_bfs(g: Graph, p: PackedLabels, u: jax.Array, v: jax.Array,
     fixpoint) guarantees BL(x) ⊆ BL(v), so the containment test never cuts
     a live path even under tombstones.  Tombstoned edges are excluded from
     traversal automatically via ``edge_mask``.
+
+    ``frontier_dtype`` ("int8" default / "int32") picks the element type the
+    (m_cap, Qc) relaxation operand is segment-reduced in — the narrow plane
+    cuts the reduction bytes 4x with bitwise-identical hits (the planes only
+    ever carry 0/1; empty segments come back at the dtype's minimum, so the
+    frontier re-binarizes with ``> 0`` rather than a cast).
     """
+    ftype = FRONTIER_DTYPES[frontier_dtype]
     qc = u.shape[0]
     live = edge_mask(g)
     clean = jnp.asarray(True if dl_clean is None else dl_clean, jnp.bool_)
@@ -218,6 +274,10 @@ def pruned_bfs(g: Graph, p: PackedLabels, u: jax.Array, v: jax.Array,
         dl_on = (m_cut >= g.m) & clean
     if admit is None:
         admit = _admit_plane(p, u, v, n_cap, dl_on)  # (n_cap, Qc)
+    elif admit.dtype != jnp.bool_:
+        # kernel-supplied admit planes may arrive int8 (same narrow-plane
+        # rationale); re-binarize once before the loop
+        admit = admit > 0
     ids = jnp.arange(n_cap, dtype=jnp.int32)
     frontier = ids[:, None] == u[None, :]          # (n_cap, Qc)
     visited = frontier
@@ -236,8 +296,8 @@ def pruned_bfs(g: Graph, p: PackedLabels, u: jax.Array, v: jax.Array,
             # fused into the contrib elementwise op each iteration — no
             # persistent (m_cap, Qc) mask carried across the while-loop
             contrib &= eids[:, None] < m_cut[None, :]
-        nxt = jax.ops.segment_max(contrib.astype(jnp.uint8), g.dst,
-                                  num_segments=n_cap).astype(jnp.bool_)
+        nxt = jax.ops.segment_max(contrib.astype(ftype), g.dst,
+                                  num_segments=n_cap) > 0
         nxt = nxt & admit & ~visited & ~hit[None, :]
         hit = hit | nxt[v, lanes]
         visited = visited | nxt

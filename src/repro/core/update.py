@@ -25,6 +25,18 @@ from . import graph as G
 from .propagate import propagate, seed_scatter_or
 
 
+def insert_seeds(plane: jax.Array, new_src: jax.Array, new_dst: jax.Array,
+                 *, n_cap: int, reverse: bool = False):
+    """Alg-3 seeding for one plane family: for each inserted edge (u, v),
+    OR ``plane[u]`` into ``plane[v]`` (roles swapped for the reverse/out
+    direction).  Returns (seeded plane, changed-row frontier).  This is the
+    replicated-layout op; ``core.planes.sharded_seed_scatter`` is its
+    vertex-sharded twin (one psum for the gathered rows, shard-local
+    scatter) — both produce bitwise-identical seeded state."""
+    at_src, at_dst = (new_dst, new_src) if reverse else (new_src, new_dst)
+    return seed_scatter_or(plane, plane[at_src], at_dst, n_cap)
+
+
 @functools.partial(jax.jit, static_argnames=("n_cap", "max_iters"))
 def insert_and_update(g: G.Graph,
                       dl_in, dl_out, bl_in, bl_out,
@@ -44,12 +56,13 @@ def insert_and_update(g: G.Graph,
     live = G.edge_mask(g2)
 
     def fwd(plane):
-        seeded, frontier = seed_scatter_or(plane, plane[new_src], new_dst, n_cap)
+        seeded, frontier = insert_seeds(plane, new_src, new_dst, n_cap=n_cap)
         return propagate(seeded, g2.src, g2.dst, live, frontier,
                          n_cap=n_cap, monoid="or", max_iters=max_iters)
 
     def bwd(plane):
-        seeded, frontier = seed_scatter_or(plane, plane[new_dst], new_src, n_cap)
+        seeded, frontier = insert_seeds(plane, new_src, new_dst, n_cap=n_cap,
+                                        reverse=True)
         return propagate(seeded, g2.src, g2.dst, live, frontier,
                          n_cap=n_cap, monoid="or", max_iters=max_iters,
                          reverse=True)

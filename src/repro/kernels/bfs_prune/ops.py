@@ -11,15 +11,19 @@ from repro.kernels._pad import pad_axis as _pad_axis
 from .bfs_prune import bfs_admit_plane
 
 
-@functools.partial(jax.jit, static_argnames=("n_block", "q_block", "interpret"))
+@functools.partial(jax.jit, static_argnames=("n_block", "q_block",
+                                             "interpret", "out_dtype"))
 def admit_plane(p: PackedLabels, u: jax.Array, v: jax.Array,
                 m_cut: jax.Array | None = None,
                 m_total: jax.Array | None = None,
                 d_cut: jax.Array | None = None,
                 d_total: jax.Array | None = None,
                 *, n_block: int = 1024, q_block: int = 128,
-                interpret: bool = True) -> jax.Array:
-    """Returns (n_cap, Qc) bool admit plane for the pruned-BFS lanes.
+                interpret: bool = True,
+                out_dtype=jnp.bool_) -> jax.Array:
+    """Returns (n_cap, Qc) ``out_dtype`` admit plane for the pruned-BFS
+    lanes (``jnp.int8`` hands the kernel's narrow plane through without a
+    widening cast; ``pruned_bfs`` re-binarizes admit planes of any dtype).
 
     Optional ``m_cut`` (Qc,) int32 / ``m_total`` scalar: per-lane edge-count
     cutoffs for epoch-coalesced lanes (stale lanes lose the DL prune).
@@ -48,4 +52,4 @@ def admit_plane(p: PackedLabels, u: jax.Array, v: jax.Array,
                           blin_v, blout_v, dlo_u, cut, tot, dcut, dtot,
                           n_block=n_block, q_block=q_block,
                           interpret=interpret)
-    return out[:n, :q].astype(jnp.bool_)
+    return out[:n, :q].astype(out_dtype)

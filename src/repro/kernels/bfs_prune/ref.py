@@ -5,8 +5,12 @@ import jax.numpy as jnp
 
 
 def admit_ref(blin_all, blout_all, dlin_all, blin_v, blout_v, dlo_u,
-              m_cut=None, m_total=None, d_cut=None, d_total=None):
-    """Inputs word-major: *_all (W, n); per-query (W, Q). -> (n, Q) bool.
+              m_cut=None, m_total=None, d_cut=None, d_total=None,
+              out_dtype=jnp.bool_):
+    """Inputs word-major: *_all (W, n); per-query (W, Q). -> (n, Q)
+    ``out_dtype`` (bool default; ``jnp.int8`` matches the kernel's narrow
+    admit plane — the BFS re-binarizes either way, parity-swept in
+    tests/test_kernels.py).
 
     admit[x, q] = BL_Contain(x, v_q) ∧ ¬DL_Intersec(u_q, x)
                 = BL_in(x) ⊆ BL_in(v_q)
@@ -32,4 +36,4 @@ def admit_ref(blin_all, blout_all, dlin_all, blin_v, blout_v, dlo_u,
         if d_cut is not None:
             fresh = fresh & (jnp.ravel(d_cut) >= jnp.ravel(d_total)[0])
         d = d & fresh[None, :]
-    return c1 & c2 & ~d
+    return (c1 & c2 & ~d).astype(out_dtype)

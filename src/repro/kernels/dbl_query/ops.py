@@ -20,8 +20,8 @@ def verdicts_device(p: PackedLabels, u: jax.Array, v: jax.Array,
                     m_total: jax.Array | None = None,
                     d_cut: jax.Array | None = None,
                     d_total: jax.Array | None = None,
-                    *, q_block: int = 512, interpret: bool = True
-                    ) -> jax.Array:
+                    *, q_block: int = 512, interpret: bool = True,
+                    out_dtype=jnp.int32) -> jax.Array:
     """Traceable (un-jitted) body of ``query_verdicts`` so larger programs —
     the QueryEngine's fused label phase — can inline it into one executable.
 
@@ -29,7 +29,9 @@ def verdicts_device(p: PackedLabels, u: jax.Array, v: jax.Array,
     cutoff through to the kernel (stale label positives -> unknown);
     ``d_cut`` (Q,) / ``d_total`` scalar thread the tombstone cutoff
     (deletion-stale labels keep only self-positives and BL negatives).
-    Padding lanes are marked fresh on both so they never ride a BFS."""
+    Padding lanes are marked fresh on both so they never ride a BFS.
+    ``out_dtype=jnp.int8`` emits the engine's narrow verdict lane directly
+    (values identical to the int32 path)."""
     q = u.shape[0]
     streams = [p.dl_out[u], p.dl_in[v], p.dl_out[v], p.dl_in[u],
                p.bl_in[u], p.bl_in[v], p.bl_out[v], p.bl_out[u]]
@@ -50,7 +52,7 @@ def verdicts_device(p: PackedLabels, u: jax.Array, v: jax.Array,
                              blin_u, blin_v, blout_u, blout_v, same,
                              cut, tot, dcut, dtot,
                              q_block=q_block, interpret=interpret)
-    return out[:q]
+    return out[:q].astype(out_dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("q_block", "interpret"))

@@ -11,10 +11,14 @@ import jax.numpy as jnp
 
 def verdict_ref(dlo_u, dli_v, dlo_v, dli_u,
                 blin_u, blin_v, blout_u, blout_v, same,
-                m_cut=None, m_total=None, d_cut=None, d_total=None):
+                m_cut=None, m_total=None, d_cut=None, d_total=None,
+                out_dtype=jnp.int32):
     """All label inputs (W, Q) uint32; ``same`` (Q,) bool (u == v).
 
-    Returns (Q,) int32: +1 reachable / 0 unreachable / -1 unknown.
+    Returns (Q,) ``out_dtype``: +1 reachable / 0 unreachable / -1 unknown.
+    ``out_dtype=jnp.int8`` emits the narrow verdict lane the serving engine
+    consumes directly (int32 kept as the wide reference path; bitwise-equal
+    values, parity-swept in tests/test_kernels.py).
     Implements Alg 2 lines 6-13 (Lemma 1, Lemma 2, Theorem 1, Theorem 2).
 
     ``m_cut`` (Q,) int32 / ``m_total`` scalar: per-lane edge-count cutoff —
@@ -41,5 +45,7 @@ def verdict_ref(dlo_u, dli_v, dlo_v, dli_u,
             neg = jnp.where(d_fresh, neg, ~same & bl_neg)
         else:
             pos = (pos_lbl & fresh) | same
-    return jnp.where(pos, jnp.int32(1),
-                     jnp.where(neg, jnp.int32(0), jnp.int32(-1)))
+    one = jnp.asarray(1, out_dtype)
+    zero = jnp.asarray(0, out_dtype)
+    unk = jnp.asarray(-1, out_dtype)
+    return jnp.where(pos, one, jnp.where(neg, zero, unk))

@@ -135,6 +135,22 @@ def reach_place_index(idx, mesh):
     return jax.tree.map(lambda x: jax.device_put(x, repl), idx)
 
 
+def reach_vertex_shardings(mesh) -> tuple:
+    """DBL vertex-sharded layout primitives for a 1-axis ``"vertex"`` mesh:
+    ``(plane, vec, replicated)`` NamedShardings — (n_cap, k) label planes
+    row-partitioned, (n_cap,) per-vertex vectors partitioned alongside
+    them, everything else (graph, landmarks, scalars, query batches)
+    replicated.  ``core.distributed.vertex_index_shardings`` assembles the
+    full DBLIndex-shaped pytree from these; the QueryEngine's vertex-
+    sharded phases consume arrays placed with them."""
+    if len(mesh.axis_names) != 1:
+        raise ValueError("vertex-sharded layout needs a 1-axis mesh, got "
+                         f"axes {mesh.axis_names}")
+    ax = mesh.axis_names[0]
+    return (NamedSharding(mesh, P(ax, None)), NamedSharding(mesh, P(ax)),
+            NamedSharding(mesh, P()))
+
+
 def gnn_shardings(state_shapes: Any, mesh) -> Any:
     """GNN params are small: replicate everything (grads all-reduce)."""
     return jax.tree.map(lambda _: NamedSharding(mesh, P()), state_shapes)

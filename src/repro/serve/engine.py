@@ -53,6 +53,26 @@ keeps the whole pipeline device-resident:
   the usual donation-safety rules; a delta rebuild keeps every array shape,
   so the re-bind compiles nothing new.
 
+- **vertex-sharded labels** — construct with ``vertex_mesh=`` (a 1-axis
+  ``"vertex"`` mesh) and the engine serves an index whose label planes are
+  row-partitioned across devices (per-device label bytes = 1/shards): the
+  verdict phase reconstructs only the eight (Q, W) row blocks with one
+  psum, the BFS residue runs on row-sharded planes with per-round
+  boundary-bit halo exchange, and inserts/rebuilds run the halo fixpoint —
+  no label all-gather on any path, answers bitwise equal to the
+  replicated engine (``core.planes`` / ``core.distributed``);
+
+- **adaptive flushing** — ``flush_policy="deadline"`` bounds answer latency
+  (resolve once the oldest unresolved submit exceeds ``flush_deadline_ms``),
+  ``flush_policy="watermark"`` bounds residue pooling (resolve once the
+  pooled unknown lanes reach ``flush_watermark``); checked on every submit
+  and from ``maybe_flush()`` poll points;
+
+- **AOT cold starts** — ``aot_warmup(index, cache_dir)`` round-trips the
+  query-phase executables through a ``jax.export`` disk cache keyed on
+  (backend, shapes, jax version), so a restarted process skips tracing and
+  recompilation (see ``serve.aot``).
+
 ``core.query.query`` is retained verbatim as the reference implementation;
 ``tests/test_property_engine.py`` / ``tests/test_metamorphic.py`` check the
 engine against it and against the dense transitive-closure oracle on random
@@ -63,6 +83,7 @@ from __future__ import annotations
 
 import functools
 import math
+import time
 import warnings
 import weakref
 from dataclasses import dataclass
@@ -71,6 +92,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import planes as PL
 from repro.core import query as Q
 from repro.core import update as U
 from repro.core.dbl import (DBLIndex, LabelSaturationWarning,
@@ -80,6 +102,14 @@ from repro.kernels.bfs_prune.ops import admit_plane as bfs_admit_plane_op
 
 #: supported consistency modes (``"latest-snapshot"`` is an alias)
 CONSISTENCY_MODES = ("as-of-submit", "latest")
+
+#: engine-initiated flush policies (``None`` = flush only when asked):
+#: "deadline"  — resolve the pipeline once the oldest unresolved submit is
+#:               older than ``flush_deadline_ms`` (bounded answer latency);
+#: "watermark" — resolve once the pooled BFS residue reaches
+#:               ``flush_watermark`` lanes (right-sized dispatches without
+#:               unbounded deferral on unknown-heavy streams).
+FLUSH_POLICIES = (None, "deadline", "watermark")
 
 
 def select_backend(backend: str = "auto") -> str:
@@ -116,6 +146,7 @@ class EngineStats:
     delta_rebuilds: int = 0   # rebuilds served by the delta (incremental) path
     bfs_dispatches: int = 0
     flushes: int = 0
+    policy_flushes: int = 0   # flushes initiated by the adaptive policy
     stale_lanes: int = 0      # residue lanes resolved across an epoch gap
     saturation_events: int = 0  # inserts whose label fixpoint hit max_iters
 
@@ -126,7 +157,9 @@ class EngineStats:
                 "deletes": self.deletes, "rebuilds": self.rebuilds,
                 "delta_rebuilds": self.delta_rebuilds,
                 "bfs_dispatches": self.bfs_dispatches,
-                "flushes": self.flushes, "stale_lanes": self.stale_lanes,
+                "flushes": self.flushes,
+                "policy_flushes": self.policy_flushes,
+                "stale_lanes": self.stale_lanes,
                 "saturation_events": self.saturation_events}
 
 
@@ -141,10 +174,11 @@ class _Pending:
 
     __slots__ = ("engine", "index", "q", "answers", "order",
                  "u_c", "v_c", "n_unknown",
-                 "lineage", "epoch", "m_at_submit", "_result", "__weakref__")
+                 "lineage", "epoch", "m_at_submit", "t_submit",
+                 "_result", "_nu", "__weakref__")
 
     def __init__(self, engine, index, q, answers, order, u_c, v_c, n_unknown,
-                 lineage=None, epoch=None, m_at_submit=None):
+                 lineage=None, epoch=None, m_at_submit=None, t_submit=None):
         self.engine = engine
         self.index = index
         self.q = q
@@ -158,7 +192,18 @@ class _Pending:
         # resolution keys off m_at_submit — the edge-count cutoff — alone
         self.epoch = epoch
         self.m_at_submit = m_at_submit
+        self.t_submit = t_submit        # host clock, for the deadline policy
         self._result = None
+        self._nu = None
+
+    @property
+    def nu(self) -> int:
+        """Unknown-lane count, synced from device ONCE per batch (the one
+        int32 D2H the label phase owes) — the watermark policy and the
+        flush path share the memo instead of re-blocking per check."""
+        if self._nu is None:
+            self._nu = min(int(self.n_unknown), self.q)
+        return self._nu
 
     def resolve(self) -> np.ndarray:
         if self._result is None:
@@ -174,23 +219,56 @@ class QueryEngine:
     def __init__(self, index: DBLIndex | None = None, *,
                  bfs_chunk: int = 256, max_iters: int = 256,
                  backend: str = "auto", q_block: int = 512,
-                 mesh=None, bfs_kernel: bool = False,
+                 mesh=None, vertex_mesh=None, bfs_kernel: bool = False,
                  donate: str | bool = "auto",
-                 consistency: str = "as-of-submit"):
+                 consistency: str = "as-of-submit",
+                 frontier_dtype: str = "int8",
+                 flush_policy: str | None = None,
+                 flush_deadline_ms: float = 25.0,
+                 flush_watermark: int = 256):
         if bfs_chunk <= 0 or q_block <= 0:
             raise ValueError("bfs_chunk and q_block must be positive")
+        if mesh is not None and vertex_mesh is not None:
+            raise ValueError(
+                "mesh (query-axis fan-out, labels replicated) and "
+                "vertex_mesh (vertex-sharded labels) are mutually "
+                "exclusive engine layouts")
+        if frontier_dtype not in Q.FRONTIER_DTYPES:
+            raise ValueError(f"unknown frontier dtype {frontier_dtype!r}; "
+                             f"expected one of {list(Q.FRONTIER_DTYPES)}")
+        if flush_policy not in FLUSH_POLICIES:
+            raise ValueError(f"unknown flush policy {flush_policy!r}; "
+                             f"expected one of {FLUSH_POLICIES}")
+        if flush_deadline_ms <= 0 or flush_watermark <= 0:
+            raise ValueError("flush_deadline_ms and flush_watermark must "
+                             "be positive")
         self.bfs_chunk = int(bfs_chunk)
         self.max_iters = int(max_iters)
         self.backend = select_backend(backend)
         self.q_block = int(q_block)
         self.mesh = mesh
+        self.vertex_mesh = vertex_mesh
+        self.layout = "vertex_sharded" if vertex_mesh is not None \
+            else "replicated"
+        self.frontier_dtype = frontier_dtype
         self.bfs_kernel = bool(bfs_kernel)
         self.consistency = select_consistency(consistency)
+        self.flush_policy = flush_policy
+        self.flush_deadline_ms = float(flush_deadline_ms)
+        self.flush_watermark = int(flush_watermark)
+        self._clock = time.monotonic     # monkeypatchable in policy tests
         if donate == "auto":
-            donate = _donation_supported()
+            donate = _donation_supported() and vertex_mesh is None
         self.donate = bool(donate)
         self.stats = EngineStats()
         self.last_rebuild_info: dict | None = None   # set by rebuild()
+        self.aot_cache = None                        # set by aot_warmup()
+        # vertex-sharded layout: edge partition + halo routing, rebuilt
+        # whenever the bound edge set changes shape (bind/insert/rebuild);
+        # _plan_override hands a rebuild's freshly built plan to the index
+        # setter so the re-bind does not build it a second time
+        self._plan: PL.ShardPlan | None = None
+        self._plan_override: PL.ShardPlan | None = None
         # batch shapes are padded to this granule so a serving stream with
         # varying batch sizes maps onto a handful of compiled shapes
         self._granule = math.lcm(self.q_block, self.bfs_chunk)
@@ -230,6 +308,17 @@ class QueryEngine:
         if self._index is not None:
             self._drain_inflight()    # also clears the inflight list
         self._lineage += 1
+        if idx is not None and self.vertex_mesh is not None:
+            from repro.core import distributed as D
+            idx = D.place_vertex_sharded(idx, self.vertex_mesh)
+            if self._plan_override is not None:
+                # rebuild() already built routing tables for exactly this
+                # index's edges — don't pay the O(m) plan pass twice
+                self._plan, self._plan_override = self._plan_override, None
+            else:
+                self._plan = PL.shard_plan(idx.graph.src, idx.graph.dst,
+                                           int(np.asarray(idx.graph.m)),
+                                           idx.n_cap, self.vertex_mesh)
         self._index = idx
         if idx is not None:
             self.epoch = int(np.asarray(idx.epoch))
@@ -237,6 +326,7 @@ class QueryEngine:
         else:
             self.epoch = 0
             self._m_now = 0
+            self._plan = None
 
     def _drain_inflight(self):
         """Resolve every unresolved submit of the CURRENT lineage (with its
@@ -245,10 +335,7 @@ class QueryEngine:
         edges post-submit label updates propagate over, so the BL-containment
         prune (and hence coalescing) is only sound while every pooled lane
         shares the dispatch's tombstone set."""
-        live = [r() for r in self._inflight]
-        stale = [p for p in live
-                 if p is not None and p._result is None
-                 and p.lineage == self._lineage]
+        stale = self._unresolved_inflight()
         if stale:
             self.flush(stale)
         self._inflight = []
@@ -262,6 +349,8 @@ class QueryEngine:
         self._interpret = interpret
         max_iters = self.max_iters
         use_bfs_kernel = self.bfs_kernel
+        vertex_mesh = self.vertex_mesh
+        frontier_dtype = self.frontier_dtype
 
         def _d_cut_vec(d_stale, shape):
             """Per-lane tombstone-cutoff operand from a traced dirty scalar:
@@ -281,13 +370,23 @@ class QueryEngine:
             ``d_stale`` (() bool) is the index's dirty flag: with pending
             tombstones only self-positives and BL negatives answer from
             labels; DL positives / theorem negatives join the unknown lanes
-            and ride the live-edge BFS."""
-            if backend in ("pallas", "pallas-interpret"):
+            and ride the live-edge BFS.
+
+            Vertex-sharded layout: the verdicts read only the eight (Q, W)
+            row blocks, reconstructed from the row-partitioned planes by
+            ONE psum of per-shard masked gathers — all-gather-free (the
+            planes never move; see ``core.planes.sharded_rows``)."""
+            if vertex_mesh is not None:
+                rows = PL.sharded_rows(p, u, v, mesh=vertex_mesh)
+                verd = Q.cut_verdicts_rows(rows, u, v, jnp.int32(1),
+                                           jnp.int32(0), ~d_stale)
+            elif backend in ("pallas", "pallas-interpret"):
                 verd = verdicts_device(
                     p, u, v,
                     jnp.full(u.shape, Q.FRESH_CUT, jnp.int32), jnp.int32(0),
                     _d_cut_vec(d_stale, u.shape), jnp.int32(1),
-                    q_block=q_block, interpret=interpret).astype(jnp.int8)
+                    q_block=q_block, interpret=interpret,
+                    out_dtype=jnp.int8)
             else:
                 verd = Q.cut_verdicts(p, u, v, jnp.int32(1), jnp.int32(0),
                                       ~d_stale)
@@ -341,7 +440,7 @@ class QueryEngine:
                         p, uu_safe, vv, m_cut, g.m,
                         _d_cut_vec(d_stale, uu.shape), jnp.int32(1),
                         q_block=min(q_block, chunk),
-                        interpret=interpret).astype(jnp.int8)
+                        interpret=interpret, out_dtype=jnp.int8)
                 else:
                     verd = Q.cut_verdicts(p, uu_safe, vv, m_cut, g.m,
                                           ~d_stale)
@@ -354,11 +453,47 @@ class QueryEngine:
                         m_cut, g.m,
                         _d_cut_vec(d_stale, uu.shape), jnp.int32(1),
                         n_block=min(1024, max(8, n_cap)),
-                        q_block=min(128, chunk), interpret=interpret)
+                        q_block=min(128, chunk), interpret=interpret,
+                        out_dtype=jnp.int8)
                 hit = Q.pruned_bfs(g, p, uu2, vv, admit, m_cut, ~d_stale,
-                                   n_cap=n_cap, max_iters=max_iters)
+                                   n_cap=n_cap, max_iters=max_iters,
+                                   frontier_dtype=frontier_dtype)
                 return ((verd == jnp.int8(1)) & live_lane) | hit
             return coalesced
+
+        def make_coalesced_sharded(chunk: int):
+            def coalesced(g, p: Q.PackedLabels, uu, vv, m_cut, d_stale,
+                          e_slot, e_recv, e_gid, e_valid, h_send, h_valid):
+                """Sharded twin of the coalesced phase: the re-check reads
+                psum-reconstructed row blocks, the residue BFS runs on
+                row-partitioned frontier/admit planes with per-round
+                boundary-bit halo exchange — the label planes never leave
+                their shards (no all-gather; see ``core.planes``).  The
+                plan's routing arrays ride in as operands so insert-time
+                plan rebuilds reuse this executable as long as the padded
+                extents hold."""
+                from repro.core.graph import edge_mask
+                n_cap = p.dl_in.shape[0]
+                live_lane = uu < jnp.int32(n_cap)
+                uu_safe = jnp.minimum(uu, jnp.int32(n_cap - 1))
+                rows = PL.sharded_rows(p, uu_safe, vv, mesh=vertex_mesh)
+                verd = Q.cut_verdicts_rows(rows, uu_safe, vv, m_cut, g.m,
+                                           ~d_stale)
+                need = live_lane & (verd == jnp.int8(-1))
+                uu2 = jnp.where(need, uu, jnp.int32(n_cap))
+                plan = PL.ShardPlan(
+                    vertex_mesh, n_cap, 0,
+                    PL._DirPlan(e_slot, e_recv, e_gid, e_valid, h_send,
+                                h_valid), None)
+                hit = PL.sharded_pruned_bfs(
+                    plan, p, rows, uu2, vv, edge_mask(g), m_cut, g.m,
+                    ~d_stale, max_iters=max_iters,
+                    frontier_dtype=frontier_dtype)
+                return ((verd == jnp.int8(1)) & live_lane) | hit
+            return coalesced
+
+        if vertex_mesh is not None:
+            make_coalesced_phase = make_coalesced_sharded
 
         if self.mesh is not None:
             from repro.launch.sharding import reach_query_shardings
@@ -390,6 +525,16 @@ class QueryEngine:
         self._delete_fn = jax.jit(
             lambda g, ds, dd, e: U.delete_and_mark(g, ds, dd, e),
             donate_argnums=(0,) if self.donate else ())
+
+    def _coalesced_extra_args(self) -> tuple:
+        """Trailing operands for a coalesced-phase call: the vertex-sharded
+        layout threads its plan's routing arrays through (so the compiled
+        executable survives plan rebuilds); replicated has none."""
+        if self.vertex_mesh is None:
+            return ()
+        dp = self._plan.fwd
+        return (dp.e_slot, dp.e_recv, dp.e_gid, dp.e_valid, dp.h_send,
+                dp.h_valid)
 
     def _chunk_buckets(self):
         sizes, c = [], 16
@@ -426,6 +571,13 @@ class QueryEngine:
         calls and are later resolved against the newest snapshot with a
         per-lane edge-count cutoff (exact as-of-submit answers) or without
         one (latest consistency)."""
+        if self.vertex_mesh is not None and index is not self._index:
+            # fail at submit, not data-dependently at flush: resolving a
+            # foreign snapshot's residue needs a shard plan for ITS edges,
+            # and the engine's plan is lineage-scoped
+            raise ValueError(
+                "vertex-sharded engines serve only their bound index; "
+                "bind the snapshot first (engine.index = idx)")
         uj, vj, q = self._pad_queries(u, v)
         if self.mesh is not None:
             from repro.launch.sharding import reach_query_shardings
@@ -440,12 +592,51 @@ class QueryEngine:
         else:
             tag = {}
         pend = _Pending(self, index, q, answers, order, u_c, v_c, n_unknown,
-                        **tag)
+                        t_submit=self._clock(), **tag)
         if tag:
             self._inflight = [r for r in self._inflight
                               if r() is not None and r()._result is None]
             self._inflight.append(weakref.ref(pend))
+            self.maybe_flush()
         return pend
+
+    # ------------------------------------------------- adaptive flushing
+    def _unresolved_inflight(self) -> list:
+        return [p for p in (r() for r in self._inflight)
+                if p is not None and p._result is None
+                and p.lineage == self._lineage]
+
+    def flush_due(self) -> bool:
+        """Whether the adaptive policy wants the pipeline resolved NOW.
+
+        - ``"deadline"``: the oldest unresolved submit has been in flight
+          longer than ``flush_deadline_ms`` — deferral is only free until
+          someone is waiting on an answer;
+        - ``"watermark"``: the pooled BFS residue reached
+          ``flush_watermark`` lanes — the dispatch is already right-sized,
+          further pooling just adds latency.  (Costs one int32 host sync
+          per unresolved batch; the label phase has to surface the unknown
+          count anyway at resolve time.)
+        """
+        if self.flush_policy is None:
+            return False
+        pending = self._unresolved_inflight()
+        if not pending:
+            return False
+        if self.flush_policy == "deadline":
+            oldest = min(p.t_submit for p in pending)
+            return (self._clock() - oldest) * 1e3 >= self.flush_deadline_ms
+        return sum(p.nu for p in pending) >= self.flush_watermark
+
+    def maybe_flush(self) -> bool:
+        """Run the adaptive flush policy once (called on every submit; the
+        serving layer also calls it from its poll points so a deadline can
+        fire without new traffic).  Returns True when a flush ran."""
+        if not self.flush_due():
+            return False
+        self.flush(self._unresolved_inflight())
+        self.stats.policy_flushes += 1
+        return True
 
     def _current_lineage(self, p: _Pending) -> bool:
         """True iff ``p`` was submitted against THIS engine's live lineage
@@ -495,10 +686,7 @@ class QueryEngine:
         return [results[i] for i in range(len(pendings))]
 
     def _finish_group(self, grp, results, mode, engine_group):
-        infos = []
-        for i, p in grp:
-            nu = min(int(p.n_unknown), p.q)   # the one host sync per batch
-            infos.append((i, p, nu))
+        infos = [(i, p, p.nu) for i, p in grp]   # p.nu memoizes the sync
         total = sum(nu for _, _, nu in infos)
         hits_all = np.zeros(0, np.bool_)
         if total:
@@ -529,13 +717,19 @@ class QueryEngine:
                                        np.full(pad, Q.FRESH_CUT, np.int32)])
             fn = self._coal_phases[chunk]
             d_stale = jnp.asarray(index.dirty_flag)
+            extra = self._coalesced_extra_args() if engine_group else ()
+            if self.vertex_mesh is not None and not engine_group:
+                raise ValueError(
+                    "vertex-sharded engines resolve only batches submitted "
+                    "against their bound index (the shard plan is "
+                    "lineage-scoped)")
             hit_parts = []
             for start in range(0, total, chunk):
                 hit_parts.append(fn(index.graph, index.packed,
                                     jnp.asarray(uu[start:start + chunk]),
                                     jnp.asarray(vv[start:start + chunk]),
                                     jnp.asarray(cuts[start:start + chunk]),
-                                    d_stale))
+                                    d_stale, *extra))
                 self.stats.bfs_dispatches += 1
             # all chunks are enqueued before the first D2H forces a wait
             hits_all = np.concatenate([np.asarray(h)
@@ -587,14 +781,25 @@ class QueryEngine:
         idx = self._index
         ns = jnp.asarray(np.asarray(new_src, np.int32))
         nd = jnp.asarray(np.asarray(new_dst, np.int32))
-        g2, a, b, c, d, packed, epoch2, sat = self._insert_fn(
-            idx.graph, idx.dl_in, idx.dl_out, idx.bl_in, idx.bl_out,
-            ns, nd, jnp.int32(self.epoch))
-        # direct field write: an insert advances the epoch WITHIN the
-        # current lineage (the property setter would start a new one)
-        self._index = idx._replace(
-            graph=g2, dl_in=a, dl_out=b, bl_in=c, bl_out=d, packed=packed,
-            epoch=epoch2, saturated=jnp.asarray(idx.saturated) | sat)
+        if self.vertex_mesh is not None:
+            from repro.core import distributed as D
+            # sharded Alg-3: psum'd seed rows + halo fixpoint; the plan is
+            # extended to cover the appended edges (host-side routing
+            # tables — the label planes stay put on their shards)
+            idx2, self._plan, sat = D.insert_vertex_sharded(
+                idx, self._plan, ns, nd, max_iters=self.max_iters,
+                check="defer")
+            self._index = idx2._replace(epoch=jnp.int32(self.epoch + 1))
+        else:
+            g2, a, b, c, d, packed, epoch2, sat = self._insert_fn(
+                idx.graph, idx.dl_in, idx.dl_out, idx.bl_in, idx.bl_out,
+                ns, nd, jnp.int32(self.epoch))
+            # direct field write: an insert advances the epoch WITHIN the
+            # current lineage (the property setter would start a new one)
+            self._index = idx._replace(
+                graph=g2, dl_in=a, dl_out=b, bl_in=c, bl_out=d,
+                packed=packed, epoch=epoch2,
+                saturated=jnp.asarray(idx.saturated) | sat)
         self._sat_flags.append(sat)   # checked lazily at flush boundaries
         self.epoch += 1
         self._m_now += int(ns.size)
@@ -622,6 +827,11 @@ class QueryEngine:
         g2, epoch2 = self._delete_fn(idx.graph, ds, dd,
                                      jnp.int32(self.epoch))
         self._index = idx._replace(graph=g2, epoch=epoch2)
+        if self.vertex_mesh is not None:
+            # keep one sharding flavor per leaf (see insert_vertex_sharded)
+            from repro.core import distributed as D
+            self._index = D.place_vertex_sharded(self._index,
+                                                 self.vertex_mesh)
         self.epoch += 1
         self.stats.deletes += int(ds.size)
         return self._index
@@ -639,8 +849,15 @@ class QueryEngine:
         if self._index is None:
             raise ValueError("engine has no bound index; use run()")
         build_kw.setdefault("max_iters", self.max_iters)
-        new_idx, info = self._index.rebuild_info(**build_kw)
-        self.index = new_idx          # property setter: drain + new lineage
+        if self.vertex_mesh is not None:
+            from repro.core import distributed as D
+            new_idx, plan, info = D.rebuild_vertex_sharded(
+                self._index, self._plan, mesh=self.vertex_mesh, **build_kw)
+            self._plan_override = plan   # setter adopts it (no second pass)
+            self.index = new_idx         # property setter: drain + re-bind
+        else:
+            new_idx, info = self._index.rebuild_info(**build_kw)
+            self.index = new_idx      # property setter: drain + new lineage
         self.stats.rebuilds += 1
         if info["mode"] == "delta":
             self.stats.delta_rebuilds += 1
@@ -659,6 +876,62 @@ class QueryEngine:
                 warnings.warn(_saturation_message(self.max_iters),
                               LabelSaturationWarning, stacklevel=2)
         return n
+
+    # ------------------------------------------------------------- AOT
+    def aot_warmup(self, index: DBLIndex, cache_dir, *,
+                   batch_sizes=(1,), bfs_buckets=None) -> "QueryEngine":
+        """Warm the query-phase executables from an AOT disk cache
+        (``jax.export``), keyed on (backend, input avals, jax version):
+        hits swap deserialized executables in — cold starts skip tracing
+        and recompilation entirely; misses export the freshly compiled
+        executables so the next process hits.  Query answers are bitwise
+        identical either way.  Replicated layout only: shard_map
+        collectives bake in a device assignment a restarted process cannot
+        guarantee, so sharded/mesh engines refuse."""
+        from repro.serve.aot import AOTCache, ShapeDispatcher
+        if self.vertex_mesh is not None or self.mesh is not None:
+            raise ValueError("the AOT cache supports the replicated "
+                             "single-process layout only")
+        cache = AOTCache(cache_dir)
+        self.aot_cache = cache
+        # every engine knob the compiled executables bake in beyond their
+        # input avals MUST be in the key — a hit under different knobs
+        # would silently serve the old semantics (e.g. a smaller max_iters
+        # truncating BFS lanes into false negatives)
+        config = {"max_iters": self.max_iters, "q_block": self.q_block,
+                  "bfs_chunk": self.bfs_chunk, "bfs_kernel": self.bfs_kernel,
+                  "frontier_dtype": self.frontier_dtype}
+        if not isinstance(self._label_phase, ShapeDispatcher):
+            self._label_phase = ShapeDispatcher(self._label_phase)
+        n_cap = index.packed.dl_in.shape[0]
+        for q in batch_sizes:
+            qp = max(self._granule, -(-int(q) // self._granule)
+                     * self._granule)
+            args = (index.packed, jnp.zeros(qp, jnp.int32),
+                    jnp.zeros(qp, jnp.int32), jnp.asarray(False))
+            key = AOTCache.key("label", self.backend, args, config=config)
+            fn = cache.load(key)
+            if fn is None:
+                cache.store(key, self._label_phase.fallback, args)
+            else:
+                self._label_phase.add(args, fn)
+        for chunk in (bfs_buckets or self._chunk_buckets()):
+            c = self._bucket_for(chunk)
+            if not isinstance(self._coal_phases[c], ShapeDispatcher):
+                self._coal_phases[c] = ShapeDispatcher(self._coal_phases[c])
+            args = (index.graph, index.packed,
+                    jnp.full((c,), n_cap, jnp.int32),
+                    jnp.zeros((c,), jnp.int32),
+                    jnp.full((c,), Q.FRESH_CUT, jnp.int32),
+                    jnp.asarray(False))
+            key = AOTCache.key(f"coalesced-{c}", self.backend, args,
+                               config=config)
+            fn = cache.load(key)
+            if fn is None:
+                cache.store(key, self._coal_phases[c].fallback, args)
+            else:
+                self._coal_phases[c].add(args, fn)
+        return self
 
     # ------------------------------------------------------ introspection
     def dispatch_shape_counts(self) -> dict:
@@ -679,6 +952,11 @@ class QueryEngine:
         n_cap = index.packed.dl_in.shape[0]
         for q in batch_sizes:
             self.submit(index, np.zeros(q, np.int32), np.zeros(q, np.int32))
+        # derive the warmup's clean flag FROM the index so it carries the
+        # same (committed) sharding flavor serving calls will pass — an
+        # uncommitted literal False would compile a second executable per
+        # bucket on multi-device meshes
+        d_clean = jnp.logical_and(jnp.asarray(index.dirty_flag), False)
         for chunk in (bfs_buckets or (self.bfs_chunk,)):
             c = self._bucket_for(chunk)
             self._coal_phases[c](
@@ -686,7 +964,7 @@ class QueryEngine:
                 jnp.full((c,), n_cap, jnp.int32),
                 jnp.zeros((c,), jnp.int32),
                 jnp.full((c,), Q.FRESH_CUT, jnp.int32),
-                jnp.asarray(False))
+                d_clean, *self._coalesced_extra_args())
         return self
 
 

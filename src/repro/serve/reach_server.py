@@ -86,10 +86,15 @@ class ReachabilityServer:
 
     def __init__(self, index: DBLIndex | None, *, bfs_chunk: int = 256,
                  max_iters: int = 256, backend: str = "auto",
-                 mesh=None, engine: QueryEngine | None = None,
+                 mesh=None, vertex_mesh=None,
+                 engine: QueryEngine | None = None,
                  consistency: str = "as-of-submit",
                  rebuild_dead_ratio: float | None = 0.25,
-                 rebuild_mode: str = "auto"):
+                 rebuild_mode: str = "auto",
+                 flush_policy: str | None = None,
+                 flush_deadline_ms: float = 25.0,
+                 flush_watermark: int = 256,
+                 aot_cache: str | None = None):
         if engine is not None:
             # a supplied engine carries its own configuration; conflicting
             # per-server knobs would be silently ignored, so reject them
@@ -104,9 +109,16 @@ class ReachabilityServer:
         else:
             self.engine = QueryEngine(
                 index, bfs_chunk=bfs_chunk, max_iters=max_iters,
-                backend=backend, mesh=mesh, consistency=consistency)
+                backend=backend, mesh=mesh, vertex_mesh=vertex_mesh,
+                consistency=consistency, flush_policy=flush_policy,
+                flush_deadline_ms=flush_deadline_ms,
+                flush_watermark=flush_watermark)
         if self.engine.index is None:
             raise ValueError("server needs an index (directly or via engine)")
+        if aot_cache is not None:
+            # cold-start path: hits swap in deserialized executables (no
+            # recompilation), misses persist this process's executables
+            self.engine.aot_warmup(self.engine.index, aot_cache)
         if rebuild_dead_ratio is not None and not 0 < rebuild_dead_ratio <= 1:
             raise ValueError("rebuild_dead_ratio must be in (0, 1] or None")
         if rebuild_mode not in ("full", "delta", "auto"):
@@ -175,6 +187,13 @@ class ReachabilityServer:
         self._maybe_rebuild()
         return outs
 
+    def poll(self) -> bool:
+        """Adaptive-flush poll point: give the engine's flush policy a
+        chance to resolve the pipeline (a latency deadline must be able to
+        fire without new traffic arriving).  Returns True when the policy
+        flushed.  No-op without a policy."""
+        return self.engine.maybe_flush()
+
     def insert(self, src, dst):
         """Alg-3 insert: bumps the snapshot epoch; outstanding submits stay
         in flight and resolve with exact as-of-submit cutoffs at flush."""
@@ -238,4 +257,75 @@ class ReachabilityServer:
         d["rebuild_due"] = self._rebuild_due
         d["rebuild_mode"] = self.rebuild_mode
         d["last_rebuild"] = self.engine.last_rebuild_info
+        d["layout"] = self.engine.layout
+        d["flush_policy"] = self.engine.flush_policy
+        if self.engine.aot_cache is not None:
+            d["aot"] = {"hits": self.engine.aot_cache.hits,
+                        "misses": self.engine.aot_cache.misses,
+                        "stores": self.engine.aot_cache.stores}
         return d
+
+
+def main(argv=None):
+    """Tiny serving driver: build an index over a generated power-law
+    graph, run an interleaved query/insert/delete stream, print stats.
+
+    ``--aot-cache DIR`` round-trips the engine's verdict + BFS-bucket
+    executables through a ``jax.export`` disk cache — run twice with the
+    same flags and the second cold start compiles nothing (watch the
+    ``aot`` hit counters).  ``--vertex-shards N`` serves with
+    vertex-sharded label planes (requires >= N devices)."""
+    import argparse
+    import json
+
+    import numpy as np
+
+    from repro.graphs.generators import power_law
+
+    ap = argparse.ArgumentParser(description=main.__doc__)
+    ap.add_argument("--n", type=int, default=2048)
+    ap.add_argument("--m", type=int, default=16384)
+    ap.add_argument("--k", type=int, default=32)
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=512)
+    ap.add_argument("--backend", default="auto")
+    ap.add_argument("--aot-cache", default=None,
+                    help="directory for jax.export'd executables; cold "
+                         "starts with a warm cache skip recompilation")
+    ap.add_argument("--flush-policy", default=None,
+                    choices=["deadline", "watermark"])
+    ap.add_argument("--vertex-shards", type=int, default=0,
+                    help="serve with vertex-sharded label planes over this "
+                         "many devices (0 = replicated)")
+    a = ap.parse_args(argv)
+
+    from repro.core.dbl import DBLIndex
+    from repro.core.graph import make_graph
+    src, dst = power_law(a.n, a.m, seed=0)
+    g = make_graph(src, dst, a.n, m_cap=a.m + a.rounds * 64)
+    idx = DBLIndex.build(g, n_cap=a.n, k=a.k, k_prime=a.k)
+    vmesh = None
+    if a.vertex_shards:
+        from repro.core.distributed import vertex_mesh
+        vmesh = vertex_mesh(a.vertex_shards)
+    t0 = time.perf_counter()
+    srv = ReachabilityServer(idx, backend=a.backend, vertex_mesh=vmesh,
+                             flush_policy=a.flush_policy,
+                             aot_cache=a.aot_cache)
+    rng = np.random.default_rng(0)
+    for r in range(a.rounds):
+        u = rng.integers(0, a.n, a.batch).astype(np.int32)
+        v = rng.integers(0, a.n, a.batch).astype(np.int32)
+        srv.submit(u, v)
+        if r % 2:
+            srv.insert(rng.integers(0, a.n, 64).astype(np.int32),
+                       rng.integers(0, a.n, 64).astype(np.int32))
+        srv.poll()
+    srv.flush()
+    print(json.dumps({"wall_s": time.perf_counter() - t0,
+                      **srv.stats.as_dict(),
+                      "engine": srv.engine_stats()}, indent=2, default=str))
+
+
+if __name__ == "__main__":
+    main()

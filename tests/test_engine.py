@@ -345,3 +345,140 @@ def test_warmup_precompiles():
     eng.run(idx, rng.integers(0, 64, 600).astype(np.int32),
             rng.integers(0, 64, 600).astype(np.int32))
     assert eng.dispatch_shapes() == shapes  # nothing new compiled
+
+
+# ------------------------------------------------- adaptive flush policy
+def test_flush_policy_deadline_timing():
+    """Deadline policy: nothing flushes before the deadline; once the
+    oldest unresolved submit is older than flush_deadline_ms, the next
+    submit (or an explicit poll) resolves the pipeline.  Driven by a fake
+    clock so the timing is deterministic."""
+    idx, src, dst = _power_law_index()
+    rng = np.random.default_rng(7)
+    u = rng.integers(0, 256, 96).astype(np.int32)
+    v = rng.integers(0, 256, 96).astype(np.int32)
+    eng = QueryEngine(idx, bfs_chunk=64, max_iters=64,
+                      flush_policy="deadline", flush_deadline_ms=10.0)
+    t = [0.0]
+    eng._clock = lambda: t[0]
+    p1 = eng.submit(idx, u, v)
+    assert p1._result is None and eng.stats.policy_flushes == 0
+    t[0] = 0.005                    # 5ms: before the deadline
+    assert not eng.maybe_flush()
+    assert p1._result is None
+    t[0] = 0.011                    # 11ms: over the deadline
+    p2 = eng.submit(idx, v, u)      # the submit itself triggers the flush
+    assert p1._result is not None
+    assert eng.stats.policy_flushes == 1
+    # the fresh batch was pooled into the same policy flush
+    assert p2._result is not None
+    R = reach_oracle(256, src, dst)
+    np.testing.assert_array_equal(p1.resolve(), R[u, v])
+    np.testing.assert_array_equal(p2.resolve(), R[v, u])
+    # poll path: deadline fires with no new traffic
+    p3 = eng.submit(idx, u, v)
+    t[0] = 0.030
+    assert eng.maybe_flush()
+    assert p3._result is not None and eng.stats.policy_flushes == 2
+
+
+def test_flush_policy_watermark_residue():
+    """Watermark policy: the pipeline resolves as soon as the pooled BFS
+    residue reaches the watermark — unknown-light batches keep deferring,
+    unknown-heavy streams flush early."""
+    idx, src, dst = _power_law_index()
+    rng = np.random.default_rng(8)
+    eng = QueryEngine(idx, bfs_chunk=64, max_iters=64,
+                      flush_policy="watermark", flush_watermark=24)
+    pendings = []
+    while eng.stats.policy_flushes == 0 and len(pendings) < 50:
+        u = rng.integers(0, 256, 64).astype(np.int32)
+        v = rng.integers(0, 256, 64).astype(np.int32)
+        pendings.append((eng.submit(idx, u, v), u, v))
+    assert eng.stats.policy_flushes == 1, \
+        "watermark never tripped on an unknown-bearing stream"
+    resolved = [p for p, _, _ in pendings if p._result is not None]
+    assert resolved, "policy flush resolved nothing"
+    R = reach_oracle(256, src, dst)
+    for p, u, v in pendings:
+        np.testing.assert_array_equal(p.resolve(), R[u, v])
+
+
+def test_flush_policy_validation_and_server_wiring():
+    idx, _, _ = _power_law_index(n=64, m=160, m_extra=8, max_iters=40)
+    with pytest.raises(ValueError):
+        QueryEngine(idx, flush_policy="sometimes")
+    with pytest.raises(ValueError):
+        QueryEngine(idx, flush_policy="deadline", flush_deadline_ms=0)
+    srv = ReachabilityServer(idx, bfs_chunk=64, max_iters=40,
+                             flush_policy="deadline", flush_deadline_ms=1e-6)
+    rng = np.random.default_rng(9)
+    u = rng.integers(0, 64, 32).astype(np.int32)
+    srv.submit(u, u)
+    srv.poll()
+    # with a ~1ns deadline the submit (or the poll) must have auto-flushed
+    assert srv.engine.stats.policy_flushes == 1
+    assert srv.engine_stats()["flush_policy"] == "deadline"
+    outs = srv.flush()              # answers still returned in order
+    assert len(outs) == 1 and (outs[0] == np.ones(32, bool)).all()
+
+
+# --------------------------------------------------------- AOT serving
+def test_aot_cache_round_trip(tmp_path):
+    """Cold-start AOT: first engine exports its verdict + BFS-bucket
+    executables to the disk cache; a second (fresh) engine loads them as
+    deserialized jax.export artifacts — cache hits, identical answers,
+    and the dispatch-shape accounting still holds."""
+    idx, src, dst = _power_law_index()
+    rng = np.random.default_rng(11)
+    u = rng.integers(0, 256, 700).astype(np.int32)
+    v = rng.integers(0, 256, 700).astype(np.int32)
+
+    e1 = QueryEngine(idx, bfs_chunk=64, max_iters=64)
+    e1.aot_warmup(idx, tmp_path)
+    assert e1.aot_cache.stores > 0 and e1.aot_cache.hits == 0
+    files = list(tmp_path.glob("*.jaxexp"))
+    assert len(files) == e1.aot_cache.stores
+    base = e1.run(idx, u, v)
+
+    e2 = QueryEngine(idx, bfs_chunk=64, max_iters=64)
+    e2.aot_warmup(idx, tmp_path)
+    assert e2.aot_cache.hits == e1.aot_cache.stores \
+        and e2.aot_cache.misses == 0
+    got = e2.run(idx, u, v)
+    np.testing.assert_array_equal(base, got)
+    R = reach_oracle(256, src, dst)
+    np.testing.assert_array_equal(got, R[u, v])
+    assert e2.dispatch_shapes() >= 1   # ShapeDispatcher accounting works
+
+    # key stability: a third warmup re-hits the same files (no new stores)
+    e3 = QueryEngine(idx, bfs_chunk=64, max_iters=64)
+    e3.aot_warmup(idx, tmp_path)
+    assert e3.aot_cache.stores == 0
+    assert len(list(tmp_path.glob("*.jaxexp"))) == len(files)
+
+
+def test_aot_cache_corrupt_entry_degrades_to_miss(tmp_path):
+    idx, _, _ = _power_law_index(n=64, m=160, m_extra=8, max_iters=40)
+    e1 = QueryEngine(idx, bfs_chunk=32, max_iters=40)
+    e1.aot_warmup(idx, tmp_path)
+    for f in tmp_path.glob("*.jaxexp"):
+        f.write_bytes(b"garbage")
+    from repro.serve.aot import AOTCacheWarning
+    e2 = QueryEngine(idx, bfs_chunk=32, max_iters=40)
+    with pytest.warns(AOTCacheWarning):
+        e2.aot_warmup(idx, tmp_path)
+    assert e2.aot_cache.hits == 0     # every entry degraded to a miss
+    rng = np.random.default_rng(3)
+    u = rng.integers(0, 64, 128).astype(np.int32)
+    ans = e2.run(idx, u, u)           # serving still works (live jit)
+    assert ans.all()
+
+
+def test_aot_rejects_meshed_layouts(tmp_path):
+    idx, _, _ = _power_law_index(n=64, m=160, m_extra=8, max_iters=40)
+    from repro.core.distributed import vertex_mesh
+    eng = QueryEngine(idx, bfs_chunk=32, max_iters=40,
+                      vertex_mesh=vertex_mesh(1))
+    with pytest.raises(ValueError):
+        eng.aot_warmup(eng.index, tmp_path)

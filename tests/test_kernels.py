@@ -399,3 +399,104 @@ def test_bfs_prune_ops_cutoff_matches_core_dl_gate(seed, q):
                       n_block=32, q_block=32, interpret=True)
     want = Q._admit_plane(idx.packed, u, v, n, dl_on=cuts >= m_total)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# --------------------------------------- int8 frontier / narrow outputs
+@given(st.integers(0, 2**31 - 1), st.sampled_from((16, 33, 64)),
+       st.booleans(), st.booleans())
+@settings(max_examples=15, deadline=None)
+def test_pruned_bfs_int8_frontier_parity(seed, q, with_cut, dirty):
+    """pruned_bfs with int8 frontier planes (the narrow segment-max path,
+    1 byte/lane) == the int32 wide path, bitwise, across random graphs,
+    per-lane edge-count cutoffs, and the dirty DL-prune gate."""
+    rng = np.random.default_rng(seed)
+    n = 48
+    src = rng.integers(0, n, 220).astype(np.int32)
+    dst = rng.integers(0, n, 220).astype(np.int32)
+    g = make_graph(src, dst, n, m_cap=256)
+    idx = DBLIndex.build(g, n_cap=n, k=8, k_prime=8, max_iters=48)
+    u = jnp.asarray(rng.integers(0, n, q).astype(np.int32))
+    v = jnp.asarray(rng.integers(0, n, q).astype(np.int32))
+    m_cut = None
+    if with_cut:
+        m_cut = jnp.asarray(
+            rng.integers(0, int(g.m) + 1, q).astype(np.int32))
+    dl_clean = jnp.asarray(not dirty)
+    kw = dict(m_cut=m_cut, dl_clean=dl_clean, n_cap=n, max_iters=48)
+    narrow = Q.pruned_bfs(g, idx.packed, u, v, None,
+                          frontier_dtype="int8", **kw)
+    wide = Q.pruned_bfs(g, idx.packed, u, v, None,
+                        frontier_dtype="int32", **kw)
+    np.testing.assert_array_equal(np.asarray(narrow), np.asarray(wide))
+
+
+def test_pruned_bfs_rejects_unknown_frontier_dtype():
+    rng = np.random.default_rng(0)
+    g = make_graph(rng.integers(0, 16, 40).astype(np.int32),
+                   rng.integers(0, 16, 40).astype(np.int32), 16, m_cap=48)
+    idx = DBLIndex.build(g, n_cap=16, k=4, k_prime=4, max_iters=16)
+    u = jnp.zeros(8, jnp.int32)
+    with pytest.raises(KeyError):
+        Q.pruned_bfs(g, idx.packed, u, u, n_cap=16,
+                     frontier_dtype="float32")
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 3), st.integers(1, 3),
+       st.sampled_from((64, 130, 250)))
+@settings(max_examples=10, deadline=None)
+def test_kernel_refs_int8_outputs_match_wide(seed, wd, wb, q):
+    """Both kernel refs' narrow (int8) output paths carry exactly the wide
+    values: verdict_ref int8 == int32, admit_ref int8 == bool; the ops
+    wrappers thread out_dtype through, and pruned_bfs accepts an int8
+    admit plane with identical hits."""
+    rng = np.random.default_rng(seed)
+    n = 40
+    p = _rand_packed_labels(rng, n, wd, wb)
+    u = jnp.asarray(rng.integers(0, n, q).astype(np.int32))
+    v = jnp.asarray(rng.integers(0, n, q).astype(np.int32))
+    streams = [p.dl_out[u].T, p.dl_in[v].T, p.dl_out[v].T, p.dl_in[u].T,
+               p.bl_in[u].T, p.bl_in[v].T, p.bl_out[v].T, p.bl_out[u].T]
+    wide = verdict_ref(streams[0], streams[1], streams[2], streams[3],
+                       streams[4], streams[5], streams[7], streams[6],
+                       (u == v))
+    narrow = verdict_ref(streams[0], streams[1], streams[2], streams[3],
+                         streams[4], streams[5], streams[7], streams[6],
+                         (u == v), out_dtype=jnp.int8)
+    assert narrow.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(wide),
+                                  np.asarray(narrow).astype(np.int32))
+    a_bool = admit_ref(p.bl_in.T, p.bl_out.T, p.dl_in.T,
+                       p.bl_in[v].T, p.bl_out[v].T, p.dl_out[u].T)
+    a_int8 = admit_ref(p.bl_in.T, p.bl_out.T, p.dl_in.T,
+                       p.bl_in[v].T, p.bl_out[v].T, p.dl_out[u].T,
+                       out_dtype=jnp.int8)
+    assert a_int8.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(a_bool),
+                                  np.asarray(a_int8).astype(bool))
+
+
+def test_admit_plane_ops_int8_and_bfs_consumption():
+    """ops.admit_plane(out_dtype=int8) == bool plane, and pruned_bfs
+    re-binarizes a kernel-supplied int8 admit plane to identical hits."""
+    rng = np.random.default_rng(12)
+    n = 48
+    src = rng.integers(0, n, 220).astype(np.int32)
+    dst = rng.integers(0, n, 220).astype(np.int32)
+    g = make_graph(src, dst, n, m_cap=256)
+    idx = DBLIndex.build(g, n_cap=n, k=8, k_prime=8, max_iters=48)
+    q = 32
+    u = jnp.asarray(rng.integers(0, n, q).astype(np.int32))
+    v = jnp.asarray(rng.integers(0, n, q).astype(np.int32))
+    a_bool = admit_plane(idx.packed, u, v, n_block=16, q_block=16,
+                         interpret=True)
+    a_int8 = admit_plane(idx.packed, u, v, n_block=16, q_block=16,
+                         interpret=True, out_dtype=jnp.int8)
+    assert a_bool.dtype == jnp.bool_ and a_int8.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(a_bool),
+                                  np.asarray(a_int8).astype(bool))
+    hits_bool = Q.pruned_bfs(g, idx.packed, u, v, a_bool, n_cap=n,
+                             max_iters=48)
+    hits_int8 = Q.pruned_bfs(g, idx.packed, u, v, a_int8, n_cap=n,
+                             max_iters=48)
+    np.testing.assert_array_equal(np.asarray(hits_bool),
+                                  np.asarray(hits_int8))

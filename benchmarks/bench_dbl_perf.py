@@ -488,6 +488,104 @@ def sharded_stream(bg, *, shards: int | None = None, rounds: int = 6,
     }
 
 
+def packed_stream(bg, *, rounds: int = 4, query_b: int = 512,
+                  insert_b: int = 64, seed: int = 17):
+    """PR-7 section: uint32 word-plane fixpoint (``plane_repr="packed"``)
+    vs the bool-plane reference through the whole maintained lifecycle —
+    Alg-1 build, Alg-3 insert batches, delta rebuild, and an engine
+    insert/query stream with a coalesced flush.  Both representations are
+    bitwise equal (asserted); the packed path moves 8x fewer scatter bytes
+    per fixpoint round.  Warm ``timed`` medians on both sides so the
+    numbers compare steady-state label maintenance, not jit compilation.
+    When >=2 devices are available, also reports the per-round halo bytes
+    each representation ships across shards (32x smaller packed)."""
+    from repro.core import distributed as D
+
+    m_cap = len(bg.src) + rounds * insert_b + 200
+    rng = np.random.default_rng(seed)
+    ns = rng.integers(0, bg.n, 100).astype(np.int32)
+    nd = rng.integers(0, bg.n, 100).astype(np.int32)
+    stream = [(rng.integers(0, bg.n, query_b).astype(np.int32),
+               rng.integers(0, bg.n, query_b).astype(np.int32),
+               rng.integers(0, bg.n, insert_b).astype(np.int32),
+               rng.integers(0, bg.n, insert_b).astype(np.int32))
+              for _ in range(rounds)]
+    g = G.make_graph(bg.src, bg.dst, bg.n, m_cap=m_cap)
+
+    def build(repr_):
+        return DBLIndex.build(g, n_cap=bg.n, k=64, k_prime=64, max_iters=64,
+                              plane_repr=repr_)
+
+    out = {}
+    idxs = {}
+    for repr_ in ("bool", "packed"):
+        idx = build(repr_)
+        idxs[repr_] = idx
+        t_build = timed(
+            lambda r=repr_: build(r).packed.dl_in.block_until_ready())
+        t_insert = timed(
+            lambda i=idx, r=repr_: i.insert_edges(
+                ns, nd, max_iters=64,
+                plane_repr=r).packed.dl_in.block_until_ready())
+        dirty = idx.insert_edges(ns, nd, max_iters=64, plane_repr=repr_
+                                 ).delete_edges(bg.src[:40], bg.dst[:40])
+        t_delta = timed(
+            lambda d=dirty, r=repr_: d.rebuild(
+                mode="delta", max_iters=64,
+                plane_repr=r).packed.dl_in.block_until_ready())
+
+        def serve(repr_=repr_, idx=idx):
+            eng = QueryEngine(idx, bfs_chunk=256, max_iters=64, donate=False,
+                              plane_repr=repr_)
+            pend = []
+            t_ins = 0.0
+            for u, v, s2, d2 in stream:
+                pend.append(eng.submit(eng.index, u, v))
+                t0 = time.perf_counter()
+                eng.insert(s2, d2)
+                eng.index.packed.dl_in.block_until_ready()
+                t_ins += time.perf_counter() - t0
+            t0 = time.perf_counter()
+            answers = eng.flush(pend)
+            return t_ins, time.perf_counter() - t0, np.concatenate(answers)
+
+        serve()                                   # warm executables
+        runs = [serve() for _ in range(5)]
+        out[repr_] = {
+            "build_s": t_build,
+            "insert_ms_per_batch": 1e3 * t_insert,
+            "delta_rebuild_ms": 1e3 * t_delta,
+            "stream_insert_ms": 1e3 * sorted(r[0] for r in runs)[2],
+            "flush_ms": 1e3 * sorted(r[1] for r in runs)[2],
+        }
+        out[repr_]["answers"] = runs[0][2]
+
+    ok = bool((out["bool"].pop("answers") ==
+               out["packed"].pop("answers")).all())
+    ok &= all(np.array_equal(np.asarray(a), np.asarray(b)) for a, b in
+              zip(idxs["bool"].packed, idxs["packed"].packed))
+    r = {"bool": out["bool"], "packed": out["packed"],
+         "build_speedup": out["bool"]["build_s"] / out["packed"]["build_s"],
+         "flush_speedup": out["bool"]["flush_ms"] / out["packed"]["flush_ms"],
+         "answers_bitwise_equal": ok}
+    if len(jax.devices()) >= 2:
+        from repro.core import planes as PL
+        shards = len(jax.devices())
+        n_cap = -(-bg.n // shards) * shards
+        plan = PL.shard_plan(g.src, g.dst, int(np.asarray(g.m)), n_cap,
+                             D.vertex_mesh(shards))
+        H = int(plan.fwd.h_send.shape[2])
+        d = shards
+        # per fixpoint round, per direction: each shard ships H halo rows
+        # to d-1 peers — bool planes are (k+k') bytes/row, packed rows are
+        # ceil(k/32)+ceil(k'/32) uint32 words
+        k = kp = 64
+        r["halo_bytes_per_round_bool"] = d * (d - 1) * H * (k + kp)
+        r["halo_bytes_per_round_packed"] = (
+            d * (d - 1) * H * 4 * (-(-k // 32) + -(-kp // 32)))
+    return r
+
+
 def main(scale: float = 0.1, datasets=("LJ", "Email", "Reddit"),
          json_path: str | None = None, sections=None):
     """Runs the perf suite and writes the PR-4 trajectory file
@@ -504,7 +602,23 @@ def main(scale: float = 0.1, datasets=("LJ", "Email", "Reddit"),
     json_path = json_path or os.environ.get("BENCH_JSON", "BENCH_PR4.json")
     report = {"scale": scale, "backend": jax.default_backend(),
               "datasets": {}, "epoch_coalescing": {}, "fully_dynamic": {},
-              "delta_rebuild": {}, "sharded": {}}
+              "delta_rebuild": {}, "sharded": {}, "packed": {}}
+    if "packed" in sections:
+        print("dataset,build_s_bool,build_s_packed,build_speedup,"
+              "flush_ms_bool,flush_ms_packed,flush_speedup,"
+              "delta_ms_bool,delta_ms_packed,bitwise"
+              "  (bool vs packed plane_repr)")
+    for name in datasets if "packed" in sections else ():
+        bg = load(name, scale=scale)
+        r = packed_stream(bg)
+        report["packed"][name] = r
+        print(f"{name},{r['bool']['build_s']:.3f},"
+              f"{r['packed']['build_s']:.3f},{r['build_speedup']:.2f}x,"
+              f"{r['bool']['flush_ms']:.1f},{r['packed']['flush_ms']:.1f},"
+              f"{r['flush_speedup']:.2f}x,"
+              f"{r['bool']['delta_rebuild_ms']:.0f},"
+              f"{r['packed']['delta_rebuild_ms']:.0f},"
+              f"{r['answers_bitwise_equal']}")
     if "sharded" in sections and len(jax.devices()) < 2:
         print("sharded section needs >=2 devices "
               "(set XLA_FLAGS=--xla_force_host_platform_device_count=4); "
@@ -639,7 +753,7 @@ if __name__ == "__main__":
     ap.add_argument("--json", dest="json_path", default=None)
     ap.add_argument("--sections", nargs="+", default=None,
                     choices=["classic", "mixed", "epoch", "fully_dynamic",
-                             "delta", "sharded"])
+                             "delta", "sharded", "packed"])
     a = ap.parse_args()
     main(scale=a.scale, datasets=tuple(a.datasets), json_path=a.json_path,
          sections=a.sections)

@@ -8,7 +8,19 @@ bitwise operations".  We keep two layouts:
 - **packed words** ``(n, W)`` uint32, ``W = ceil(k/32)`` — used on the query
   path (8-32x less HBM traffic; the Pallas kernels stream these through VMEM).
 
-This module is the single source of truth for conversions and word-level ops.
+Since PR 7 the *fixpoint* side is packed too: ``sorted_segment_or`` /
+``scatter_or`` give the word planes a segment-OR algebra (a segmented
+``associative_scan`` over dst-sorted edges — jax has no native ``.at[].or``
+scatter), so Alg-1 build, Alg-3 insert and the delta repair can all run on
+``(n, W)`` uint32 operands.  This module is the single source of truth for
+conversions and word-level ops.
+
+Pad-bit invariant: every (..., W) word plane produced or combined here keeps
+the pad bits of the last word (lanes >= k) at ZERO.  ``pack`` guarantees it by
+construction (inputs are zero-extended before weighting); word-OR consumers
+must re-mask with ``pad_mask(k)`` after every OR round if they ever mix in
+words of unknown provenance, and ``popcount(words, k=k)`` masks before
+counting so garbage pad bits can never leak into cardinalities.
 """
 from __future__ import annotations
 
@@ -20,6 +32,17 @@ WORD = 32
 
 def n_words(k: int) -> int:
     return (k + WORD - 1) // WORD
+
+
+def pad_mask(k: int) -> jax.Array:
+    """(W,) uint32 — ones in the k valid lane bits, zeros in the pad bits of
+    the last word.  ANDing with this after a word-OR round enforces the
+    module's pad-bit invariant for k not a multiple of 32."""
+    w = n_words(k)
+    lanes = jnp.arange(w * WORD, dtype=jnp.int32).reshape(w, WORD)
+    weights = jnp.uint32(1) << jnp.arange(WORD, dtype=jnp.uint32)
+    return ((lanes < k).astype(jnp.uint32) * weights).sum(
+        axis=-1, dtype=jnp.uint32)
 
 
 def pack(bits: jax.Array) -> jax.Array:
@@ -58,9 +81,64 @@ def union(a: jax.Array, b: jax.Array) -> jax.Array:
     return a | b
 
 
-def popcount(words: jax.Array) -> jax.Array:
-    """Per-row popcount of (..., W) uint32 words -> (...,) int32."""
-    x = words
+def segment_or_flags(vals: jax.Array, start: jax.Array, tail: jax.Array,
+                     seg_ids: jax.Array, num_segments: int) -> jax.Array:
+    """Segment-OR of pre-sorted packed rows with precomputed boundary flags.
+
+    vals    : (E, W) uint32 word rows.
+    start   : (E,) bool — True at the first entry of each segment.
+    tail    : (E,) bool — True at the last entry of each segment.
+    seg_ids : (E,) int32 NON-DECREASING segment ids; ids outside
+              ``[0, num_segments)`` are dropped (pad-entry sentinel).
+
+    Returns (num_segments, W) uint32 — the OR of each segment's rows, zero
+    for empty segments.  Implemented as a segmented inclusive
+    ``associative_scan`` (the classic (flag, value) monoid) followed by a
+    tail scatter; because seg_ids are sorted, each segment has exactly one
+    tail entry, so the ``.set`` scatter never collides."""
+    def combine(a, b):
+        f1, v1 = a
+        f2, v2 = b
+        return f1 | f2, jnp.where(f2[..., None], v2, v1 | v2)
+
+    _, acc = jax.lax.associative_scan(combine, (start, vals))
+    out = jnp.zeros((num_segments, vals.shape[-1]), vals.dtype)
+    return out.at[jnp.where(tail, seg_ids, num_segments)].set(
+        acc, mode="drop")
+
+
+def sorted_segment_or(vals: jax.Array, seg_ids: jax.Array,
+                      num_segments: int) -> jax.Array:
+    """Segment-OR of (E, W) packed rows by NON-DECREASING (E,) segment ids
+    (the word-plane twin of ``jax.ops.segment_max`` on bool planes).  Ids
+    outside ``[0, num_segments)`` are dropped."""
+    if vals.shape[0] == 0:
+        return jnp.zeros((num_segments, vals.shape[-1]), vals.dtype)
+    edge = seg_ids[1:] != seg_ids[:-1]
+    start = jnp.concatenate([jnp.ones((1,), jnp.bool_), edge])
+    tail = jnp.concatenate([edge, jnp.ones((1,), jnp.bool_)])
+    return segment_or_flags(vals, start, tail, seg_ids, num_segments)
+
+
+def scatter_or(base: jax.Array, values: jax.Array,
+               at: jax.Array) -> jax.Array:
+    """OR packed rows ``values`` (b, W) into ``base`` (n, W) at row ids
+    ``at`` (b,); duplicate and out-of-range ids are handled (merged /
+    dropped).  The unsorted front door to ``sorted_segment_or``."""
+    if values.shape[0] == 0:
+        return base
+    order = jnp.argsort(at)
+    agg = sorted_segment_or(values[order], at[order], base.shape[0])
+    return base | agg
+
+
+def popcount(words: jax.Array, k: int | None = None) -> jax.Array:
+    """Per-row popcount of (..., W) uint32 words -> (...,) int32.
+
+    Pass ``k`` to mask the pad bits of the last word before counting —
+    required whenever the words may violate the pad-bit invariant (e.g.
+    after ORing in foreign words) and k is not a multiple of 32."""
+    x = words if k is None else words & pad_mask(k)
     x = x - ((x >> jnp.uint32(1)) & jnp.uint32(0x55555555))
     x = (x & jnp.uint32(0x33333333)) + ((x >> jnp.uint32(2)) & jnp.uint32(0x33333333))
     x = (x + (x >> jnp.uint32(4))) & jnp.uint32(0x0F0F0F0F)

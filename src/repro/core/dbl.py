@@ -181,21 +181,26 @@ class DBLIndex(NamedTuple):
     @staticmethod
     def build(g: G.Graph, *, n_cap: int, k: int = 64, k_prime: int = 64,
               selection: str = "product", leaf_r: int = 0,
-              max_iters: int = 256, check: str = "warn") -> "DBLIndex":
+              max_iters: int = 256, check: str = "warn",
+              plane_repr: str = "bool") -> "DBLIndex":
         """Alg 1.  A build whose fixpoints hit ``max_iters`` without
         converging produces INCOMPLETE labels (same failure mode as a
         saturated insert): the ``saturated`` flag is set and ``check``
         behaves as in ``insert_edges`` ("warn" default / "raise" /
-        "defer")."""
+        "defer").  ``plane_repr="packed"`` runs every fixpoint on
+        uint32-packed word planes (bitwise-equal labels, 32 lanes/word)."""
         if check not in ("warn", "raise", "defer"):
             raise ValueError(f"unknown check mode {check!r}")
+        P.check_plane_repr(plane_repr)
         landmarks = S.select_landmarks(g, n_cap=n_cap, k=k, method=selection)
         dl_in, dl_out, it_dl = L.build_dl(g, landmarks, n_cap=n_cap, k=k,
-                                          max_iters=max_iters)
+                                          max_iters=max_iters,
+                                          plane_repr=plane_repr)
         sources, sinks = S.leaf_masks(g, n_cap=n_cap, leaf_r=leaf_r)
         bl_in, bl_out, it_bl = L.build_bl(g, sources, sinks, n_cap=n_cap,
                                           k_prime=k_prime,
-                                          max_iters=max_iters)
+                                          max_iters=max_iters,
+                                          plane_repr=plane_repr)
         sat = U.saturated(jnp.concatenate([it_dl, it_bl]), max_iters)
         if check != "defer" and bool(np.asarray(sat)):
             if check == "raise":
@@ -236,7 +241,8 @@ class DBLIndex(NamedTuple):
 
     # ---- updates (Alg 3) --------------------------------------------------
     def insert_edges(self, new_src, new_dst, *, max_iters: int = 256,
-                     check: str = "warn") -> "DBLIndex":
+                     check: str = "warn",
+                     plane_repr: str = "bool") -> "DBLIndex":
         """Batched Alg-3 insert.  ``check`` controls saturation handling —
         the fixpoint's iteration vector is NOT discarded: if any label
         plane hit ``max_iters`` without converging the labels are silently
@@ -252,7 +258,7 @@ class DBLIndex(NamedTuple):
         g2, dl_in, dl_out, bl_in, bl_out, iters, epoch2 = U.insert_and_update(
             self.graph, self.dl_in, self.dl_out, self.bl_in, self.bl_out,
             new_src, new_dst, self.epoch, n_cap=self.n_cap,
-            max_iters=max_iters)
+            max_iters=max_iters, plane_repr=plane_repr)
         sat_now = U.saturated(iters, max_iters)
         if check != "defer" and bool(np.asarray(sat_now)):
             if check == "raise":
@@ -277,8 +283,8 @@ class DBLIndex(NamedTuple):
 
     def rebuild(self, *, mode: str = "full", selection: str = "product",
                 leaf_r: int = 0, max_iters: int = 256, compact: bool = True,
-                check: str = "warn",
-                delta_threshold: float = 0.99) -> "DBLIndex":
+                check: str = "warn", delta_threshold: float = 0.99,
+                plane_repr: str = "bool") -> "DBLIndex":
         """Lazy label rebuild over the LIVE edge set, clearing the dirty
         state.  ``mode`` selects the maintenance path:
 
@@ -309,12 +315,13 @@ class DBLIndex(NamedTuple):
         return self.rebuild_info(
             mode=mode, selection=selection, leaf_r=leaf_r,
             max_iters=max_iters, compact=compact, check=check,
-            delta_threshold=delta_threshold)[0]
+            delta_threshold=delta_threshold, plane_repr=plane_repr)[0]
 
     def rebuild_info(self, *, mode: str = "full", selection: str = "product",
                      leaf_r: int = 0, max_iters: int = 256,
                      compact: bool = True, check: str = "warn",
-                     delta_threshold: float = 0.99
+                     delta_threshold: float = 0.99,
+                     plane_repr: str = "bool"
                      ) -> tuple["DBLIndex", dict]:
         """``rebuild`` plus a report of what actually ran: ``(index, info)``
         where ``info["mode"]`` is the executed path (``"delta"``/``"full"``),
@@ -325,7 +332,8 @@ class DBLIndex(NamedTuple):
         if mode not in ("full", "delta", "auto"):
             raise ValueError(f"unknown rebuild mode {mode!r}")
         full_kw = dict(selection=selection, leaf_r=leaf_r,
-                       max_iters=max_iters, compact=compact, check=check)
+                       max_iters=max_iters, compact=compact, check=check,
+                       plane_repr=plane_repr)
         if mode == "full":
             return self._full_rebuild(**full_kw), \
                 {"mode": "full", "reason": "forced"}
@@ -342,16 +350,19 @@ class DBLIndex(NamedTuple):
             return self._full_rebuild(**full_kw), \
                 {"mode": "full", "reason": "estimate", "estimate": est}
         idx = self._delta_rebuild(plan, max_iters=max_iters,
-                                  compact=compact, check=check)
+                                  compact=compact, check=check,
+                                  plane_repr=plane_repr)
         reason = "forced" if mode == "delta" else "estimate"
         return idx, {"mode": "delta", "reason": reason, "estimate": est}
 
     def _full_rebuild(self, *, selection: str, leaf_r: int, max_iters: int,
-                      compact: bool, check: str) -> "DBLIndex":
+                      compact: bool, check: str,
+                      plane_repr: str = "bool") -> "DBLIndex":
         g = G.compact(self.graph) if compact else self.graph
         idx = DBLIndex.build(g, n_cap=self.n_cap, k=self.k,
                              k_prime=self.k_prime, selection=selection,
-                             leaf_r=leaf_r, max_iters=max_iters, check=check)
+                             leaf_r=leaf_r, max_iters=max_iters, check=check,
+                             plane_repr=plane_repr)
         return idx._replace(
             epoch=jnp.asarray(self.epoch, jnp.int32) + jnp.int32(1))
 
@@ -431,7 +442,7 @@ class DBLIndex(NamedTuple):
                 "estimate": estimate}
 
     def _delta_rebuild(self, plan: dict, *, max_iters: int, compact: bool,
-                       check: str) -> "DBLIndex":
+                       check: str, plane_repr: str = "bool") -> "DBLIndex":
         """Execute a delta plan: ONE fused fixpoint per propagation
         direction.
 
@@ -491,7 +502,7 @@ class DBLIndex(NamedTuple):
                 es, ed, el = sub_arrays(sel)
             x, it = P.propagate(x, es, ed, el, fr, n_cap=n_cap,
                                 monoid="or", max_iters=max_iters,
-                                reverse=reverse)
+                                reverse=reverse, plane_repr=plane_repr)
             iters.append(it)
             return x
 

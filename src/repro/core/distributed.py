@@ -183,7 +183,7 @@ def _check_saturation(sat, max_iters: int, check: str, stacklevel: int = 3):
 def build_vertex_sharded(g: Graph, mesh: Mesh, *, n_cap: int, k: int = 64,
                          k_prime: int = 64, selection: str = "product",
                          leaf_r: int = 0, max_iters: int = 256,
-                         check: str = "warn"
+                         check: str = "warn", plane_repr: str = "bool"
                          ) -> tuple[DBLIndex, PL.ShardPlan]:
     """Alg 1 with vertex-sharded label planes: ONE fused (k + k')-lane
     halo fixpoint per direction over row-partitioned seed planes.  Lanes
@@ -208,10 +208,12 @@ def build_vertex_sharded(g: Graph, mesh: Mesh, *, n_cap: int, k: int = 64,
     vec_sh = sh.bl_sources
     x_fwd, it0 = PL.halo_propagate(plan, x_fwd,
                                    jax.device_put(fr_fwd, vec_sh), live,
-                                   max_iters=max_iters)
+                                   max_iters=max_iters,
+                                   plane_repr=plane_repr)
     x_bwd, it1 = PL.halo_propagate(plan, x_bwd,
                                    jax.device_put(fr_bwd, vec_sh), live,
-                                   reverse=True, max_iters=max_iters)
+                                   reverse=True, max_iters=max_iters,
+                                   plane_repr=plane_repr)
     sat = U.saturated(jnp.stack([it0, it1]), max_iters)
     _check_saturation(sat, max_iters, check)
     store = seeds.with_fused(x_fwd, x_bwd)
@@ -225,7 +227,7 @@ def build_vertex_sharded(g: Graph, mesh: Mesh, *, n_cap: int, k: int = 64,
 
 def insert_vertex_sharded(idx: DBLIndex, plan: PL.ShardPlan, new_src,
                           new_dst, *, max_iters: int = 256,
-                          check: str = "warn"
+                          check: str = "warn", plane_repr: str = "bool"
                           ) -> tuple[DBLIndex, PL.ShardPlan, jax.Array]:
     """Batched Alg-3 insert on the vertex-sharded layout.
 
@@ -252,11 +254,13 @@ def insert_vertex_sharded(idx: DBLIndex, plan: PL.ShardPlan, new_src,
     seeded_f, fr_f = PL.sharded_seed_scatter(store.fused(), ns, nd,
                                              mesh=mesh)
     x_fwd, it0 = PL.halo_propagate(plan2, seeded_f, fr_f, live,
-                                   max_iters=max_iters)
+                                   max_iters=max_iters,
+                                   plane_repr=plane_repr)
     seeded_b, fr_b = PL.sharded_seed_scatter(store.fused(reverse=True),
                                              nd, ns, mesh=mesh)
     x_bwd, it1 = PL.halo_propagate(plan2, seeded_b, fr_b, live,
-                                   reverse=True, max_iters=max_iters)
+                                   reverse=True, max_iters=max_iters,
+                                   plane_repr=plane_repr)
     sat_now = U.saturated(jnp.stack([it0, it1]), max_iters)
     _check_saturation(sat_now, max_iters, check)
     idx2 = idx.with_store(
@@ -275,7 +279,8 @@ def rebuild_vertex_sharded(idx: DBLIndex, plan: PL.ShardPlan | None, *,
                            selection: str = "product", leaf_r: int = 0,
                            max_iters: int = 256, compact: bool = True,
                            check: str = "warn",
-                           delta_threshold: float = 0.99
+                           delta_threshold: float = 0.99,
+                           plane_repr: str = "bool"
                            ) -> tuple[DBLIndex, PL.ShardPlan, dict]:
     """Sharded twin of ``DBLIndex.rebuild_info``: full Alg-1 rebuild or the
     incremental delta repair, on row-partitioned planes.
@@ -295,7 +300,8 @@ def rebuild_vertex_sharded(idx: DBLIndex, plan: PL.ShardPlan | None, *,
         raise ValueError(f"unknown rebuild mode {mode!r}")
     n_cap, k, kp = idx.n_cap, idx.k, idx.k_prime
     build_kw = dict(n_cap=n_cap, k=k, k_prime=kp, selection=selection,
-                    leaf_r=leaf_r, max_iters=max_iters, check=check)
+                    leaf_r=leaf_r, max_iters=max_iters, check=check,
+                    plane_repr=plane_repr)
 
     def full(reason):
         g2 = G.compact(idx.graph) if compact else idx.graph
@@ -334,7 +340,8 @@ def rebuild_vertex_sharded(idx: DBLIndex, plan: PL.ShardPlan | None, *,
         fr = fr | (seed & fresh[None, :]).any(axis=1)
         x, it = PL.halo_propagate(plan, jax.device_put(x, sh.dl_in),
                                   jax.device_put(fr, sh.bl_sources), live,
-                                  reverse=rev, max_iters=max_iters)
+                                  reverse=rev, max_iters=max_iters,
+                                  plane_repr=plane_repr)
         iters.append(it)
         if rev:
             x_bwd = x

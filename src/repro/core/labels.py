@@ -31,30 +31,35 @@ from .propagate import propagate, push_boundary
 from .select import leaf_hash
 
 
-@functools.partial(jax.jit, static_argnames=("n_cap", "k", "max_iters"))
+@functools.partial(jax.jit, static_argnames=("n_cap", "k", "max_iters",
+                                             "plane_repr"))
 def build_dl(g: Graph, landmarks: jax.Array, *, n_cap: int, k: int,
-             max_iters: int = 256
+             max_iters: int = 256, plane_repr: str = "bool"
              ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Build (dl_in, dl_out, iters (2,)) — bool planes (n_cap, k) uint8.
 
     ``iters`` carries both fixpoints' round counts (``max_iters + 1`` when
     truncated, see ``propagate``) so the caller can surface saturation —
     a cut-off BUILD produces incomplete labels just like a cut-off insert.
+    ``plane_repr="packed"`` runs both fixpoints on uint32 word planes
+    (bitwise-equal output, 32 lanes per word).
     """
     live = edge_mask(g)
     seed = dl_seed_plane(landmarks, n_cap=n_cap, k=k)
     frontier = jnp.zeros((n_cap,), jnp.bool_).at[landmarks].set(True, mode="drop")
     dl_in, it0 = propagate(seed, g.src, g.dst, live, frontier,
-                           n_cap=n_cap, monoid="or", max_iters=max_iters)
+                           n_cap=n_cap, monoid="or", max_iters=max_iters,
+                           plane_repr=plane_repr)
     dl_out, it1 = propagate(seed, g.src, g.dst, live, frontier,
                             n_cap=n_cap, monoid="or", max_iters=max_iters,
-                            reverse=True)
+                            reverse=True, plane_repr=plane_repr)
     return dl_in, dl_out, jnp.stack([it0, it1])
 
 
-@functools.partial(jax.jit, static_argnames=("n_cap", "k_prime", "max_iters"))
+@functools.partial(jax.jit, static_argnames=("n_cap", "k_prime", "max_iters",
+                                             "plane_repr"))
 def build_bl(g: Graph, sources: jax.Array, sinks: jax.Array, *, n_cap: int,
-             k_prime: int, max_iters: int = 256
+             k_prime: int, max_iters: int = 256, plane_repr: str = "bool"
              ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Build (bl_in, bl_out, iters (2,)) hashed leaf planes (n_cap, k') uint8.
 
@@ -64,12 +69,13 @@ def build_bl(g: Graph, sources: jax.Array, sinks: jax.Array, *, n_cap: int,
     live = edge_mask(g)
     seed_in = bl_seed_plane(sources, n_cap=n_cap, k_prime=k_prime)
     bl_in, it0 = propagate(seed_in, g.src, g.dst, live, sources,
-                           n_cap=n_cap, monoid="or", max_iters=max_iters)
+                           n_cap=n_cap, monoid="or", max_iters=max_iters,
+                           plane_repr=plane_repr)
 
     seed_out = bl_seed_plane(sinks, n_cap=n_cap, k_prime=k_prime)
     bl_out, it1 = propagate(seed_out, g.src, g.dst, live, sinks,
                             n_cap=n_cap, monoid="or", max_iters=max_iters,
-                            reverse=True)
+                            reverse=True, plane_repr=plane_repr)
     return bl_in, bl_out, jnp.stack([it0, it1])
 
 

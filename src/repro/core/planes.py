@@ -58,6 +58,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import bitset
 from . import query as Q
+from .propagate import check_plane_repr
 from .select import leaf_hash
 
 #: the mesh axis vertex-sharded planes are partitioned along
@@ -228,6 +229,24 @@ class PlaneStore:
         return Q.pack_labels(self.dl_in, self.dl_out, self.bl_in,
                              self.bl_out)
 
+    @staticmethod
+    def pack_rows(plane: jax.Array) -> jax.Array:
+        """Layout-aware bool->word packing: (rows, k) -> (rows, W) uint32.
+        Every op touches only the lane axis (zero-extend, reshape, weighted
+        sum), so the packing is row-parallel and preserves whatever row
+        sharding the plane carries — a vertex-sharded plane packs
+        shard-locally with no cross-device traffic.  The packed halo path
+        relies on this: planes pack OUTSIDE the shard_map and the words
+        inherit the rows' placement."""
+        return bitset.pack(plane)
+
+    @staticmethod
+    def unpack_rows(words: jax.Array, k: int,
+                    dtype=jnp.uint8) -> jax.Array:
+        """Inverse of :meth:`pack_rows`; row-parallel and
+        sharding-preserving for the same reason."""
+        return bitset.unpack(words, k).astype(dtype)
+
     def label_bytes(self) -> int:
         """Logical (whole-index) bool-plane bytes across all four planes."""
         return sum(int(x.size) * x.dtype.itemsize
@@ -274,13 +293,21 @@ class _DirPlan(NamedTuple):
     slot in the shard's combined table ``[local rows | halo buffer]``.
     ``h_send[s, t]`` lists the local row ids shard ``s`` must ship to shard
     ``t`` each round — exactly the vertices of ``s`` with a cut edge into
-    ``t``'s rows, in the slot order ``t``'s edges expect."""
+    ``t``'s rows, in the slot order ``t``'s edges expect.
+
+    Each shard's bucket is sorted by ``e_recv`` (order is irrelevant to the
+    bool path's segment_max but lets the packed path run its segmented-scan
+    OR directly), with padding entries carrying the out-of-range sentinel
+    ``e_recv == n_loc`` so both reductions drop them; ``e_start``/``e_tail``
+    are the precomputed segment-boundary flags of that sorted order."""
     e_slot: jax.Array    # (d, E_pad) int32 — pushing endpoint's table slot
     e_recv: jax.Array    # (d, E_pad) int32 — receiving endpoint, local row
     e_gid: jax.Array     # (d, E_pad) int32 — global edge slot (live/cutoffs)
     e_valid: jax.Array   # (d, E_pad) bool  — padding mask
     h_send: jax.Array    # (d, d, H) int32  — local rows to send, per peer
     h_valid: jax.Array   # (d, d, H) bool
+    e_start: jax.Array   # (d, E_pad) bool  — first entry of each recv segment
+    e_tail: jax.Array    # (d, E_pad) bool  — last entry of each recv segment
 
 
 class ShardPlan(NamedTuple):
@@ -315,7 +342,13 @@ def _build_dir(push: np.ndarray, recv: np.ndarray, m: int, n_loc: int,
     gids = np.arange(m, dtype=np.int64)
     owner_recv = recv[:m].astype(np.int64) // n_loc
     owner_push = push[:m].astype(np.int64) // n_loc
-    per_shard = [gids[owner_recv == t] for t in range(d)]
+    # bucket sorted by local receiving row: the packed path's segmented
+    # scan needs non-decreasing segment ids, and the bool path's
+    # segment_max is order-insensitive — one plan serves both
+    per_shard = []
+    for t in range(d):
+        e = gids[owner_recv == t]
+        per_shard.append(e[np.argsort(recv[e], kind="stable")])
     # halo need sets: need[t][s] = sorted unique push-vertices owned by s
     # that t's edge bucket references (s != t)
     need = [[np.zeros(0, np.int64)] * d for _ in range(d)]
@@ -331,11 +364,16 @@ def _build_dir(push: np.ndarray, recv: np.ndarray, m: int, n_loc: int,
     E_pad = _round_up(max([1] + [e.size for e in per_shard]), edge_granule)
 
     e_slot = np.zeros((d, E_pad), np.int32)
-    e_recv = np.zeros((d, E_pad), np.int32)
+    # padding entries carry the out-of-range recv sentinel: both the bool
+    # segment_max and the packed tail scatter drop ids >= n_loc, and the
+    # sentinel keeps each sorted row non-decreasing (pads sort last)
+    e_recv = np.full((d, E_pad), n_loc, np.int32)
     e_gid = np.zeros((d, E_pad), np.int32)
     e_valid = np.zeros((d, E_pad), bool)
     h_send = np.zeros((d, d, H), np.int32)
     h_valid = np.zeros((d, d, H), bool)
+    e_start = np.zeros((d, E_pad), bool)
+    e_tail = np.zeros((d, E_pad), bool)
     for t in range(d):
         e = per_shard[t]
         ne = e.size
@@ -357,9 +395,14 @@ def _build_dir(push: np.ndarray, recv: np.ndarray, m: int, n_loc: int,
             ids = need[t][s]
             h_send[s, t, :ids.size] = ids - s * n_loc
             h_valid[s, t, :ids.size] = True
+    e_start[:, 0] = True
+    e_start[:, 1:] = e_recv[:, 1:] != e_recv[:, :-1]
+    e_tail[:, :-1] = e_recv[:, 1:] != e_recv[:, :-1]
+    e_tail[:, -1] = True
     return _DirPlan(jnp.asarray(e_slot), jnp.asarray(e_recv),
                     jnp.asarray(e_gid), jnp.asarray(e_valid),
-                    jnp.asarray(h_send), jnp.asarray(h_valid))
+                    jnp.asarray(h_send), jnp.asarray(h_valid),
+                    jnp.asarray(e_start), jnp.asarray(e_tail))
 
 
 def shard_plan(src, dst, m: int, n_cap: int, mesh: Mesh, *,
@@ -442,17 +485,92 @@ def _halo_propagate_impl(x, frontier, live, e_slot, e_recv, e_gid, e_valid,
               h_send, h_valid)
 
 
+@functools.partial(jax.jit, static_argnames=("mesh", "max_iters", "k"))
+def _halo_propagate_packed_impl(xw, frontier, live, e_slot, e_recv, e_gid,
+                                e_valid, e_start, e_tail, h_send, h_valid,
+                                *, mesh: Mesh, max_iters: int, k: int):
+    """Word-plane twin of ``_halo_propagate_impl``: same round structure,
+    but the shard-local state and the exchanged halo rows are (rows, W)
+    uint32 words — per-round boundary traffic shrinks 32x.  The plan's
+    recv-sorted buckets + precomputed segment flags feed
+    ``bitset.segment_or_flags`` directly (no per-round sort)."""
+    ax, plane_sp, vec_sp, rep = _vspecs(mesh)
+    d = int(mesh.devices.size)
+    n_cap, W = xw.shape
+    n_loc = n_cap // d
+    H = h_send.shape[2]
+
+    def shard_body(xw, fr, live, e_slot, e_recv, e_gid, e_valid, e_start,
+                   e_tail, hs, hv):
+        e_slot, e_recv, e_gid, e_valid, e_start, e_tail = (
+            a[0] for a in (e_slot, e_recv, e_gid, e_valid, e_start, e_tail))
+        hs, hv = hs[0], hv[0]
+        mask = bitset.pad_mask(k)
+
+        def body(state):
+            xw, fr, it = state
+            sf = hv & fr[hs]                               # (d, H)
+            sr = jnp.where(sf[..., None], xw[hs], jnp.uint32(0))
+            rf = jax.lax.all_to_all(sf, ax, 0, 0)
+            rr = jax.lax.all_to_all(sr, ax, 0, 0)
+            comb = jnp.concatenate([xw, rr.reshape(d * H, W)], axis=0)
+            frc = jnp.concatenate([fr, rf.reshape(d * H)], axis=0)
+            active = frc[e_slot] & live[e_gid] & e_valid
+            vals = jnp.where(active[:, None], comb[e_slot], jnp.uint32(0))
+            agg = bitset.segment_or_flags(vals, e_start, e_tail, e_recv,
+                                          n_loc)
+            new = (xw | agg) & mask
+            return new, jnp.any(new != xw, axis=-1), it + 1
+
+        def cond(state):
+            _, fr, it = state
+            alive = jax.lax.psum(fr.sum().astype(jnp.int32), ax) > 0
+            return alive & (it < max_iters)
+
+        xw, fr, it = jax.lax.while_loop(cond, body,
+                                        (xw, fr.astype(jnp.bool_),
+                                         jnp.int32(0)))
+        trunc = jax.lax.psum(fr.sum().astype(jnp.int32), ax) > 0
+        iters = jnp.where(trunc, jnp.int32(max_iters + 1), it)
+        return xw, iters
+
+    sm = shard_map(
+        shard_body, mesh=mesh, check_rep=False,
+        in_specs=(plane_sp, vec_sp, rep,
+                  plane_sp, plane_sp, plane_sp, plane_sp, plane_sp,
+                  plane_sp, P(ax, None, None), P(ax, None, None)),
+        out_specs=(plane_sp, rep))
+    return sm(xw, frontier, live, e_slot, e_recv, e_gid, e_valid, e_start,
+              e_tail, h_send, h_valid)
+
+
 def halo_propagate(plan: ShardPlan, x: jax.Array, frontier: jax.Array,
                    live: jax.Array, *, reverse: bool = False,
-                   max_iters: int = 256) -> tuple[jax.Array, jax.Array]:
+                   max_iters: int = 256,
+                   plane_repr: str = "bool") -> tuple[jax.Array, jax.Array]:
     """Vertex-sharded twin of ``propagate.propagate`` (OR monoid).
 
     Same contract: returns (labels, iters) with ``iters = max_iters + 1``
     when the loop was cut off with the (global) frontier still non-empty.
     Bitwise-identical to the replicated fixpoint: each round performs the
     same edge-parallel relaxation, just with the rows partitioned and the
-    boundary frontier rows exchanged via one ``all_to_all``."""
+    boundary frontier rows exchanged via one ``all_to_all``.
+
+    ``plane_repr="packed"`` runs the word-plane fixpoint: the bool plane is
+    packed shard-locally (``PlaneStore.pack_rows`` is row-parallel, so the
+    words inherit the rows' sharding), halo rows cross the mesh as uint32
+    words (32x less boundary traffic), and the result unpacks back to the
+    caller's dtype — bitwise equal to the bool path."""
+    check_plane_repr(plane_repr)
     dp = plan.bwd if reverse else plan.fwd
+    if plane_repr == "packed":
+        k = x.shape[1]
+        xw = PlaneStore.pack_rows(x)
+        out_w, iters = _halo_propagate_packed_impl(
+            xw, frontier, live, dp.e_slot, dp.e_recv, dp.e_gid, dp.e_valid,
+            dp.e_start, dp.e_tail, dp.h_send, dp.h_valid,
+            mesh=plan.mesh, max_iters=max_iters, k=k)
+        return PlaneStore.unpack_rows(out_w, k, x.dtype), iters
     return _halo_propagate_impl(x, frontier, live, dp.e_slot, dp.e_recv,
                                 dp.e_gid, dp.e_valid, dp.h_send, dp.h_valid,
                                 mesh=plan.mesh, max_iters=max_iters)

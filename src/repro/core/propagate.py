@@ -14,6 +14,21 @@ This is the TPU-native reformulation of the paper's vertex-centric BFS
 Monotonicity (labels only grow under OR / only shrink under MIN) makes the
 fixpoint correct on cyclic graphs — this is what lets DBL skip DAG maintenance
 entirely when SCCs merge.
+
+Two interchangeable plane representations drive the OR monoid:
+
+- ``plane_repr="bool"`` — (n_cap, k) uint8 planes, segment-OR via
+  ``jax.ops.segment_max`` (the original reference path);
+- ``plane_repr="packed"`` — the same fixpoint on (n_cap, W) uint32 words,
+  32 lanes per word: pack at entry, one dst-argsort hoisted out of the loop,
+  per-round gather + ``bitset.sorted_segment_or`` + word-OR, unpack at exit.
+  Word-OR distributes over the per-lane OR (bit i of ``a | b`` ==
+  ``a_i | b_i``), and the changed-row reduction ``any(new != old, -1)`` sees
+  exactly the rows whose lane sets grew (pad bits are zero on both sides by
+  the bitset pad-bit invariant), so the frontier evolution — and therefore
+  the round count and saturation report — is bitwise identical to the bool
+  path.  The MIN monoid has no packed form (``plane_repr="packed"`` with
+  ``monoid="min"`` raises).
 """
 from __future__ import annotations
 
@@ -23,9 +38,18 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
+from . import bitset
+
 Monoid = Literal["or", "min"]
+PlaneRepr = Literal["bool", "packed"]
 
 _INT_MAX = jnp.iinfo(jnp.int32).max
+
+
+def check_plane_repr(plane_repr: str) -> None:
+    if plane_repr not in ("bool", "packed"):
+        raise ValueError(
+            f"plane_repr must be 'bool' or 'packed', got {plane_repr!r}")
 
 
 def _step_or(labels, src, dst, live, frontier, n_cap):
@@ -46,11 +70,48 @@ def _step_min(labels, src, dst, live, frontier, n_cap):
     return new, changed
 
 
-@functools.partial(jax.jit, static_argnames=("n_cap", "monoid", "max_iters", "reverse"))
+def _propagate_packed(labels, src, dst, live, frontier, n_cap, max_iters):
+    """OR fixpoint on (n_cap, W) uint32 word planes.  Packs/unpacks at the
+    boundary so callers keep trading in bool planes; the loop itself moves
+    32 lanes per word.  The dst-argsort is loop-invariant, so it is hoisted
+    in front of the while_loop (one sort per call, not per round)."""
+    k = labels.shape[-1]
+    words = bitset.pack(labels)
+    mask = bitset.pad_mask(k)
+    has_edges = src.shape[0] > 0
+    if has_edges:
+        order = jnp.argsort(dst)
+        src_s, dst_s, live_s = src[order], dst[order], live[order]
+
+    def cond(state):
+        _, frontier, it = state
+        return jnp.logical_and(frontier.any(), it < max_iters)
+
+    def body(state):
+        words, frontier, it = state
+        if has_edges:
+            active = frontier[src_s] & live_s
+            vals = jnp.where(active[:, None], words[src_s], jnp.uint32(0))
+            agg = bitset.sorted_segment_or(vals, dst_s, n_cap)
+            new = (words | agg) & mask
+            changed = jnp.any(new != words, axis=-1)
+        else:
+            new, changed = words, jnp.zeros_like(frontier)
+        return new, changed, it + 1
+
+    words, frontier, iters = jax.lax.while_loop(
+        cond, body, (words, frontier.astype(jnp.bool_), jnp.int32(0)))
+    iters = jnp.where(frontier.any(), jnp.int32(max_iters + 1), iters)
+    return bitset.unpack(words, k).astype(labels.dtype), iters
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_cap", "monoid", "max_iters", "reverse", "plane_repr"))
 def propagate(labels: jax.Array, src: jax.Array, dst: jax.Array,
               live: jax.Array, frontier: jax.Array, *, n_cap: int,
               monoid: Monoid = "or", max_iters: int = 256,
-              reverse: bool = False) -> tuple[jax.Array, jax.Array]:
+              reverse: bool = False,
+              plane_repr: PlaneRepr = "bool") -> tuple[jax.Array, jax.Array]:
     """Run the fixpoint. Returns (labels, iters).
 
     ``iters`` is the number of relaxation rounds executed, EXCEPT when the
@@ -63,9 +124,18 @@ def propagate(labels: jax.Array, src: jax.Array, dst: jax.Array,
     src, dst : (m_cap,) int32 edge endpoints; ``reverse=True`` pushes dst->src.
     live     : (m_cap,) bool — live-edge mask.
     frontier : (n_cap,) bool — initial changed set (seeds).
+    plane_repr : "bool" runs the uint8 segment-max reference; "packed" runs
+        the identical fixpoint on uint32 word planes (OR monoid only) and is
+        bitwise equal including the iters/saturation report.
     """
+    check_plane_repr(plane_repr)
+    if plane_repr == "packed" and monoid != "or":
+        raise ValueError("plane_repr='packed' supports the OR monoid only")
     if reverse:
         src, dst = dst, src
+    if plane_repr == "packed":
+        return _propagate_packed(labels, src, dst, live, frontier,
+                                 n_cap, max_iters)
     step = _step_or if monoid == "or" else _step_min
 
     def cond(state):
@@ -83,10 +153,12 @@ def propagate(labels: jax.Array, src: jax.Array, dst: jax.Array,
     return labels, iters
 
 
-@functools.partial(jax.jit, static_argnames=("n_cap", "max_iters", "reverse"))
+@functools.partial(jax.jit, static_argnames=(
+    "n_cap", "max_iters", "reverse", "plane_repr"))
 def reach_mask(src: jax.Array, dst: jax.Array, live: jax.Array,
                seeds: jax.Array, *, n_cap: int, max_iters: int,
-               reverse: bool = False) -> tuple[jax.Array, jax.Array]:
+               reverse: bool = False,
+               plane_repr: PlaneRepr = "bool") -> tuple[jax.Array, jax.Array]:
     """(n_cap,) bool — the ``live``-edge reachability closure of ``seeds``
     (inclusive), computed as a single-lane OR fixpoint on the same
     segment-max machinery as the label planes.  Returns (mask, iters).
@@ -104,34 +176,51 @@ def reach_mask(src: jax.Array, dst: jax.Array, live: jax.Array,
     """
     plane = seeds[:, None].astype(jnp.uint8)
     out, iters = propagate(plane, src, dst, live, seeds, n_cap=n_cap,
-                           monoid="or", max_iters=max_iters, reverse=reverse)
+                           monoid="or", max_iters=max_iters, reverse=reverse,
+                           plane_repr=plane_repr)
     return out[:, 0].astype(jnp.bool_), iters
 
 
-@functools.partial(jax.jit, static_argnames=("n_cap", "reverse"))
+@functools.partial(jax.jit, static_argnames=("n_cap", "reverse", "plane_repr"))
 def push_boundary(src: jax.Array, dst: jax.Array, live: jax.Array,
-                  dirty: jax.Array, *, n_cap: int,
-                  reverse: bool = False) -> jax.Array:
+                  dirty: jax.Array, *, n_cap: int, reverse: bool = False,
+                  plane_repr: PlaneRepr = "bool") -> jax.Array:
     """(n_cap,) bool — vertices with a live edge INTO the dirty set (w.r.t.
     the propagation direction).  Together with the dirty set itself these
     form the initial frontier of a delta fixpoint: they are the only clean
     vertices whose labels are not yet absorbed by every successor (their
     dirty successors were just reset to seeds)."""
+    check_plane_repr(plane_repr)
     if reverse:
         src, dst = dst, src
+    if plane_repr == "packed":
+        vals = (dirty[dst] & live).astype(jnp.uint32)[:, None]
+        order = jnp.argsort(src)
+        agg = bitset.sorted_segment_or(vals[order], src[order], n_cap)
+        return agg[:, 0] != 0
     hit = jax.ops.segment_max((dirty[dst] & live).astype(jnp.uint8), src,
                               num_segments=n_cap)
     return hit.astype(jnp.bool_)
 
 
 def seed_scatter_or(base: jax.Array, values: jax.Array, at: jax.Array,
-                    n_cap: int) -> tuple[jax.Array, jax.Array]:
+                    n_cap: int, *,
+                    plane_repr: PlaneRepr = "bool") -> tuple[jax.Array, jax.Array]:
     """OR ``values[i]`` (rows, (b, k)) into ``base`` at vertex ``at[i]``.
 
     Returns (new_base, frontier) where frontier marks rows that changed.
     Used to seed Alg 3 batched: for each inserted edge (u,v),
     ``DL_in(u)`` is ORed into ``DL_in(v)`` before the fixpoint runs.
+    With ``plane_repr="packed"`` the scatter runs on uint32 word rows
+    (``bitset.scatter_or``) — bitwise equal to the segment-max path.
     """
+    check_plane_repr(plane_repr)
+    if plane_repr == "packed":
+        k = base.shape[-1]
+        base_w = bitset.pack(base)
+        new_w = bitset.scatter_or(base_w, bitset.pack(values), at)
+        frontier = jnp.any(new_w != base_w, axis=-1)
+        return bitset.unpack(new_w, k).astype(base.dtype), frontier
     seed = jax.ops.segment_max(values.astype(base.dtype), at, num_segments=n_cap)
     new = jnp.maximum(base, seed)
     frontier = jnp.any(new != base, axis=-1)

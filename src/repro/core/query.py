@@ -219,9 +219,67 @@ def _admit_plane(p: PackedLabels, u: jax.Array, v: jax.Array,
 #: sharded twin in ``core.planes``): "int8" is the default — the segment-max
 #: operand is (m_cap, Qc) at 1 byte/lane instead of the 4-byte int32 path,
 #: cutting the reduction's memory traffic 4x.  "int32" is kept as the wide
-#: reference path; both produce bitwise-identical hits (parity-swept in
-#: tests/test_kernels.py).
-FRONTIER_DTYPES = {"int8": jnp.int8, "int32": jnp.int32}
+#: reference path.  "packed" goes further: the query-lane axis packs into
+#: uint32 words (32 lanes/word) and the whole BFS — frontier, visited,
+#: admit, per-lane cutoffs, hits — runs on word planes via the bitset
+#: segment-OR algebra (replicated ``pruned_bfs`` only; the sharded twin
+#: rejects it).  All flavors produce bitwise-identical hits (parity-swept
+#: in tests/test_kernels.py).
+FRONTIER_DTYPES = {"int8": jnp.int8, "int32": jnp.int32,
+                   "packed": jnp.uint32}
+
+
+def _pruned_bfs_packed(g, p, u, v, admit, m_cut, dl_on, *, n_cap, max_iters):
+    """Word-packed BFS lanes: (n_cap, Wq) uint32 planes, Wq = ceil(Qc/32).
+
+    Identical round structure to the lane-wise loop — gather frontier words
+    along live (and per-lane cut-admitted) edges, segment-OR by dst, gate by
+    admit/visited/hit — so the frontier evolution, termination, and hits are
+    bitwise equal.  The per-edge cutoff mask packs ONCE per dispatch (it is
+    loop-invariant), and the dst-argsort is hoisted out of the loop."""
+    qc = u.shape[0]
+    lane_mask = bitset.pad_mask(qc)                    # (Wq,)
+    live = edge_mask(g)
+    if admit is None:
+        admit = _admit_plane(p, u, v, n_cap, dl_on)
+    elif admit.dtype != jnp.bool_:
+        admit = admit > 0
+    admit_w = bitset.pack(admit)                       # (n_cap, Wq)
+    order = jnp.argsort(g.dst)
+    src_s, dst_s, live_s = g.src[order], g.dst[order], live[order]
+    if m_cut is not None:
+        eids = jnp.arange(g.src.shape[0], dtype=jnp.int32)
+        cut_ws = bitset.pack(eids[order][:, None] < m_cut[None, :])
+    ids = jnp.arange(n_cap, dtype=jnp.int32)
+    frontier_w = bitset.pack(ids[:, None] == u[None, :])
+    visited_w = frontier_w
+    hit_w = jnp.zeros(lane_mask.shape, jnp.uint32)
+    lanes = jnp.arange(qc)
+    lw = lanes // 32
+    lb = (lanes % 32).astype(jnp.uint32)
+
+    def cond(state):
+        fw, _, hw, it = state
+        done = jnp.all((hw & lane_mask) == lane_mask)
+        return jnp.logical_and(jnp.any(fw != 0),
+                               jnp.logical_and(~done, it < max_iters))
+
+    def body(state):
+        fw, vw, hw, it = state
+        contrib = jnp.where(live_s[:, None], fw[src_s], jnp.uint32(0))
+        if m_cut is not None:
+            contrib &= cut_ws
+        nw = bitset.sorted_segment_or(contrib, dst_s, n_cap)
+        nw = nw & admit_w & ~vw & ~hw[None, :]
+        rows = nw[v]                                   # (qc, Wq)
+        hits = ((rows[lanes, lw] >> lb) & jnp.uint32(1)).astype(jnp.bool_)
+        hw = hw | bitset.pack(hits)
+        vw = vw | nw
+        return nw, vw, hw, it + 1
+
+    _, _, hit_w, _ = jax.lax.while_loop(
+        cond, body, (frontier_w, visited_w, hit_w, jnp.int32(0)))
+    return bitset.unpack(hit_w, qc)
 
 
 @functools.partial(jax.jit,
@@ -257,11 +315,13 @@ def pruned_bfs(g: Graph, p: PackedLabels, u: jax.Array, v: jax.Array,
     a live path even under tombstones.  Tombstoned edges are excluded from
     traversal automatically via ``edge_mask``.
 
-    ``frontier_dtype`` ("int8" default / "int32") picks the element type the
-    (m_cap, Qc) relaxation operand is segment-reduced in — the narrow plane
-    cuts the reduction bytes 4x with bitwise-identical hits (the planes only
-    ever carry 0/1; empty segments come back at the dtype's minimum, so the
-    frontier re-binarizes with ``> 0`` rather than a cast).
+    ``frontier_dtype`` ("int8" default / "int32" / "packed") picks the
+    element type the (m_cap, Qc) relaxation operand is segment-reduced in —
+    the narrow plane cuts the reduction bytes 4x with bitwise-identical hits
+    (the planes only ever carry 0/1; empty segments come back at the dtype's
+    minimum, so the frontier re-binarizes with ``> 0`` rather than a cast).
+    "packed" packs the lane axis into uint32 words and runs the whole loop
+    on (n_cap, ceil(Qc/32)) word planes — 32 lanes per gather/reduce element.
     """
     ftype = FRONTIER_DTYPES[frontier_dtype]
     qc = u.shape[0]
@@ -272,6 +332,9 @@ def pruned_bfs(g: Graph, p: PackedLabels, u: jax.Array, v: jax.Array,
     else:
         eids = jnp.arange(g.src.shape[0], dtype=jnp.int32)
         dl_on = (m_cut >= g.m) & clean
+    if frontier_dtype == "packed":
+        return _pruned_bfs_packed(g, p, u, v, admit, m_cut, dl_on,
+                                  n_cap=n_cap, max_iters=max_iters)
     if admit is None:
         admit = _admit_plane(p, u, v, n_cap, dl_on)  # (n_cap, Qc)
     elif admit.dtype != jnp.bool_:

@@ -26,7 +26,8 @@ from .propagate import propagate, seed_scatter_or
 
 
 def insert_seeds(plane: jax.Array, new_src: jax.Array, new_dst: jax.Array,
-                 *, n_cap: int, reverse: bool = False):
+                 *, n_cap: int, reverse: bool = False,
+                 plane_repr: str = "bool"):
     """Alg-3 seeding for one plane family: for each inserted edge (u, v),
     OR ``plane[u]`` into ``plane[v]`` (roles swapped for the reverse/out
     direction).  Returns (seeded plane, changed-row frontier).  This is the
@@ -34,15 +35,18 @@ def insert_seeds(plane: jax.Array, new_src: jax.Array, new_dst: jax.Array,
     vertex-sharded twin (one psum for the gathered rows, shard-local
     scatter) — both produce bitwise-identical seeded state."""
     at_src, at_dst = (new_dst, new_src) if reverse else (new_src, new_dst)
-    return seed_scatter_or(plane, plane[at_src], at_dst, n_cap)
+    return seed_scatter_or(plane, plane[at_src], at_dst, n_cap,
+                           plane_repr=plane_repr)
 
 
-@functools.partial(jax.jit, static_argnames=("n_cap", "max_iters"))
+@functools.partial(jax.jit, static_argnames=("n_cap", "max_iters",
+                                             "plane_repr"))
 def insert_and_update(g: G.Graph,
                       dl_in, dl_out, bl_in, bl_out,
                       new_src: jax.Array, new_dst: jax.Array,
                       epoch: jax.Array | int = 0,
-                      *, n_cap: int, max_iters: int = 256):
+                      *, n_cap: int, max_iters: int = 256,
+                      plane_repr: str = "bool"):
     """Returns (graph', dl_in', dl_out', bl_in', bl_out', iters (4,), epoch').
 
     ``epoch`` is the snapshot counter threaded through every insert batch:
@@ -56,16 +60,18 @@ def insert_and_update(g: G.Graph,
     live = G.edge_mask(g2)
 
     def fwd(plane):
-        seeded, frontier = insert_seeds(plane, new_src, new_dst, n_cap=n_cap)
+        seeded, frontier = insert_seeds(plane, new_src, new_dst, n_cap=n_cap,
+                                        plane_repr=plane_repr)
         return propagate(seeded, g2.src, g2.dst, live, frontier,
-                         n_cap=n_cap, monoid="or", max_iters=max_iters)
+                         n_cap=n_cap, monoid="or", max_iters=max_iters,
+                         plane_repr=plane_repr)
 
     def bwd(plane):
         seeded, frontier = insert_seeds(plane, new_src, new_dst, n_cap=n_cap,
-                                        reverse=True)
+                                        reverse=True, plane_repr=plane_repr)
         return propagate(seeded, g2.src, g2.dst, live, frontier,
                          n_cap=n_cap, monoid="or", max_iters=max_iters,
-                         reverse=True)
+                         reverse=True, plane_repr=plane_repr)
 
     dl_in2, it0 = fwd(dl_in)
     dl_out2, it1 = bwd(dl_out)

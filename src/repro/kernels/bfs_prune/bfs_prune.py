@@ -35,6 +35,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _make_kernel(wd: int, wb: int, with_cut: bool, with_del: bool):
@@ -128,3 +129,140 @@ def bfs_admit_plane(blin_all, blout_all, dlin_all, blin_v, blout_v, dlo_u,
         out_shape=jax.ShapeDtypeStruct((n, q), jnp.int8),
         interpret=interpret,
     )(*args)
+
+
+# ------------------------------------------------- streamed (double-buffered)
+def _make_streamed_kernel(wd: int, wb: int, with_cut: bool):
+    """Single-program admit-plane kernel streaming the VERTEX axis: the
+    query-side operands (a few (W, Q) blocks) are DMA'd into VMEM once,
+    then the big word-major vertex planes ride a two-slot HBM→VMEM pipeline
+    — chunk ``i+1``'s copy overlaps chunk ``i``'s (NB, Q) tile compute, and
+    each tile's DMA back to HBM overlaps the next compute.  The prune
+    algebra is ``_make_kernel``'s, verbatim; the cutoff comparisons are
+    pre-combined host-side into one 0/1 freshness lane (``m`` and ``d``
+    cutoffs both gate the same DL term, so one row suffices)."""
+    def kernel(bl_h, dl_h, qbl_h, qdl_h, *rest):
+        if with_cut:
+            fr_h, out_h = rest
+        else:
+            (out_h,) = rest
+        nchunks, _, _, nb = bl_h.shape
+        qb = qbl_h.shape[2]
+        n_q = 2 + (1 if with_cut else 0)
+
+        def body(bl_s, dl_s, qbl_s, qdl_s, fr_s, o_s, in_sem, q_sem,
+                 out_sem):
+            qcps = [pltpu.make_async_copy(qbl_h, qbl_s, q_sem.at[0]),
+                    pltpu.make_async_copy(qdl_h, qdl_s, q_sem.at[1])]
+            if with_cut:
+                qcps.append(pltpu.make_async_copy(fr_h, fr_s, q_sem.at[2]))
+            for c in qcps:
+                c.start()
+            for c in qcps:
+                c.wait()
+
+            def copies(ci, slot):
+                return [pltpu.make_async_copy(bl_h.at[ci], bl_s.at[slot],
+                                              in_sem.at[slot, 0]),
+                        pltpu.make_async_copy(dl_h.at[ci], dl_s.at[slot],
+                                              in_sem.at[slot, 1])]
+
+            for c in copies(0, 0):
+                c.start()
+
+            def step(ci, carry):
+                slot = jax.lax.rem(ci, 2)
+
+                @pl.when(ci + 1 < nchunks)
+                def _():
+                    for c in copies(ci + 1, 1 - slot):
+                        c.start()
+
+                for c in copies(ci, slot):
+                    c.wait()
+                blk = bl_s[slot]              # (2, wb, nb)
+                bia, boa = blk[0], blk[1]
+                dia = dl_s[slot]              # (wd, nb)
+                biv, bov = qbl_s[0], qbl_s[1]
+                dou = qdl_s[...]
+                z = jnp.uint32(0)
+                c1 = jnp.ones((nb, qb), jnp.bool_)
+                c2 = jnp.ones((nb, qb), jnp.bool_)
+                for w in range(wb):
+                    c1 &= (bia[w, :, None] & ~biv[w, None, :]) == z
+                    c2 &= (bov[w, None, :] & ~boa[w, :, None]) == z
+                d = jnp.zeros((nb, qb), jnp.bool_)
+                for w in range(wd):
+                    d |= (dou[w, None, :] & dia[w, :, None]) != z
+                if with_cut:
+                    d &= (fr_s[0] != 0)[None, :]
+
+                @pl.when(ci >= 2)
+                def _():
+                    pltpu.make_async_copy(o_s.at[slot], out_h.at[ci - 2],
+                                          out_sem.at[slot]).wait()
+                o_s[slot] = (c1 & c2 & ~d).astype(jnp.int8)
+                pltpu.make_async_copy(o_s.at[slot], out_h.at[ci],
+                                      out_sem.at[slot]).start()
+                return carry
+
+            jax.lax.fori_loop(0, nchunks, step, 0)
+            for ci in range(max(0, nchunks - 2), nchunks):
+                pltpu.make_async_copy(o_s.at[ci % 2], out_h.at[ci],
+                                      out_sem.at[ci % 2]).wait()
+
+        pl.run_scoped(body,
+                      pltpu.VMEM((2, 2, wb, nb), jnp.uint32),
+                      pltpu.VMEM((2, wd, nb), jnp.uint32),
+                      pltpu.VMEM((2, wb, qb), jnp.uint32),
+                      pltpu.VMEM((wd, qb), jnp.uint32),
+                      pltpu.VMEM((1, qb), jnp.int32),
+                      pltpu.VMEM((2, nb, qb), jnp.int8),
+                      pltpu.SemaphoreType.DMA((2, 2)),
+                      pltpu.SemaphoreType.DMA((n_q,)),
+                      pltpu.SemaphoreType.DMA((2,)))
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("n_block", "interpret"))
+def bfs_admit_plane_streamed(blin_all, blout_all, dlin_all,
+                             blin_v, blout_v, dlo_u,
+                             m_cut=None, m_total=None,
+                             d_cut=None, d_total=None,
+                             *, n_block: int = 1024,
+                             interpret: bool = True) -> jax.Array:
+    """Double-buffered variant of ``bfs_admit_plane`` — same contract,
+    bitwise-identical (n, Q) int8 plane.  The vertex axis is chunked into
+    ``n_block`` rows and streamed while the query-side operands stay
+    resident in VMEM; there is no ``q_block`` (the residue Q is already
+    chunked upstream, so one tile spans the full query width)."""
+    wb, n = blin_all.shape
+    wd = dlin_all.shape[0]
+    q = blin_v.shape[1]
+    assert n % n_block == 0, (n, n_block)
+    assert (m_cut is None) == (m_total is None), "pass m_cut and m_total together"
+    assert (d_cut is None) == (d_total is None), "pass d_cut and d_total together"
+    assert d_cut is None or m_cut is not None, \
+        "the tombstone cutoff requires the edge-count cutoff operands"
+    nchunks = n // n_block
+    bl = jnp.stack([blin_all, blout_all])
+    bl = bl.reshape(2, wb, nchunks, n_block).transpose(2, 0, 1, 3)
+    dl = dlin_all.reshape(wd, nchunks, n_block).transpose(1, 0, 2)
+    qbl = jnp.stack([blin_v, blout_v])
+    args = [bl, dl, qbl, dlo_u]
+    with_cut = m_cut is not None
+    if with_cut:
+        fresh = (m_cut.astype(jnp.int32)
+                 >= jnp.reshape(m_total, (1, 1)).astype(jnp.int32))
+        if d_cut is not None:
+            fresh &= (d_cut.astype(jnp.int32)
+                      >= jnp.reshape(d_total, (1, 1)).astype(jnp.int32))
+        args.append(fresh.astype(jnp.int32).reshape(1, q))
+    out = pl.pallas_call(
+        _make_streamed_kernel(wd, wb, with_cut),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)] * len(args),
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        out_shape=jax.ShapeDtypeStruct((nchunks, n_block, q), jnp.int8),
+        interpret=interpret,
+    )(*args)
+    return out.reshape(n, q)

@@ -8,11 +8,12 @@ import jax.numpy as jnp
 
 from repro.core.query import FRESH_CUT, PackedLabels
 from repro.kernels._pad import pad_axis as _pad_axis
-from .bfs_prune import bfs_admit_plane
+from .bfs_prune import bfs_admit_plane, bfs_admit_plane_streamed
 
 
 @functools.partial(jax.jit, static_argnames=("n_block", "q_block",
-                                             "interpret", "out_dtype"))
+                                             "interpret", "out_dtype",
+                                             "streaming"))
 def admit_plane(p: PackedLabels, u: jax.Array, v: jax.Array,
                 m_cut: jax.Array | None = None,
                 m_total: jax.Array | None = None,
@@ -20,7 +21,7 @@ def admit_plane(p: PackedLabels, u: jax.Array, v: jax.Array,
                 d_total: jax.Array | None = None,
                 *, n_block: int = 1024, q_block: int = 128,
                 interpret: bool = True,
-                out_dtype=jnp.bool_) -> jax.Array:
+                out_dtype=jnp.bool_, streaming: bool = False) -> jax.Array:
     """Returns (n_cap, Qc) ``out_dtype`` admit plane for the pruned-BFS
     lanes (``jnp.int8`` hands the kernel's narrow plane through without a
     widening cast; ``pruned_bfs`` re-binarizes admit planes of any dtype).
@@ -30,6 +31,9 @@ def admit_plane(p: PackedLabels, u: jax.Array, v: jax.Array,
     Optional ``d_cut`` (Qc,) int32 / ``d_total`` scalar: per-lane tombstone
     cutoffs (deletion-stale lanes lose the DL prune too; requires m_cut).
     Padding lanes get fresh cutoffs so they keep the default plane.
+    ``streaming=True`` routes to the double-buffered grid-free kernel
+    (explicit HBM→VMEM copy pipeline over the vertex axis; ``q_block``
+    only pads the query axis there — the tile spans the full width).
     """
     n = p.bl_in.shape[0]
     q = u.shape[0]
@@ -48,8 +52,14 @@ def admit_plane(p: PackedLabels, u: jax.Array, v: jax.Array,
         dcut = _pad_axis(jnp.reshape(d_cut.astype(jnp.int32), (1, q)),
                          q_block, 1, value=FRESH_CUT)
         dtot = jnp.reshape(jnp.asarray(d_total, jnp.int32), (1, 1))
-    out = bfs_admit_plane(blin_all, blout_all, dlin_all,
-                          blin_v, blout_v, dlo_u, cut, tot, dcut, dtot,
-                          n_block=n_block, q_block=q_block,
-                          interpret=interpret)
+    if streaming:
+        out = bfs_admit_plane_streamed(blin_all, blout_all, dlin_all,
+                                       blin_v, blout_v, dlo_u,
+                                       cut, tot, dcut, dtot,
+                                       n_block=n_block, interpret=interpret)
+    else:
+        out = bfs_admit_plane(blin_all, blout_all, dlin_all,
+                              blin_v, blout_v, dlo_u, cut, tot, dcut, dtot,
+                              n_block=n_block, q_block=q_block,
+                              interpret=interpret)
     return out[:n, :q].astype(out_dtype)

@@ -29,6 +29,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _make_kernel(with_cut: bool, with_del: bool):
@@ -138,3 +139,150 @@ def dbl_query_verdicts(dlo_u, dli_v, dlo_v, dli_u,
         out_shape=jax.ShapeDtypeStruct((q,), jnp.int32),
         interpret=interpret,
     )(*args)
+
+
+# ------------------------------------------------- streamed (double-buffered)
+def _make_streamed_kernel(ncut: int):
+    """Single-program kernel: all operands live in HBM (``pltpu.ANY``) and
+    are streamed through a two-slot VMEM scratch by explicit async copies —
+    while chunk ``i`` computes, chunk ``i+1``'s HBM→VMEM DMA is in flight,
+    and chunk ``i``'s verdict DMA back to HBM overlaps the next compute
+    (its semaphore is only awaited when the slot comes around again).
+
+    ``ncut`` is the number of pre-combined freshness rows riding along
+    (0 = no cutoffs, 1 = edge-count, 2 = edge-count + tombstone); the
+    comparisons against ``m_total``/``d_total`` happen host-side so the
+    kernel sees plain 0/1 lanes — the verdict algebra itself is copied
+    verbatim from ``_make_kernel`` for bitwise parity."""
+    def kernel(dl_h, bl_h, sm_h, *rest):
+        if ncut:
+            cut_h, out_h = rest
+        else:
+            (out_h,) = rest
+        nchunks, _, wd, qb = dl_h.shape
+        wb = bl_h.shape[2]
+        n_in = 3 + (1 if ncut else 0)
+
+        def body(dl_s, bl_s, sm_s, ct_s, o_s, in_sem, out_sem):
+            def copies(ci, slot):
+                cps = [pltpu.make_async_copy(dl_h.at[ci], dl_s.at[slot],
+                                             in_sem.at[slot, 0]),
+                       pltpu.make_async_copy(bl_h.at[ci], bl_s.at[slot],
+                                             in_sem.at[slot, 1]),
+                       pltpu.make_async_copy(sm_h.at[ci], sm_s.at[slot],
+                                             in_sem.at[slot, 2])]
+                if ncut:
+                    cps.append(pltpu.make_async_copy(
+                        cut_h.at[ci], ct_s.at[slot], in_sem.at[slot, 3]))
+                return cps
+
+            for c in copies(0, 0):
+                c.start()
+
+            def step(ci, carry):
+                slot = jax.lax.rem(ci, 2)
+
+                @pl.when(ci + 1 < nchunks)
+                def _():
+                    for c in copies(ci + 1, 1 - slot):
+                        c.start()
+
+                for c in copies(ci, slot):
+                    c.wait()
+                dl = dl_s[slot]          # (4, wd, qb): dlo_u dli_v dlo_v dli_u
+                bl = bl_s[slot]          # (4, wb, qb): bi_u bi_v bo_u bo_v
+                z = jnp.uint32(0)
+                pos_lbl = jnp.any((dl[0] & dl[1]) != z, axis=0)
+                is_same = sm_s[slot] != 0
+                pos = pos_lbl | is_same
+                bl_neg = (jnp.any((bl[0] & ~bl[1]) != z, axis=0)
+                          | jnp.any((bl[3] & ~bl[2]) != z, axis=0))
+                thm1 = jnp.any((dl[2] & dl[3]) != z, axis=0)
+                thm2 = (jnp.any((dl[0] & dl[3]) != z, axis=0)
+                        | jnp.any((dl[2] & dl[1]) != z, axis=0))
+                neg = ~pos & (bl_neg | thm1 | thm2)
+                if ncut:
+                    fresh = ct_s[slot][0] != 0
+                    if ncut == 2:
+                        d_fresh = ct_s[slot][1] != 0
+                        pos = (pos_lbl & fresh & d_fresh) | is_same
+                        neg = jnp.where(d_fresh, neg, ~is_same & bl_neg)
+                    else:
+                        pos = (pos_lbl & fresh) | is_same
+
+                # the slot's previous verdict DMA (chunk ci-2) must have
+                # landed before its buffer is overwritten
+                @pl.when(ci >= 2)
+                def _():
+                    pltpu.make_async_copy(o_s.at[slot], out_h.at[ci - 2],
+                                          out_sem.at[slot]).wait()
+                o_s[slot] = jnp.where(pos, jnp.int32(1),
+                                      jnp.where(neg, jnp.int32(0),
+                                                jnp.int32(-1)))
+                pltpu.make_async_copy(o_s.at[slot], out_h.at[ci],
+                                      out_sem.at[slot]).start()
+                return carry
+
+            jax.lax.fori_loop(0, nchunks, step, 0)
+            for ci in range(max(0, nchunks - 2), nchunks):
+                pltpu.make_async_copy(o_s.at[ci % 2], out_h.at[ci],
+                                      out_sem.at[ci % 2]).wait()
+
+        pl.run_scoped(body,
+                      pltpu.VMEM((2, 4, wd, qb), jnp.uint32),
+                      pltpu.VMEM((2, 4, wb, qb), jnp.uint32),
+                      pltpu.VMEM((2, qb), jnp.int32),
+                      pltpu.VMEM((2, max(ncut, 1), qb), jnp.int32),
+                      pltpu.VMEM((2, qb), jnp.int32),
+                      pltpu.SemaphoreType.DMA((2, n_in)),
+                      pltpu.SemaphoreType.DMA((2,)))
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("q_block", "interpret"))
+def dbl_query_verdicts_streamed(dlo_u, dli_v, dlo_v, dli_u,
+                                blin_u, blin_v, blout_u, blout_v, same,
+                                m_cut=None, m_total=None,
+                                d_cut=None, d_total=None,
+                                *, q_block: int = 512,
+                                interpret: bool = True):
+    """Double-buffered variant of ``dbl_query_verdicts`` — same contract,
+    bitwise-identical output.  The query axis is chunked into ``q_block``
+    columns and the (4, W, QB) label stacks are streamed HBM→VMEM with the
+    next chunk's copy overlapping the current chunk's verdict compute (the
+    grid-free ``pltpu.ANY`` + ``make_async_copy`` pipeline).  The cutoff
+    comparisons are hoisted to XLA: the kernel receives pre-combined 0/1
+    freshness lanes instead of (cut, total) pairs."""
+    wd = dlo_u.shape[0]
+    wb = blin_u.shape[0]
+    q = dlo_u.shape[1]
+    assert q % q_block == 0, (q, q_block)
+    assert (m_cut is None) == (m_total is None), "pass m_cut and m_total together"
+    assert (d_cut is None) == (d_total is None), "pass d_cut and d_total together"
+    assert d_cut is None or m_cut is not None, \
+        "the tombstone cutoff requires the edge-count cutoff operands"
+    nchunks = q // q_block
+    dl = jnp.stack([dlo_u, dli_v, dlo_v, dli_u])
+    bl = jnp.stack([blin_u, blin_v, blout_u, blout_v])
+    dl = dl.reshape(4, wd, nchunks, q_block).transpose(2, 0, 1, 3)
+    bl = bl.reshape(4, wb, nchunks, q_block).transpose(2, 0, 1, 3)
+    sm = same.astype(jnp.int32).reshape(nchunks, q_block)
+    args = [dl, bl, sm]
+    ncut = 0
+    if m_cut is not None:
+        mt = jnp.reshape(m_total, (1,)).astype(jnp.int32)
+        rows = [(m_cut.astype(jnp.int32) >= mt[0]).astype(jnp.int32)]
+        if d_cut is not None:
+            dt = jnp.reshape(d_total, (1,)).astype(jnp.int32)
+            rows.append((d_cut.astype(jnp.int32) >= dt[0]).astype(jnp.int32))
+        ncut = len(rows)
+        cut = jnp.stack(rows).reshape(ncut, nchunks, q_block)
+        args.append(cut.transpose(1, 0, 2))
+    out = pl.pallas_call(
+        _make_streamed_kernel(ncut),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)] * len(args),
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        out_shape=jax.ShapeDtypeStruct((nchunks, q_block), jnp.int32),
+        interpret=interpret,
+    )(*args)
+    return out.reshape(q)

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 
 from repro.core.query import FRESH_CUT, PackedLabels
 from repro.kernels._pad import pad_axis as _pad_to
-from .dbl_query import dbl_query_verdicts
+from .dbl_query import dbl_query_verdicts, dbl_query_verdicts_streamed
 
 
 def verdicts_device(p: PackedLabels, u: jax.Array, v: jax.Array,
@@ -21,7 +21,8 @@ def verdicts_device(p: PackedLabels, u: jax.Array, v: jax.Array,
                     d_cut: jax.Array | None = None,
                     d_total: jax.Array | None = None,
                     *, q_block: int = 512, interpret: bool = True,
-                    out_dtype=jnp.int32) -> jax.Array:
+                    out_dtype=jnp.int32, streaming: bool = False
+                    ) -> jax.Array:
     """Traceable (un-jitted) body of ``query_verdicts`` so larger programs —
     the QueryEngine's fused label phase — can inline it into one executable.
 
@@ -31,7 +32,9 @@ def verdicts_device(p: PackedLabels, u: jax.Array, v: jax.Array,
     (deletion-stale labels keep only self-positives and BL negatives).
     Padding lanes are marked fresh on both so they never ride a BFS.
     ``out_dtype=jnp.int8`` emits the engine's narrow verdict lane directly
-    (values identical to the int32 path)."""
+    (values identical to the int32 path).  ``streaming=True`` routes to the
+    double-buffered grid-free kernel (explicit HBM→VMEM copy pipeline,
+    bitwise-identical verdicts)."""
     q = u.shape[0]
     streams = [p.dl_out[u], p.dl_in[v], p.dl_out[v], p.dl_in[u],
                p.bl_in[u], p.bl_in[v], p.bl_out[v], p.bl_out[u]]
@@ -48,15 +51,19 @@ def verdicts_device(p: PackedLabels, u: jax.Array, v: jax.Array,
     # note arg order: kernel wants (dlo_u, dli_v, dlo_v, dli_u,
     #                               blin_u, blin_v, blout_u, blout_v)
     dlo_u, dli_v, dlo_v, dli_u, blin_u, blin_v, blout_v, blout_u = streams
-    out = dbl_query_verdicts(dlo_u, dli_v, dlo_v, dli_u,
-                             blin_u, blin_v, blout_u, blout_v, same,
-                             cut, tot, dcut, dtot,
-                             q_block=q_block, interpret=interpret)
+    fn = dbl_query_verdicts_streamed if streaming else dbl_query_verdicts
+    out = fn(dlo_u, dli_v, dlo_v, dli_u,
+             blin_u, blin_v, blout_u, blout_v, same,
+             cut, tot, dcut, dtot,
+             q_block=q_block, interpret=interpret)
     return out[:q].astype(out_dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("q_block", "interpret"))
+@functools.partial(jax.jit, static_argnames=("q_block", "interpret",
+                                             "streaming"))
 def query_verdicts(p: PackedLabels, u: jax.Array, v: jax.Array,
-                   *, q_block: int = 512, interpret: bool = True) -> jax.Array:
+                   *, q_block: int = 512, interpret: bool = True,
+                   streaming: bool = False) -> jax.Array:
     """(Q,) int32 verdicts; same contract as core.query.label_verdicts."""
-    return verdicts_device(p, u, v, q_block=q_block, interpret=interpret)
+    return verdicts_device(p, u, v, q_block=q_block, interpret=interpret,
+                           streaming=streaming)

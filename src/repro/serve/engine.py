@@ -95,6 +95,7 @@ import numpy as np
 from repro.core import planes as PL
 from repro.core import query as Q
 from repro.core import update as U
+from repro.core.propagate import check_plane_repr
 from repro.core.dbl import (DBLIndex, LabelSaturationWarning,
                             _saturation_message)
 from repro.kernels.dbl_query.ops import verdicts_device
@@ -223,6 +224,8 @@ class QueryEngine:
                  donate: str | bool = "auto",
                  consistency: str = "as-of-submit",
                  frontier_dtype: str = "int8",
+                 out_dtype: str = "int8",
+                 plane_repr: str = "bool",
                  flush_policy: str | None = None,
                  flush_deadline_ms: float = 25.0,
                  flush_watermark: int = 256):
@@ -236,6 +239,15 @@ class QueryEngine:
         if frontier_dtype not in Q.FRONTIER_DTYPES:
             raise ValueError(f"unknown frontier dtype {frontier_dtype!r}; "
                              f"expected one of {list(Q.FRONTIER_DTYPES)}")
+        if frontier_dtype == "packed" and vertex_mesh is not None:
+            raise ValueError(
+                "frontier_dtype='packed' packs the query-lane axis of the "
+                "replicated BFS only; the vertex-sharded residue keeps its "
+                "per-lane frontier planes (use 'int8'/'int32')")
+        if out_dtype not in ("int8", "int32"):
+            raise ValueError(f"unknown verdict out dtype {out_dtype!r}; "
+                             "expected 'int8' or 'int32'")
+        check_plane_repr(plane_repr)
         if flush_policy not in FLUSH_POLICIES:
             raise ValueError(f"unknown flush policy {flush_policy!r}; "
                              f"expected one of {FLUSH_POLICIES}")
@@ -251,6 +263,8 @@ class QueryEngine:
         self.layout = "vertex_sharded" if vertex_mesh is not None \
             else "replicated"
         self.frontier_dtype = frontier_dtype
+        self.out_dtype = out_dtype
+        self.plane_repr = plane_repr
         self.bfs_kernel = bool(bfs_kernel)
         self.consistency = select_consistency(consistency)
         self.flush_policy = flush_policy
@@ -351,6 +365,10 @@ class QueryEngine:
         use_bfs_kernel = self.bfs_kernel
         vertex_mesh = self.vertex_mesh
         frontier_dtype = self.frontier_dtype
+        plane_repr = self.plane_repr
+        # the verdict kernel's store dtype is a baked knob (AOT-keyed):
+        # int8 is the lean default, int32 matches accumulator-width stores
+        out_dtype = jnp.int8 if self.out_dtype == "int8" else jnp.int32
 
         def _d_cut_vec(d_stale, shape):
             """Per-lane tombstone-cutoff operand from a traced dirty scalar:
@@ -386,7 +404,7 @@ class QueryEngine:
                     jnp.full(u.shape, Q.FRESH_CUT, jnp.int32), jnp.int32(0),
                     _d_cut_vec(d_stale, u.shape), jnp.int32(1),
                     q_block=q_block, interpret=interpret,
-                    out_dtype=jnp.int8)
+                    out_dtype=out_dtype)
             else:
                 verd = Q.cut_verdicts(p, u, v, jnp.int32(1), jnp.int32(0),
                                       ~d_stale)
@@ -440,7 +458,7 @@ class QueryEngine:
                         p, uu_safe, vv, m_cut, g.m,
                         _d_cut_vec(d_stale, uu.shape), jnp.int32(1),
                         q_block=min(q_block, chunk),
-                        interpret=interpret, out_dtype=jnp.int8)
+                        interpret=interpret, out_dtype=out_dtype)
                 else:
                     verd = Q.cut_verdicts(p, uu_safe, vv, m_cut, g.m,
                                           ~d_stale)
@@ -463,7 +481,8 @@ class QueryEngine:
 
         def make_coalesced_sharded(chunk: int):
             def coalesced(g, p: Q.PackedLabels, uu, vv, m_cut, d_stale,
-                          e_slot, e_recv, e_gid, e_valid, h_send, h_valid):
+                          e_slot, e_recv, e_gid, e_valid, h_send, h_valid,
+                          e_start, e_tail):
                 """Sharded twin of the coalesced phase: the re-check reads
                 psum-reconstructed row blocks, the residue BFS runs on
                 row-partitioned frontier/admit planes with per-round
@@ -484,7 +503,7 @@ class QueryEngine:
                 plan = PL.ShardPlan(
                     vertex_mesh, n_cap, 0,
                     PL._DirPlan(e_slot, e_recv, e_gid, e_valid, h_send,
-                                h_valid), None)
+                                h_valid, e_start, e_tail), None)
                 hit = PL.sharded_pruned_bfs(
                     plan, p, rows, uu2, vv, edge_mask(g), m_cut, g.m,
                     ~d_stale, max_iters=max_iters,
@@ -515,7 +534,7 @@ class QueryEngine:
             n_cap = dl_in.shape[0]
             g2, a, b, c, d, iters, epoch2 = U.insert_and_update(
                 g, dl_in, dl_out, bl_in, bl_out, ns, nd, epoch,
-                n_cap=n_cap, max_iters=max_iters)
+                n_cap=n_cap, max_iters=max_iters, plane_repr=plane_repr)
             sat = U.saturated(iters, max_iters)
             return g2, a, b, c, d, Q.pack_labels(a, b, c, d), epoch2, sat
 
@@ -534,7 +553,7 @@ class QueryEngine:
             return ()
         dp = self._plan.fwd
         return (dp.e_slot, dp.e_recv, dp.e_gid, dp.e_valid, dp.h_send,
-                dp.h_valid)
+                dp.h_valid, dp.e_start, dp.e_tail)
 
     def _chunk_buckets(self):
         sizes, c = [], 16
@@ -788,7 +807,7 @@ class QueryEngine:
             # tables — the label planes stay put on their shards)
             idx2, self._plan, sat = D.insert_vertex_sharded(
                 idx, self._plan, ns, nd, max_iters=self.max_iters,
-                check="defer")
+                check="defer", plane_repr=self.plane_repr)
             self._index = idx2._replace(epoch=jnp.int32(self.epoch + 1))
         else:
             g2, a, b, c, d, packed, epoch2, sat = self._insert_fn(
@@ -849,6 +868,7 @@ class QueryEngine:
         if self._index is None:
             raise ValueError("engine has no bound index; use run()")
         build_kw.setdefault("max_iters", self.max_iters)
+        build_kw.setdefault("plane_repr", self.plane_repr)
         if self.vertex_mesh is not None:
             from repro.core import distributed as D
             new_idx, plan, info = D.rebuild_vertex_sharded(
@@ -900,7 +920,9 @@ class QueryEngine:
         # truncating BFS lanes into false negatives)
         config = {"max_iters": self.max_iters, "q_block": self.q_block,
                   "bfs_chunk": self.bfs_chunk, "bfs_kernel": self.bfs_kernel,
-                  "frontier_dtype": self.frontier_dtype}
+                  "frontier_dtype": self.frontier_dtype,
+                  "out_dtype": self.out_dtype,
+                  "plane_repr": self.plane_repr}
         if not isinstance(self._label_phase, ShapeDispatcher):
             self._label_phase = ShapeDispatcher(self._label_phase)
         n_cap = index.packed.dl_in.shape[0]

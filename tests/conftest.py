@@ -29,3 +29,20 @@ def random_graph(rng, n_max=24, m_max=80):
     src = rng.integers(0, n, size=m).astype(np.int32)
     dst = rng.integers(0, n, size=m).astype(np.int32)
     return n, src, dst
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _fresh_jax_caches():
+    """Reset jax's in-process executable caches between test modules.
+
+    The full suite accumulates hundreds of compiled programs in one
+    process; on some CPU toolchains that state makes a later
+    backend_compile crash (reproducible: test_dbl_core + test_deletions
+    in one process segfault where each file alone passes).  Module-scoped
+    cache resets keep every file compiling from the same state it sees
+    standalone, at the cost of some recompilation.
+    """
+    import jax
+
+    jax.clear_caches()
+    yield

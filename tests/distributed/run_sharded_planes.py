@@ -224,12 +224,102 @@ def verdict_path_hlo_is_all_gather_free():
     print("verdict-path HLO all-gather-free OK")
 
 
+def degenerate_halo_or_noop():
+    """shard_plan on a graph with ZERO cut edges (every edge shard-local)
+    must fabricate the dummy halo row — H rounds up to the halo granule,
+    h_valid is all-False — and the halo fixpoint's all_to_all of that row
+    must be an OR no-op: the sharded result (bool AND packed) matches the
+    replicated fixpoint bitwise.  Same check for the fully-degenerate
+    empty-edge plan (PR-7 satellite: degenerate extents)."""
+    from repro.core import graph as G
+    from repro.core import propagate as P
+    n = 64
+    mesh = D.vertex_mesh(4)
+    # all edges inside shard 0's row range [0, 16): no cross-shard traffic
+    rng = np.random.default_rng(12)
+    src = rng.integers(0, 16, 80).astype(np.int32)
+    dst = rng.integers(0, 16, 80).astype(np.int32)
+    for m_used, what in ((len(src), "local-only"), (0, "empty")):
+        g = make_graph(src[:m_used], dst[:m_used], n, m_cap=128)
+        plan = PL.shard_plan(g.src, g.dst, m_used, n, mesh)
+        for dp in (plan.fwd, plan.bwd):
+            assert int(np.asarray(dp.h_valid).sum()) == 0, \
+                f"{what}: fabricated halo row claims validity"
+            assert dp.h_send.shape[2] == 64, \
+                f"{what}: H not rounded to halo granule: {dp.h_send.shape}"
+            # the recv-sorted bucket padding must carry the n_loc sentinel
+            # (dropped by both the bool segment-max and the packed tail
+            # scatter), never a real row id
+            pads = np.asarray(dp.e_recv)[~np.asarray(dp.e_valid)]
+            assert (pads == n // 4).all(), f"{what}: pad sentinel wrong"
+        live = G.edge_mask(g)
+        k = 20                                   # non-x32: pad-bit sweep
+        seeds = np.arange(min(k, 16), dtype=np.int32)
+        plane = jnp.zeros((n, k), jnp.uint8).at[
+            jnp.asarray(seeds), jnp.arange(len(seeds)) % k].set(1)
+        frontier = jnp.zeros((n,), jnp.bool_).at[jnp.asarray(seeds)].set(True)
+        want, it_want = P.propagate(plane, g.src, g.dst, live, frontier,
+                                    n_cap=n, max_iters=32)
+        xs = jax.device_put(plane, D.vertex_index_shardings(mesh).dl_in)
+        for repr_ in ("bool", "packed"):
+            got, it_got = PL.halo_propagate(plan, xs, frontier, live,
+                                            max_iters=32, plane_repr=repr_)
+            assert (np.asarray(got) == np.asarray(want)).all(), \
+                f"{what}/{repr_}: degenerate halo changed the fixpoint"
+            assert int(it_got) == int(it_want), (what, repr_)
+    print("degenerate halo OR no-op OK")
+
+
+def packed_sharded_parity():
+    """The packed word-plane halo fixpoint serves the WHOLE vertex-sharded
+    lifecycle — build, insert stream, delete, delta rebuild — bitwise equal
+    to the replicated bool oracle (k = k' = 16: packed halo rows are one
+    word per row, 32x less boundary traffic than the bool plane rows)."""
+    n, m = 256, 1400
+    src, dst = power_law(n, m, seed=6)
+    g = make_graph(src, dst, n, m_cap=m + 512)
+    mesh = D.vertex_mesh(4)
+    ref = DBLIndex.build(g, n_cap=n, **K)
+    idx, plan = D.build_vertex_sharded(g, mesh, n_cap=n,
+                                       plane_repr="packed", **K)
+    assert_index_eq(ref, idx, "packed build")
+    rng = np.random.default_rng(2)
+    for r in range(2):
+        ns = rng.integers(0, n, 32).astype(np.int32)
+        nd = rng.integers(0, n, 32).astype(np.int32)
+        ref = ref.insert_edges(ns, nd, max_iters=64)
+        idx, plan, _ = D.insert_vertex_sharded(idx, plan, ns, nd,
+                                               max_iters=64,
+                                               plane_repr="packed")
+        assert_index_eq(ref, idx, f"packed insert round {r}")
+    ds, dd = src[5:45], dst[5:45]
+    ref = ref.delete_edges(ds, dd)
+    idx = idx.delete_edges(ds, dd)
+    refd = ref.rebuild(mode="delta", max_iters=64)
+    idxd, _, info = D.rebuild_vertex_sharded(idx, plan, mode="delta",
+                                             max_iters=64,
+                                             plane_repr="packed")
+    assert info["mode"] == "delta", info
+    assert_index_eq(refd, idxd, "packed delta rebuild")
+    # engine serving on the packed-maintained sharded index
+    eng = QueryEngine(idxd, bfs_chunk=64, max_iters=64, vertex_mesh=mesh,
+                      plane_repr="packed")
+    u = rng.integers(0, n, 300).astype(np.int32)
+    v = rng.integers(0, n, 300).astype(np.int32)
+    a = refd.query(u, v, bfs_chunk=64, max_iters=64, driver="host")
+    assert (np.asarray(a) == eng.query(u, v)).all(), \
+        "packed sharded engine query diverged"
+    print("packed sharded lifecycle parity OK")
+
+
 def main():
     assert len(jax.devices()) == 4, jax.devices()
     lifecycle_differential()
     scc_merge_split_cascade()
     engine_stream_and_budget()
     verdict_path_hlo_is_all_gather_free()
+    degenerate_halo_or_noop()
+    packed_sharded_parity()
     print("SHARDED_PLANES_OK")
 
 

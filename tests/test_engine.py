@@ -482,3 +482,108 @@ def test_aot_rejects_meshed_layouts(tmp_path):
                       vertex_mesh=vertex_mesh(1))
     with pytest.raises(ValueError):
         eng.aot_warmup(eng.index, tmp_path)
+
+
+# ------------------------------- AOT cache-key completeness (PR 7)
+def test_aot_cache_key_includes_every_baked_knob(tmp_path):
+    """Flipping any executable-baked engine knob must MISS the cache — a
+    hit under different knobs would silently serve the old semantics
+    (e.g. a stale frontier_dtype changing the BFS lane layout).  This
+    regression-pins the config blob: frontier_dtype / out_dtype /
+    plane_repr / bfs_kernel / max_iters all key the entries."""
+    idx, _, _ = _power_law_index(n=64, m=160, m_extra=8, max_iters=40)
+    base_kw = dict(bfs_chunk=32, max_iters=40)
+    e1 = QueryEngine(idx, **base_kw)
+    e1.aot_warmup(idx, tmp_path)
+    assert e1.aot_cache.stores > 0
+    for flip in (dict(frontier_dtype="int32"),
+                 dict(out_dtype="int32"),
+                 dict(plane_repr="packed"),
+                 dict(bfs_kernel=True),
+                 dict(max_iters=48)):
+        e2 = QueryEngine(idx, **{**base_kw, **flip})
+        e2.aot_warmup(idx, tmp_path)
+        assert e2.aot_cache.hits == 0, f"stale AOT hit under {flip}"
+        assert e2.aot_cache.stores > 0, flip
+    # sanity: unchanged knobs still hit
+    e3 = QueryEngine(idx, **base_kw)
+    e3.aot_warmup(idx, tmp_path)
+    assert e3.aot_cache.stores == 0 and e3.aot_cache.hits > 0
+
+
+# ------------------------------------ empty-index serving paths (PR 7)
+def _empty_index(n=32, m_cap=64):
+    g = make_graph(np.zeros(0, np.int32), np.zeros(0, np.int32), n,
+                   m_cap=m_cap)
+    return DBLIndex.build(g, n_cap=n, k=4, k_prime=4, max_iters=16)
+
+
+def test_engine_empty_index_submit_flush_poll():
+    """An engine bound to an index with zero edges must serve the whole
+    submit/flush/poll surface without dispatching a BFS or dividing by
+    zero: only self-queries are reachable."""
+    idx = _empty_index()
+    eng = QueryEngine(idx, bfs_chunk=16, max_iters=16)
+    assert eng._m_now == 0
+    u = np.array([0, 3, 7, 7], np.int32)
+    v = np.array([0, 4, 7, 2], np.int32)
+    pend = eng.submit(idx, u, v)
+    assert not eng.maybe_flush()          # no policy => no-op, no dispatch
+    (ans,) = eng.flush([pend])
+    np.testing.assert_array_equal(ans, u == v)
+    assert eng.stats.bfs_dispatches == 0  # labels answer everything
+    # run() on an empty batch against the empty index
+    out, st_ = eng.run(idx, np.zeros(0, np.int32), np.zeros(0, np.int32),
+                       return_stats=True)
+    assert out.shape == (0,) and st_["rho"] == 1.0
+
+
+def test_engine_empty_index_policies_and_mutation():
+    """Deadline/watermark policies on an engine with an empty pipeline and
+    an empty index: flush_due()/maybe_flush() are no-ops (no division by
+    zero on the empty residue), and the first insert starts serving."""
+    for policy, kw in (("deadline", dict(flush_deadline_ms=5.0)),
+                       ("watermark", dict(flush_watermark=4))):
+        idx = _empty_index()
+        eng = QueryEngine(idx, bfs_chunk=16, max_iters=16,
+                          flush_policy=policy, **kw)
+        t = [0.0]
+        eng._clock = lambda: t[0]
+        assert not eng.flush_due()        # empty pipeline: nothing due
+        assert not eng.maybe_flush()
+        t[0] = 1.0                        # way past any deadline
+        assert not eng.flush_due()        # still nothing in flight
+        u = np.array([1, 2], np.int32)
+        pend = eng.submit(idx, u, u + 1)  # unreachable: rides the pipeline
+        t[0] = 2.0
+        eng.maybe_flush()                 # deadline fires on a poll; the
+        pend.resolve()                    # watermark one resolves lazily
+        np.testing.assert_array_equal(pend.resolve(), [False, False])
+        # first insert on the empty index, then a reachable query
+        eng.insert(np.array([1], np.int32), np.array([2], np.int32))
+        np.testing.assert_array_equal(
+            eng.query(np.array([1], np.int32), np.array([2], np.int32)),
+            [True])
+        # delete back to empty-live and rebuild: still serving
+        eng.delete(np.array([1], np.int32), np.array([2], np.int32))
+        eng.rebuild(mode="full", max_iters=16)
+        np.testing.assert_array_equal(
+            eng.query(np.array([1], np.int32), np.array([2], np.int32)),
+            [False])
+
+
+def test_engine_empty_index_packed_parity():
+    """The packed plane_repr serves the empty index too (the fixpoint's
+    zero-live-edge round must not fabricate bits)."""
+    idx_b = _empty_index()
+    g = idx_b.graph
+    idx_p = DBLIndex.build(g, n_cap=32, k=4, k_prime=4, max_iters=16,
+                           plane_repr="packed")
+    for f in ("dl_in", "dl_out", "bl_in", "bl_out"):
+        np.testing.assert_array_equal(np.asarray(getattr(idx_b, f)),
+                                      np.asarray(getattr(idx_p, f)))
+    eng = QueryEngine(idx_p, bfs_chunk=16, max_iters=16,
+                      plane_repr="packed", frontier_dtype="packed")
+    u = np.array([0, 5, 9], np.int32)
+    np.testing.assert_array_equal(eng.query(u, u), [True] * 3)
+    np.testing.assert_array_equal(eng.query(u, u + 1), [False] * 3)

@@ -500,3 +500,127 @@ def test_admit_plane_ops_int8_and_bfs_consumption():
                              max_iters=48)
     np.testing.assert_array_equal(np.asarray(hits_bool),
                                   np.asarray(hits_int8))
+
+
+# ------------------------------- packed query-lane frontier (PR 7)
+@given(st.integers(0, 2**31 - 1), st.sampled_from((1, 7, 31, 32, 33, 64, 100)),
+       st.booleans(), st.booleans())
+@settings(max_examples=15, deadline=None)
+def test_pruned_bfs_packed_frontier_parity(seed, q, with_cut, dirty):
+    """pruned_bfs with the query-lane axis bit-packed into uint32 words
+    (32 lanes/byte-plane-row) == the int32 wide path, bitwise, across
+    random graphs, per-lane cutoffs, the dirty gate, and lane counts that
+    are NOT multiples of 32 (the pad-bit hygiene sweep)."""
+    rng = np.random.default_rng(seed)
+    n = 48
+    src = rng.integers(0, n, 220).astype(np.int32)
+    dst = rng.integers(0, n, 220).astype(np.int32)
+    g = make_graph(src, dst, n, m_cap=256)
+    idx = DBLIndex.build(g, n_cap=n, k=8, k_prime=8, max_iters=48)
+    u = jnp.asarray(rng.integers(0, n, q).astype(np.int32))
+    v = jnp.asarray(rng.integers(0, n, q).astype(np.int32))
+    m_cut = None
+    if with_cut:
+        m_cut = jnp.asarray(
+            rng.integers(0, int(g.m) + 1, q).astype(np.int32))
+    dl_clean = jnp.asarray(not dirty)
+    kw = dict(m_cut=m_cut, dl_clean=dl_clean, n_cap=n, max_iters=48)
+    packed = Q.pruned_bfs(g, idx.packed, u, v, None,
+                          frontier_dtype="packed", **kw)
+    wide = Q.pruned_bfs(g, idx.packed, u, v, None,
+                        frontier_dtype="int32", **kw)
+    np.testing.assert_array_equal(np.asarray(packed), np.asarray(wide))
+
+
+def test_pruned_bfs_packed_dead_lanes_and_admit():
+    """Packed frontier with out-of-range (dead) sources and an explicit
+    admit plane — both must match the int32 path bitwise."""
+    rng = np.random.default_rng(11)
+    n = 40
+    g = make_graph(rng.integers(0, n, 160).astype(np.int32),
+                   rng.integers(0, n, 160).astype(np.int32), n, m_cap=192)
+    idx = DBLIndex.build(g, n_cap=n, k=8, k_prime=8, max_iters=32)
+    q = 33
+    u = rng.integers(0, n, q).astype(np.int32)
+    u[::5] = n                      # dead lanes: out-of-range source
+    u = jnp.asarray(u)
+    v = jnp.asarray(rng.integers(0, n, q).astype(np.int32))
+    admit = jnp.asarray(rng.random((n, q)) < 0.8)
+    for adm in (None, admit):
+        a = Q.pruned_bfs(g, idx.packed, u, v, adm, n_cap=n, max_iters=32,
+                         frontier_dtype="packed")
+        b = Q.pruned_bfs(g, idx.packed, u, v, adm, n_cap=n, max_iters=32,
+                         frontier_dtype="int32")
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------- streamed (double-buffered) kernel variants
+@given(st.integers(0, 2**31 - 1), st.integers(1, 3), st.integers(1, 3),
+       st.sampled_from(_ODD_QS), st.sampled_from((128, 256)),
+       st.sampled_from((0, 1, 2)))
+@settings(max_examples=15, deadline=None)
+def test_dbl_query_streamed_parity(seed, wd, wb, q, q_block, ncut):
+    """The double-buffered DMA-pipelined verdict kernel == the grid kernel,
+    bitwise, across shapes, q_block chunkings, and cutoff arities."""
+    rng = np.random.default_rng(seed)
+    n = 50
+    p = _rand_packed_labels(rng, n, wd, wb)
+    u = jnp.asarray(rng.integers(0, n, q).astype(np.int32))
+    v = jnp.asarray(rng.integers(0, n, q).astype(np.int32))
+    from repro.kernels.dbl_query.ops import verdicts_device
+    kw = {}
+    if ncut >= 1:
+        kw["m_cut"] = jnp.asarray(rng.integers(0, 9, q).astype(np.int32))
+        kw["m_total"] = jnp.int32(4)
+    if ncut == 2:
+        kw["d_cut"] = jnp.asarray(rng.integers(0, 3, q).astype(np.int32))
+        kw["d_total"] = jnp.int32(1)
+    grid = verdicts_device(p, u, v, q_block=q_block, interpret=True, **kw)
+    dma = verdicts_device(p, u, v, q_block=q_block, interpret=True,
+                          streaming=True, **kw)
+    np.testing.assert_array_equal(np.asarray(grid), np.asarray(dma))
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 3), st.integers(1, 3),
+       st.sampled_from((3, 37, 100, 130, 250)),
+       st.sampled_from((5, 33, 100, 129)), st.sampled_from((0, 1, 2)))
+@settings(max_examples=10, deadline=None)
+def test_bfs_prune_streamed_parity(seed, wd, wb, n, q, ncut):
+    """The double-buffered vertex-axis-streaming admit kernel == the grid
+    kernel, bitwise, on awkward n/Q and every cutoff arity."""
+    rng = np.random.default_rng(seed)
+    p = _rand_packed_labels(rng, max(n, 4), wd, wb)
+    u = jnp.asarray(rng.integers(0, max(n, 4), q).astype(np.int32))
+    v = jnp.asarray(rng.integers(0, max(n, 4), q).astype(np.int32))
+    kw = {}
+    if ncut >= 1:
+        kw["m_cut"] = jnp.asarray(rng.integers(0, 9, q).astype(np.int32))
+        kw["m_total"] = jnp.int32(4)
+    if ncut == 2:
+        kw["d_cut"] = jnp.asarray(rng.integers(0, 3, q).astype(np.int32))
+        kw["d_total"] = jnp.int32(1)
+    grid = admit_plane(p, u, v, n_block=64, q_block=64, interpret=True, **kw)
+    dma = admit_plane(p, u, v, n_block=64, q_block=64, interpret=True,
+                      streaming=True, **kw)
+    np.testing.assert_array_equal(np.asarray(grid), np.asarray(dma))
+
+
+def test_streamed_kernels_on_real_index():
+    """End-to-end: streamed admit plane feeds pruned_bfs and answers match
+    the grid-kernel pipeline on a real index."""
+    rng = np.random.default_rng(21)
+    n = 64
+    g = make_graph(rng.integers(0, n, 300).astype(np.int32),
+                   rng.integers(0, n, 300).astype(np.int32), n, m_cap=320)
+    idx = DBLIndex.build(g, n_cap=n, k=16, k_prime=16, max_iters=48)
+    q = 100
+    u = jnp.asarray(rng.integers(0, n, q).astype(np.int32))
+    v = jnp.asarray(rng.integers(0, n, q).astype(np.int32))
+    hits = {}
+    for s in (False, True):
+        adm = admit_plane(idx.packed, u, v, n_block=32, q_block=32,
+                          interpret=True, streaming=s)
+        hits[s] = Q.pruned_bfs(g, idx.packed, u, v, adm, n_cap=n,
+                               max_iters=48)
+    np.testing.assert_array_equal(np.asarray(hits[False]),
+                                  np.asarray(hits[True]))

@@ -1,0 +1,272 @@
+"""PR 7 — bit-packed uint32 propagation fixpoint.
+
+``plane_repr="packed"`` runs every (k+k')-lane fixpoint on ``(n_cap, W)``
+uint32 word planes (32 lanes/word) instead of ``(n_cap, k)`` uint8 bool
+planes.  Because OR over packed words is exactly lane-wise OR, the packed
+frontier evolution is structurally identical to the bool one — every test
+here asserts BITWISE equality against the bool reference, including the
+iteration counts and the ``max_iters + 1`` saturation report.
+
+The pad-bit hygiene sweep (k not a multiple of 32) pins the invariant that
+the W·32 − k unused high bits stay zero through pack, every word-OR round,
+and popcount — a stray pad bit would survive unpack as a phantom lane on
+the next packed round-trip.
+"""
+import warnings
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from tests._hyp import given, settings, st
+from tests.conftest import random_graph
+
+from repro.core import DBLIndex, make_graph
+from repro.core import bitset
+from repro.core import graph as G
+from repro.core import propagate as P
+from repro.core import update as U
+from repro.serve.engine import QueryEngine
+
+
+# ------------------------------------------------------ bitset algebra
+@given(st.integers(1, 130), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_pad_mask_and_popcount_hygiene(k, seed):
+    """pad_mask has exactly k ones; popcount(words, k=k) ignores pad bits
+    even when they have been forced high."""
+    rng = np.random.default_rng(seed)
+    mask = np.asarray(bitset.pad_mask(k))
+    assert mask.dtype == np.uint32
+    bits = np.unpackbits(mask.view(np.uint8), bitorder="little")
+    assert bits.sum() == k
+    rows = rng.random((5, k)) < 0.5
+    w = bitset.pack(jnp.asarray(rows))
+    dirty = w | ~jnp.asarray(mask)          # force every pad bit high
+    np.testing.assert_array_equal(np.asarray(bitset.popcount(dirty, k=k)),
+                                  rows.sum(-1))
+
+
+@given(st.integers(1, 100), st.integers(2, 40), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_scatter_or_matches_dense_reference(k, b, seed):
+    """bitset.scatter_or (sorted segmented word-OR) == a dense numpy
+    OR-accumulate, including duplicate and out-of-range targets."""
+    rng = np.random.default_rng(seed)
+    n = 30
+    base = rng.random((n, k)) < 0.3
+    vals = rng.random((b, k)) < 0.3
+    at = rng.integers(0, n + 5, b).astype(np.int32)   # some out-of-range
+    got = bitset.scatter_or(bitset.pack(jnp.asarray(base)),
+                            bitset.pack(jnp.asarray(vals)),
+                            jnp.asarray(at))
+    want = base.copy()
+    for i in range(b):
+        if at[i] < n:
+            want[at[i]] |= vals[i]
+    np.testing.assert_array_equal(
+        np.asarray(bitset.unpack(got, k)).astype(bool), want)
+
+
+def test_scatter_or_empty_batch():
+    base = bitset.pack(jnp.zeros((4, 40), jnp.uint8).at[1, 3].set(1))
+    out = bitset.scatter_or(base, jnp.zeros((0, 2), jnp.uint32),
+                            jnp.zeros((0,), jnp.int32))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(base))
+
+
+# ------------------------------------------------- propagate parity
+# k values straddling word boundaries: 1, <32, =32, >32, =64, non-x32 big
+_KS = (1, 7, 20, 32, 33, 64, 100)
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from(_KS))
+@settings(max_examples=20, deadline=None)
+def test_propagate_packed_bitwise_parity(seed, k):
+    """packed propagate == bool propagate (labels AND iteration counts),
+    both directions, on random graphs with tombstoned edges."""
+    rng = np.random.default_rng(seed)
+    n, src, dst = random_graph(rng)
+    g = make_graph(src, dst, n, m_cap=len(src) + 8)
+    live = G.edge_mask(g)
+    seeds = rng.integers(0, n, min(k, n)).astype(np.int32)
+    plane = jnp.zeros((n, k), jnp.uint8).at[
+        jnp.asarray(seeds), jnp.arange(len(seeds)) % k].set(1)
+    frontier = jnp.zeros((n,), jnp.bool_).at[jnp.asarray(seeds)].set(True)
+    for reverse in (False, True):
+        out_b, it_b = P.propagate(plane, g.src, g.dst, live, frontier,
+                                  n_cap=n, max_iters=64, reverse=reverse)
+        out_p, it_p = P.propagate(plane, g.src, g.dst, live, frontier,
+                                  n_cap=n, max_iters=64, reverse=reverse,
+                                  plane_repr="packed")
+        np.testing.assert_array_equal(np.asarray(out_b), np.asarray(out_p))
+        assert int(it_b) == int(it_p)
+
+
+def test_propagate_packed_truncation_parity():
+    """A path graph cut off mid-fixpoint: both reprs must report the
+    truncation sentinel max_iters + 1 and identical partial labels."""
+    n = 12
+    src = np.arange(n - 1, dtype=np.int32)
+    dst = np.arange(1, n, dtype=np.int32)
+    g = make_graph(src, dst, n, m_cap=16)
+    live = G.edge_mask(g)
+    plane = jnp.zeros((n, 5), jnp.uint8).at[0, 0].set(1)
+    frontier = jnp.zeros((n,), jnp.bool_).at[0].set(True)
+    for mi in (3, n + 2):
+        out_b, it_b = P.propagate(plane, g.src, g.dst, live, frontier,
+                                  n_cap=n, max_iters=mi)
+        out_p, it_p = P.propagate(plane, g.src, g.dst, live, frontier,
+                                  n_cap=n, max_iters=mi,
+                                  plane_repr="packed")
+        np.testing.assert_array_equal(np.asarray(out_b), np.asarray(out_p))
+        assert int(it_b) == int(it_p)
+        if mi == 3:
+            assert int(it_p) == mi + 1      # truncated: saturation report
+
+
+def test_propagate_packed_rejects_min_monoid():
+    plane = jnp.zeros((4, 3), jnp.int32)
+    e = jnp.zeros((2,), jnp.int32)
+    with pytest.raises(ValueError):
+        P.propagate(plane, e, e, jnp.ones((2,), jnp.bool_),
+                    jnp.zeros((4,), jnp.bool_), n_cap=4, monoid="min",
+                    plane_repr="packed")
+    with pytest.raises(ValueError):
+        P.check_plane_repr("zip")
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from(_KS))
+@settings(max_examples=15, deadline=None)
+def test_seed_scatter_or_parity(seed, k):
+    """Packed Alg-3 seeding == bool seeding: seeded plane and changed-row
+    frontier, with duplicate edge targets."""
+    rng = np.random.default_rng(seed)
+    n = 25
+    base = jnp.asarray((rng.random((n, k)) < 0.3).astype(np.uint8))
+    b = 12
+    ns = jnp.asarray(rng.integers(0, n, b).astype(np.int32))
+    nd = jnp.asarray(rng.integers(0, n, b).astype(np.int32))
+    for reverse in (False, True):
+        sb, fb = U.insert_seeds(base, ns, nd, n_cap=n, reverse=reverse)
+        sp, fp = U.insert_seeds(base, ns, nd, n_cap=n, reverse=reverse,
+                                plane_repr="packed")
+        np.testing.assert_array_equal(np.asarray(sb), np.asarray(sp))
+        np.testing.assert_array_equal(np.asarray(fb), np.asarray(fp))
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_push_boundary_parity(seed):
+    rng = np.random.default_rng(seed)
+    n, src, dst = random_graph(rng)
+    g = make_graph(src, dst, n, m_cap=len(src) + 4)
+    live = G.edge_mask(g)
+    dirty = jnp.asarray(rng.random(n) < 0.3)
+    for reverse in (False, True):
+        a = P.push_boundary(g.src, g.dst, live, dirty, n_cap=n,
+                            reverse=reverse)
+        b = P.push_boundary(g.src, g.dst, live, dirty, n_cap=n,
+                            reverse=reverse, plane_repr="packed")
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------- whole-lifecycle differential
+def test_packed_lifecycle_bitwise_equals_bool():
+    """build -> insert -> insert -> delete -> delta rebuild -> full rebuild,
+    packed vs bool, every label plane and flag bitwise equal at every step
+    (k and k' deliberately non-multiples of 32)."""
+    rng = np.random.default_rng(7)
+    n = 120
+    src = rng.integers(0, n, 420).astype(np.int32)
+    dst = rng.integers(0, n, 420).astype(np.int32)
+    g = make_graph(src, dst, n, m_cap=1024)
+    kw = dict(n_cap=n, k=20, k_prime=13, max_iters=64)
+    ib = DBLIndex.build(g, **kw)
+    ip = DBLIndex.build(g, plane_repr="packed", **kw)
+
+    def check(a, b, stage):
+        for f in ("dl_in", "dl_out", "bl_in", "bl_out"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+                err_msg=f"{stage}:{f}")
+        assert bool(np.asarray(a.saturated)) == bool(np.asarray(b.saturated))
+
+    check(ib, ip, "build")
+    for step in range(2):
+        es = rng.integers(0, n, 25).astype(np.int32)
+        ed = rng.integers(0, n, 25).astype(np.int32)
+        ib = ib.insert_edges(es, ed, max_iters=64)
+        ip = ip.insert_edges(es, ed, max_iters=64, plane_repr="packed")
+        check(ib, ip, f"insert{step}")
+    ib = ib.delete_edges(src[:40], dst[:40])
+    ip = ip.delete_edges(src[:40], dst[:40])
+    rb = ib.rebuild(mode="delta", max_iters=64)
+    rp = ip.rebuild(mode="delta", max_iters=64, plane_repr="packed")
+    check(rb, rp, "delta-rebuild")
+    fb = ib.rebuild(mode="full", max_iters=64)
+    fp = ip.rebuild(mode="full", max_iters=64, plane_repr="packed")
+    check(fb, fp, "full-rebuild")
+
+
+def test_packed_build_saturation_warns_like_bool():
+    """A cut-off packed build must surface saturation exactly like bool."""
+    n = 20
+    src = np.arange(n - 1, dtype=np.int32)
+    dst = np.arange(1, n, dtype=np.int32)
+    g = make_graph(src, dst, n, m_cap=32)
+    from repro.core.dbl import LabelSaturationWarning
+    for repr_ in ("bool", "packed"):
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            idx = DBLIndex.build(g, n_cap=n, k=4, k_prime=4, max_iters=2,
+                                 plane_repr=repr_)
+        assert bool(np.asarray(idx.saturated)), repr_
+        assert any(issubclass(x.category, LabelSaturationWarning)
+                   for x in w), repr_
+
+
+# ----------------------------------------------------- engine threading
+def test_engine_packed_stream_parity():
+    """A QueryEngine built with plane_repr='packed' (and the packed BFS
+    frontier + int32 verdict stores) answers a mixed submit/insert/flush
+    stream bitwise-identically to the default engine."""
+    rng = np.random.default_rng(17)
+    n, m = 150, 500
+    src = rng.integers(0, n, m).astype(np.int32)
+    dst = rng.integers(0, n, m).astype(np.int32)
+    g = make_graph(src, dst, n, n_cap=256, m_cap=1024)
+    kw = dict(n_cap=256, k=16, k_prime=12, max_iters=64)
+    eng_b = QueryEngine(DBLIndex.build(g, **kw), max_iters=64)
+    eng_p = QueryEngine(DBLIndex.build(g, plane_repr="packed", **kw),
+                        max_iters=64, plane_repr="packed",
+                        frontier_dtype="packed", out_dtype="int32")
+    pend = []
+    for step in range(3):
+        qu = rng.integers(0, n, 120).astype(np.int32)
+        qv = rng.integers(0, n, 120).astype(np.int32)
+        pend.append((eng_b.submit(eng_b.index, qu, qv),
+                     eng_p.submit(eng_p.index, qu, qv)))
+        es = rng.integers(0, n, 20).astype(np.int32)
+        ed = rng.integers(0, n, 20).astype(np.int32)
+        eng_b.insert(es, ed)
+        eng_p.insert(es, ed)
+    for pb, pp in pend:
+        np.testing.assert_array_equal(pb.resolve(), pp.resolve())
+    eng_b.delete(src[:10], dst[:10])
+    eng_p.delete(src[:10], dst[:10])
+    qu = rng.integers(0, n, 90).astype(np.int32)
+    qv = rng.integers(0, n, 90).astype(np.int32)
+    np.testing.assert_array_equal(eng_b.query(qu, qv), eng_p.query(qu, qv))
+    eng_b.rebuild(mode="delta")
+    eng_p.rebuild(mode="delta")
+    assert eng_p.last_rebuild_info["mode"] == "delta"
+    np.testing.assert_array_equal(eng_b.query(qu, qv), eng_p.query(qu, qv))
+
+
+def test_engine_rejects_packed_frontier_with_vertex_mesh():
+    devs = jax.devices()
+    mesh = jax.sharding.Mesh(np.array(devs[:1]), ("vertex",))
+    with pytest.raises(ValueError):
+        QueryEngine(frontier_dtype="packed", vertex_mesh=mesh)

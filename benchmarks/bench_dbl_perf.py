@@ -586,6 +586,90 @@ def packed_stream(bg, *, rounds: int = 4, query_b: int = 512,
     return r
 
 
+def families_stream(bg, *, rounds: int = 4, query_b: int = 512,
+                    insert_b: int = 64, seed: int = 23, il_dim: int = 4,
+                    il_seed: int = 11):
+    """PR-8 section: the DL+BL core vs DL+BL+IL (the interval plug-in
+    family) through the maintained lifecycle — Alg-1 build, Alg-3 insert
+    batches, and an engine insert/query stream with a coalesced flush.
+    The interval family is a pure negative prune, so answers must be
+    bitwise equal (asserted); what it buys is BFS residue: lanes the
+    containment check settles from labels never ride a BFS.  Per-family
+    hit attribution comes from ``engine.stats.prune_hits``; ``k``/``k'``
+    run at 32 lanes (half the classic sections) so the label core leaves
+    a residue worth pruning — the regime where a third family pays."""
+    m_cap = len(bg.src) + rounds * insert_b + 300
+    rng = np.random.default_rng(seed)
+    ns = rng.integers(0, bg.n, 100).astype(np.int32)
+    nd = rng.integers(0, bg.n, 100).astype(np.int32)
+    stream = [(rng.integers(0, bg.n, query_b).astype(np.int32),
+               rng.integers(0, bg.n, query_b).astype(np.int32),
+               rng.integers(0, bg.n, insert_b).astype(np.int32),
+               rng.integers(0, bg.n, insert_b).astype(np.int32))
+              for _ in range(rounds)]
+    g = G.make_graph(bg.src, bg.dst, bg.n, m_cap=m_cap)
+
+    def build(fams):
+        return DBLIndex.build(g, n_cap=bg.n, k=32, k_prime=32, max_iters=64,
+                              families=fams, il_dim=il_dim, il_seed=il_seed)
+
+    out = {}
+    for label, fams in (("dl_bl", ("dl", "bl")),
+                        ("dl_bl_il", ("dl", "bl", "il"))):
+        idx = build(fams)
+        t_build = timed(
+            lambda f=fams: build(f).packed.dl_in.block_until_ready())
+        t_insert = timed(
+            lambda i=idx: i.insert_edges(
+                ns, nd, max_iters=64).packed.dl_in.block_until_ready())
+
+        def serve(idx=idx):
+            eng = QueryEngine(idx, bfs_chunk=256, max_iters=64,
+                              donate=False)
+            pend = []
+            t_ins = 0.0
+            for u, v, s2, d2 in stream:
+                pend.append(eng.submit(eng.index, u, v))
+                t0 = time.perf_counter()
+                eng.insert(s2, d2)
+                eng.index.packed.dl_in.block_until_ready()
+                t_ins += time.perf_counter() - t0
+            t0 = time.perf_counter()
+            answers = eng.flush(pend)
+            return (t_ins, time.perf_counter() - t0,
+                    np.concatenate(answers), eng.stats)
+        serve()                                   # warm executables
+        runs = [serve() for _ in range(5)]
+        stats = runs[0][3]
+        queries = max(1, stats.queries)
+        out[label] = {
+            "build_s": t_build,
+            "insert_ms_per_batch": 1e3 * t_insert,
+            "stream_insert_ms": 1e3 * sorted(r[0] for r in runs)[2],
+            "flush_ms": 1e3 * sorted(r[1] for r in runs)[2],
+            "prune_hits": dict(stats.prune_hits),
+            "hit_rates": {k_: v / queries
+                          for k_, v in stats.prune_hits.items()},
+            "answers": runs[0][2],
+        }
+    ok = bool((out["dl_bl"].pop("answers") ==
+               out["dl_bl_il"].pop("answers")).all())
+    bfs0 = out["dl_bl"]["prune_hits"]["bfs"]
+    bfs1 = out["dl_bl_il"]["prune_hits"]["bfs"]
+    return {"dl_bl": out["dl_bl"], "dl_bl_il": out["dl_bl_il"],
+            "il_dim": il_dim, "il_seed": il_seed,
+            "bfs_residue_base": bfs0, "bfs_residue_il": bfs1,
+            "bfs_residue_reduced": bfs1 < bfs0,
+            "answers_bitwise_equal": ok}
+
+
+#: every section ``main`` knows how to run — the CLI restricts to these
+#: via argparse choices; programmatic callers are validated against the
+#: same tuple (an unknown name used to be silently skipped)
+KNOWN_SECTIONS = ("classic", "mixed", "epoch", "fully_dynamic", "delta",
+                  "sharded", "packed", "families")
+
+
 def main(scale: float = 0.1, datasets=("LJ", "Email", "Reddit"),
          json_path: str | None = None, sections=None):
     """Runs the perf suite and writes the PR-4 trajectory file
@@ -599,10 +683,32 @@ def main(scale: float = 0.1, datasets=("LJ", "Email", "Reddit"),
     default runs everything."""
     sections = set(sections or
                    ("classic", "mixed", "epoch", "fully_dynamic", "delta"))
+    unknown = sections - set(KNOWN_SECTIONS)
+    if unknown:
+        raise ValueError(f"unknown bench sections {sorted(unknown)}; "
+                         f"known sections: {KNOWN_SECTIONS}")
     json_path = json_path or os.environ.get("BENCH_JSON", "BENCH_PR4.json")
     report = {"scale": scale, "backend": jax.default_backend(),
               "datasets": {}, "epoch_coalescing": {}, "fully_dynamic": {},
-              "delta_rebuild": {}, "sharded": {}, "packed": {}}
+              "delta_rebuild": {}, "sharded": {}, "packed": {},
+              "families": {}}
+    if "families" in sections:
+        print("dataset,build_s_core,build_s_il,insert_ms_core,insert_ms_il,"
+              "flush_ms_core,flush_ms_il,bfs_core,bfs_il,il_hit_rate,"
+              "bitwise  (dl+bl vs dl+bl+il)")
+    for name in datasets if "families" in sections else ():
+        bg = load(name, scale=scale)
+        r = families_stream(bg)
+        report["families"][name] = r
+        print(f"{name},{r['dl_bl']['build_s']:.3f},"
+              f"{r['dl_bl_il']['build_s']:.3f},"
+              f"{r['dl_bl']['insert_ms_per_batch']:.1f},"
+              f"{r['dl_bl_il']['insert_ms_per_batch']:.1f},"
+              f"{r['dl_bl']['flush_ms']:.1f},"
+              f"{r['dl_bl_il']['flush_ms']:.1f},"
+              f"{r['bfs_residue_base']},{r['bfs_residue_il']},"
+              f"{r['dl_bl_il']['hit_rates']['il']:.4f},"
+              f"{r['answers_bitwise_equal']}")
     if "packed" in sections:
         print("dataset,build_s_bool,build_s_packed,build_speedup,"
               "flush_ms_bool,flush_ms_packed,flush_speedup,"
@@ -752,8 +858,7 @@ if __name__ == "__main__":
     ap.add_argument("--datasets", nargs="+", default=["LJ", "Email", "Reddit"])
     ap.add_argument("--json", dest="json_path", default=None)
     ap.add_argument("--sections", nargs="+", default=None,
-                    choices=["classic", "mixed", "epoch", "fully_dynamic",
-                             "delta", "sharded", "packed"])
+                    choices=list(KNOWN_SECTIONS))
     a = ap.parse_args()
     main(scale=a.scale, datasets=tuple(a.datasets), json_path=a.json_path,
          sections=a.sections)

@@ -66,6 +66,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import bitset
+from . import families as F
 from . import graph as G
 from . import labels as L
 from . import planes as PL
@@ -133,6 +134,15 @@ class DBLIndex(NamedTuple):
     label_del_epoch: jax.Array | int = 0
     # sticky flag: some insert's label fixpoint hit max_iters (stale labels)
     saturated: jax.Array | bool = False
+    # plug-in family storage (core.families registry).  The fused DL/BL
+    # core above is mandatory; plug-ins append optional trailing fields so
+    # the default-families pytree carries EXACTLY the pre-registry leaves
+    # (None fields flatten to nothing — no aval churn, no retraces).  The
+    # "il" family: (n_cap, 2*dim) int32 [lo | -hi] interval planes per
+    # direction plus the committed int32 rank seed they re-derive from.
+    il_in: jax.Array | None = None
+    il_out: jax.Array | None = None
+    il_seed: jax.Array | None = None
 
     # ---- static helpers -------------------------------------------------
     @property
@@ -146,6 +156,22 @@ class DBLIndex(NamedTuple):
     @property
     def k_prime(self) -> int:
         return self.bl_in.shape[1]
+
+    @property
+    def families(self) -> tuple[str, ...]:
+        """Enabled label families, derived from what the index stores."""
+        return F.CORE_FAMILIES + (("il",) if self.il_in is not None else ())
+
+    @property
+    def il(self):
+        """(il_in, il_out) verdict-path operand pytree, or None.  None has
+        no pytree leaves, so default-families executables trace the exact
+        pre-registry programs."""
+        return None if self.il_in is None else (self.il_in, self.il_out)
+
+    @property
+    def il_dim(self) -> int | None:
+        return None if self.il_in is None else self.il_in.shape[-1] // 2
 
     @property
     def store(self) -> PL.PlaneStore:
@@ -182,16 +208,24 @@ class DBLIndex(NamedTuple):
     def build(g: G.Graph, *, n_cap: int, k: int = 64, k_prime: int = 64,
               selection: str = "product", leaf_r: int = 0,
               max_iters: int = 256, check: str = "warn",
-              plane_repr: str = "bool") -> "DBLIndex":
+              plane_repr: str = "bool",
+              families=F.DEFAULT_FAMILIES, il_dim: int = F.DEFAULT_IL_DIM,
+              il_seed: int = 0) -> "DBLIndex":
         """Alg 1.  A build whose fixpoints hit ``max_iters`` without
         converging produces INCOMPLETE labels (same failure mode as a
         saturated insert): the ``saturated`` flag is set and ``check``
         behaves as in ``insert_edges`` ("warn" default / "raise" /
         "defer").  ``plane_repr="packed"`` runs every fixpoint on
-        uint32-packed word planes (bitwise-equal labels, 32 lanes/word)."""
+        uint32-packed word planes (bitwise-equal labels, 32 lanes/word).
+
+        ``families`` enables label families beyond the fused DL/BL core
+        (``core.families`` registry); each plug-in builds through its own
+        hooks in its own plane repr.  ``il_dim``/``il_seed`` parameterize
+        the interval family when enabled."""
         if check not in ("warn", "raise", "defer"):
             raise ValueError(f"unknown check mode {check!r}")
         P.check_plane_repr(plane_repr)
+        plugin_fams = F.plugins(families)
         landmarks = S.select_landmarks(g, n_cap=n_cap, k=k, method=selection)
         dl_in, dl_out, it_dl = L.build_dl(g, landmarks, n_cap=n_cap, k=k,
                                           max_iters=max_iters,
@@ -201,13 +235,21 @@ class DBLIndex(NamedTuple):
                                           k_prime=k_prime,
                                           max_iters=max_iters,
                                           plane_repr=plane_repr)
-        sat = U.saturated(jnp.concatenate([it_dl, it_bl]), max_iters)
+        all_iters = [it_dl, it_bl]
+        extra = {}
+        for fam in plugin_fams:
+            p_in, p_out, it_f = fam.build(g, n_cap=n_cap, dim=il_dim,
+                                          seed=il_seed, max_iters=max_iters)
+            extra[fam.name] = (p_in, p_out)
+            all_iters.append(it_f)
+        sat = U.saturated(jnp.concatenate(all_iters), max_iters)
         if check != "defer" and bool(np.asarray(sat)):
             if check == "raise":
                 raise LabelSaturationError(_saturation_message(max_iters))
             warnings.warn(_saturation_message(max_iters),
                           LabelSaturationWarning, stacklevel=2)
         packed = Q.pack_labels(dl_in, dl_out, bl_in, bl_out)
+        il = extra.get("il")
         # NB: a real copy, not asarray — label_del_epoch must not alias the
         # graph's del_epoch buffer (the engine's insert path donates the
         # graph; an aliased leaf would be invalidated with it)
@@ -215,7 +257,10 @@ class DBLIndex(NamedTuple):
                         sources, sinks,
                         epoch=jnp.int32(0),
                         label_del_epoch=jnp.array(g.del_epoch, jnp.int32),
-                        saturated=sat)
+                        saturated=sat,
+                        il_in=None if il is None else il[0],
+                        il_out=None if il is None else il[1],
+                        il_seed=None if il is None else jnp.int32(il_seed))
 
     # ---- queries (Alg 2) --------------------------------------------------
     def query(self, u, v, *, bfs_chunk: int = 64, max_iters: int = 256,
@@ -228,7 +273,8 @@ class DBLIndex(NamedTuple):
         if driver == "host":
             return Q.query(self.graph, self.packed, u, v, n_cap=self.n_cap,
                            bfs_chunk=bfs_chunk, max_iters=max_iters,
-                           return_stats=return_stats, dirty=self.is_dirty)
+                           return_stats=return_stats, dirty=self.is_dirty,
+                           il=self.il)
         if driver != "engine":
             raise ValueError(f"unknown driver {driver!r}")
         from repro.serve.engine import engine_for  # lazy: core <-> serve
@@ -237,7 +283,7 @@ class DBLIndex(NamedTuple):
 
     def label_verdicts(self, u, v):
         return Q.label_verdicts(self.packed, jnp.asarray(u, jnp.int32),
-                                jnp.asarray(v, jnp.int32))
+                                jnp.asarray(v, jnp.int32), il=self.il)
 
     # ---- updates (Alg 3) --------------------------------------------------
     def insert_edges(self, new_src, new_dst, *, max_iters: int = 256,
@@ -260,6 +306,13 @@ class DBLIndex(NamedTuple):
             new_src, new_dst, self.epoch, n_cap=self.n_cap,
             max_iters=max_iters, plane_repr=plane_repr)
         sat_now = U.saturated(iters, max_iters)
+        il_kw = {}
+        for fam in F.plugins(self.families):
+            il_in, il_out, it_f = U.insert_update_plugin(
+                fam.name, g2, self.il_in, self.il_out, new_src, new_dst,
+                n_cap=self.n_cap, max_iters=max_iters)
+            il_kw = dict(il_in=il_in, il_out=il_out)
+            sat_now = sat_now | U.saturated(it_f, max_iters)
         if check != "defer" and bool(np.asarray(sat_now)):
             if check == "raise":
                 raise LabelSaturationError(_saturation_message(max_iters))
@@ -269,7 +322,7 @@ class DBLIndex(NamedTuple):
         return self._replace(
             graph=g2, dl_in=dl_in, dl_out=dl_out, bl_in=bl_in, bl_out=bl_out,
             packed=packed, epoch=epoch2,
-            saturated=jnp.asarray(self.saturated) | sat_now)
+            saturated=jnp.asarray(self.saturated) | sat_now, **il_kw)
 
     def delete_edges(self, del_src, del_dst) -> "DBLIndex":
         """Tombstone every live edge matching a (src, dst) pair — O(m) mask
@@ -359,10 +412,14 @@ class DBLIndex(NamedTuple):
                       compact: bool, check: str,
                       plane_repr: str = "bool") -> "DBLIndex":
         g = G.compact(self.graph) if compact else self.graph
+        fam_kw = {}
+        if self.il_in is not None:
+            fam_kw = dict(families=self.families, il_dim=self.il_dim,
+                          il_seed=self.il_seed)
         idx = DBLIndex.build(g, n_cap=self.n_cap, k=self.k,
                              k_prime=self.k_prime, selection=selection,
                              leaf_r=leaf_r, max_iters=max_iters, check=check,
-                             plane_repr=plane_repr)
+                             plane_repr=plane_repr, **fam_kw)
         return idx._replace(
             epoch=jnp.asarray(self.epoch, jnp.int32) + jnp.int32(1))
 
@@ -510,7 +567,20 @@ class DBLIndex(NamedTuple):
                               fr_fwd, False)
         x_bwd = run_direction(x_bwd, seed_bwd, fresh_bwd, plan["dirty_bwd"],
                               fr_bwd, True)
-        sat = U.saturated(jnp.stack(iters), max_iters)
+        g2 = G.compact(g) if compact else g
+        # plug-in family repair: under deletion every interval dimension is
+        # churned (min planes are not per-column decomposable), so the IL
+        # hook re-derives both planes from the stored seed over the live
+        # edge set — deterministic in (seed, n_cap, dim), hence bitwise
+        # equal to what a full rebuild would produce
+        il_in = il_out = None
+        for fam in F.plugins(self.families):
+            il_in, il_out, it_f = fam.rebuild(
+                g2, n_cap=n_cap, dim=self.il_dim, seed=self.il_seed,
+                max_iters=max_iters)
+            iters.append(it_f)
+        sat = U.saturated(
+            jnp.concatenate([jnp.atleast_1d(i) for i in iters]), max_iters)
         if check != "defer" and bool(np.asarray(sat)):
             if check == "raise":
                 raise LabelSaturationError(_saturation_message(max_iters))
@@ -518,14 +588,14 @@ class DBLIndex(NamedTuple):
                           LabelSaturationWarning, stacklevel=3)
         dl_in, bl_in = x_fwd[:, :k], x_fwd[:, k:]
         dl_out, bl_out = x_bwd[:, :k], x_bwd[:, k:]
-        g2 = G.compact(g) if compact else g
         packed = Q.pack_labels(dl_in, dl_out, bl_in, bl_out)
         return DBLIndex(
             g2, plan["landmarks"], dl_in, dl_out, bl_in, bl_out, packed,
             plan["sources"], plan["sinks"],
             epoch=jnp.asarray(self.epoch, jnp.int32) + jnp.int32(1),
             label_del_epoch=jnp.array(g2.del_epoch, jnp.int32),
-            saturated=sat)
+            saturated=sat, il_in=il_in, il_out=il_out,
+            il_seed=self.il_seed)
 
     # ---- introspection ----------------------------------------------------
     def label_bytes(self) -> int:

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from . import families as F
 from . import graph as G
 from . import labels as L
 from . import planes as PL
@@ -46,8 +47,12 @@ def _axes(mesh: Mesh) -> tuple:
     return tuple(mesh.axis_names)
 
 
-def index_shardings(mesh: Mesh) -> DBLIndex:
-    """A DBLIndex-shaped pytree of NamedShardings."""
+def index_shardings(mesh: Mesh, *, il: bool = False) -> DBLIndex:
+    """A DBLIndex-shaped pytree of NamedShardings.  ``il=True`` adds the
+    interval plug-in family's leaves — (n_cap, 2*dim) int32 rank planes
+    sharded like the bool planes, plus the replicated scalar seed; the
+    default keeps the trailing fields None so the pytree matches a
+    default-families index exactly."""
     ax = _axes(mesh)
     vec = NamedSharding(mesh, P(ax))          # (n,) / (m,) arrays
     plane = NamedSharding(mesh, P(ax, None))  # (n, k) planes
@@ -57,12 +62,15 @@ def index_shardings(mesh: Mesh) -> DBLIndex:
     return DBLIndex(graph=g, landmarks=scal, dl_in=plane, dl_out=plane,
                     bl_in=plane, bl_out=plane, packed=packed,
                     bl_sources=vec, bl_sinks=vec, epoch=scal,
-                    label_del_epoch=scal, saturated=scal)
+                    label_del_epoch=scal, saturated=scal,
+                    il_in=plane if il else None,
+                    il_out=plane if il else None,
+                    il_seed=scal if il else None)
 
 
 def shard_index(idx: DBLIndex, mesh: Mesh) -> DBLIndex:
     """device_put every leaf with the scheme above (elastic re-placement)."""
-    sh = index_shardings(mesh)
+    sh = index_shardings(mesh, il=idx.il_in is not None)
     return jax.tree.map(lambda x, s: jax.device_put(x, s), idx, sh)
 
 
@@ -81,7 +89,7 @@ def distributed_label_verdicts(idx: DBLIndex, mesh: Mesh, u, v):
     u = jax.device_put(jnp.asarray(u, jnp.int32), qsh)
     v = jax.device_put(jnp.asarray(v, jnp.int32), qsh)
     fn = jax.jit(Q.label_verdicts, out_shardings=qsh)
-    return fn(idx.packed, u, v)
+    return fn(idx.packed, u, v, idx.il)
 
 
 @functools.lru_cache(maxsize=16)
@@ -127,6 +135,15 @@ def distributed_insert(idx: DBLIndex, mesh: Mesh, new_src, new_dst,
     g2, a, b, c, d, packed, epoch2, sat = fn(
         idx.graph, idx.dl_in, idx.dl_out, idx.bl_in, idx.bl_out,
         ns, nd, jnp.asarray(idx.epoch, jnp.int32))
+    il_kw = {}
+    if idx.il_in is not None:
+        # plug-in families ride the auto-partitioned path: inputs carry
+        # their resident shardings and GSPMD propagates them
+        il_in, il_out, it_il = U.insert_update_plugin(
+            "il", g2, idx.il_in, idx.il_out, ns, nd,
+            n_cap=idx.n_cap, max_iters=max_iters)
+        il_kw = dict(il_in=il_in, il_out=il_out)
+        sat = sat | U.saturated(it_il, max_iters)
     if check != "defer" and bool(np.asarray(sat)):
         if check == "raise":
             raise LabelSaturationError(_saturation_message(max_iters))
@@ -134,7 +151,7 @@ def distributed_insert(idx: DBLIndex, mesh: Mesh, new_src, new_dst,
                       LabelSaturationWarning, stacklevel=2)
     return idx._replace(
         graph=g2, dl_in=a, dl_out=b, bl_in=c, bl_out=d, packed=packed,
-        epoch=epoch2, saturated=jnp.asarray(idx.saturated) | sat)
+        epoch=epoch2, saturated=jnp.asarray(idx.saturated) | sat, **il_kw)
 
 
 # ===================================================================
@@ -147,12 +164,14 @@ def vertex_mesh(shards: int | None = None) -> Mesh:
     return make_mesh_compat((shards,), (PL.VERTEX_AXIS,))
 
 
-def vertex_index_shardings(mesh: Mesh) -> DBLIndex:
+def vertex_index_shardings(mesh: Mesh, *, il: bool = False) -> DBLIndex:
     """DBLIndex-shaped NamedShardings for the vertex-sharded layout: label
     planes (bool and packed) row-partitioned, the (n_cap,) leaf masks
     row-partitioned alongside them, everything else — graph, landmarks,
     epoch scalars — replicated (the graph is O(m) int32s, small next to
-    the O(n·(k+k')) planes it indexes into)."""
+    the O(n·(k+k')) planes it indexes into).  ``il=True`` row-partitions
+    the interval rank planes alongside the bool planes (same per-device
+    byte scaling) and replicates the scalar seed."""
     from repro.launch.sharding import reach_vertex_shardings
     plane, vec, rep = reach_vertex_shardings(mesh)
     g = Graph(src=rep, dst=rep, n=rep, m=rep, del_at=rep, del_epoch=rep)
@@ -160,13 +179,16 @@ def vertex_index_shardings(mesh: Mesh) -> DBLIndex:
     return DBLIndex(graph=g, landmarks=rep, dl_in=plane, dl_out=plane,
                     bl_in=plane, bl_out=plane, packed=packed,
                     bl_sources=vec, bl_sinks=vec, epoch=rep,
-                    label_del_epoch=rep, saturated=rep)
+                    label_del_epoch=rep, saturated=rep,
+                    il_in=plane if il else None,
+                    il_out=plane if il else None,
+                    il_seed=rep if il else None)
 
 
 def place_vertex_sharded(idx: DBLIndex, mesh: Mesh) -> DBLIndex:
     """device_put every leaf into the vertex-sharded scheme."""
     PL._check_rows(idx.n_cap, PL.vertex_layout(mesh))
-    sh = vertex_index_shardings(mesh)
+    sh = vertex_index_shardings(mesh, il=idx.il_in is not None)
     return jax.tree.map(lambda x, s: jax.device_put(x, s), idx, sh)
 
 
@@ -180,10 +202,28 @@ def _check_saturation(sat, max_iters: int, check: str, stacklevel: int = 3):
                       LabelSaturationWarning, stacklevel=stacklevel)
 
 
+def _il_build_sharded(plan: PL.ShardPlan, sh: DBLIndex, n_cap: int,
+                      dim: int, seed, live, max_iters: int):
+    """Sharded twin of ``interval.build_il``: the deterministic rank seed
+    plane is row-placed and both directions run the MIN halo fixpoint from
+    the all-ones frontier — the same rounds as the replicated min
+    propagate, so the planes are bitwise identical."""
+    fam = F.get("il")
+    base = jax.device_put(fam.seed_plane(n_cap, dim, seed), sh.il_in)
+    fr = jax.device_put(jnp.ones((n_cap,), jnp.bool_), sh.bl_sources)
+    il_in, it0 = PL.halo_propagate(plan, base, fr, live, monoid="min",
+                                   max_iters=max_iters)
+    il_out, it1 = PL.halo_propagate(plan, base, fr, live, reverse=True,
+                                    monoid="min", max_iters=max_iters)
+    return il_in, il_out, jnp.stack([it0, it1])
+
+
 def build_vertex_sharded(g: Graph, mesh: Mesh, *, n_cap: int, k: int = 64,
                          k_prime: int = 64, selection: str = "product",
                          leaf_r: int = 0, max_iters: int = 256,
-                         check: str = "warn", plane_repr: str = "bool"
+                         check: str = "warn", plane_repr: str = "bool",
+                         families=F.DEFAULT_FAMILIES,
+                         il_dim: int = F.DEFAULT_IL_DIM, il_seed=0
                          ) -> tuple[DBLIndex, PL.ShardPlan]:
     """Alg 1 with vertex-sharded label planes: ONE fused (k + k')-lane
     halo fixpoint per direction over row-partitioned seed planes.  Lanes
@@ -191,10 +231,15 @@ def build_vertex_sharded(g: Graph, mesh: Mesh, *, n_cap: int, k: int = 64,
     the bits the four separate family fixpoints would — the labels are
     bitwise identical to ``DBLIndex.build``.  Returns (index, plan); the
     plan carries the edge partition + halo routing subsequent inserts,
-    rebuilds, and sharded BFS residues reuse."""
+    rebuilds, and sharded BFS residues reuse.
+
+    ``families`` enables plug-in label families exactly as in
+    ``DBLIndex.build``; the interval family's rank planes build through
+    the MIN-monoid halo fixpoint, row-partitioned like the bool planes."""
+    plugin_fams = F.plugins(families)
     layout = PL.vertex_layout(mesh)
     PL._check_rows(n_cap, layout)
-    sh = vertex_index_shardings(mesh)
+    sh = vertex_index_shardings(mesh, il=bool(plugin_fams))
     g = jax.tree.map(lambda x, s: jax.device_put(x, s), g, sh.graph)
     landmarks = S.select_landmarks(g, n_cap=n_cap, k=k, method=selection)
     sources, sinks = S.leaf_masks(g, n_cap=n_cap, leaf_r=leaf_r)
@@ -214,14 +259,23 @@ def build_vertex_sharded(g: Graph, mesh: Mesh, *, n_cap: int, k: int = 64,
                                    jax.device_put(fr_bwd, vec_sh), live,
                                    reverse=True, max_iters=max_iters,
                                    plane_repr=plane_repr)
-    sat = U.saturated(jnp.stack([it0, it1]), max_iters)
+    all_iters = [it0, it1]
+    il_kw = {}
+    for fam in plugin_fams:
+        p_in, p_out, it_f = _il_build_sharded(plan, sh, n_cap, il_dim,
+                                              il_seed, live, max_iters)
+        il_kw = dict(il_in=p_in, il_out=p_out,
+                     il_seed=jnp.int32(il_seed))
+        all_iters.append(it_f[0])
+        all_iters.append(it_f[1])
+    sat = U.saturated(jnp.stack(all_iters), max_iters)
     _check_saturation(sat, max_iters, check)
     store = seeds.with_fused(x_fwd, x_bwd)
     idx = DBLIndex(g, landmarks, store.dl_in, store.dl_out, store.bl_in,
                    store.bl_out, store.pack(), sources, sinks,
                    epoch=jnp.int32(0),
                    label_del_epoch=jnp.array(g.del_epoch, jnp.int32),
-                   saturated=sat)
+                   saturated=sat, **il_kw)
     return place_vertex_sharded(idx, mesh), plan
 
 
@@ -262,11 +316,27 @@ def insert_vertex_sharded(idx: DBLIndex, plan: PL.ShardPlan, new_src,
                                    reverse=True, max_iters=max_iters,
                                    plane_repr=plane_repr)
     sat_now = U.saturated(jnp.stack([it0, it1]), max_iters)
+    il_kw = {}
+    if idx.il_in is not None:
+        # MIN twin of the seeding above, mirroring the replicated
+        # ``interval.insert_update_il`` role swap: edge (u, v) hands u's
+        # ancestor mins to v and v's reach mins to u
+        s_in, fr_i = PL.sharded_seed_scatter_min(idx.il_in, ns, nd,
+                                                 mesh=mesh)
+        il_in2, it2 = PL.halo_propagate(plan2, s_in, fr_i, live,
+                                        monoid="min", max_iters=max_iters)
+        s_out, fr_o = PL.sharded_seed_scatter_min(idx.il_out, nd, ns,
+                                                  mesh=mesh)
+        il_out2, it3 = PL.halo_propagate(plan2, s_out, fr_o, live,
+                                         reverse=True, monoid="min",
+                                         max_iters=max_iters)
+        il_kw = dict(il_in=il_in2, il_out=il_out2)
+        sat_now = sat_now | U.saturated(jnp.stack([it2, it3]), max_iters)
     _check_saturation(sat_now, max_iters, check)
     idx2 = idx.with_store(
         store.with_fused(x_fwd, x_bwd), graph=g2,
         epoch=jnp.asarray(idx.epoch, jnp.int32) + jnp.int32(1),
-        saturated=jnp.asarray(idx.saturated) | sat_now)
+        saturated=jnp.asarray(idx.saturated) | sat_now, **il_kw)
     # normalize placements: re-packing and epoch arithmetic produce leaves
     # whose shardings the partitioner chose — pin them back to the scheme
     # so downstream executables see ONE sharding flavor per leaf (no jit
@@ -302,6 +372,9 @@ def rebuild_vertex_sharded(idx: DBLIndex, plan: PL.ShardPlan | None, *,
     build_kw = dict(n_cap=n_cap, k=k, k_prime=kp, selection=selection,
                     leaf_r=leaf_r, max_iters=max_iters, check=check,
                     plane_repr=plane_repr)
+    if idx.il_in is not None:
+        build_kw.update(families=idx.families, il_dim=idx.il_dim,
+                        il_seed=idx.il_seed)
 
     def full(reason):
         g2 = G.compact(idx.graph) if compact else idx.graph
@@ -332,7 +405,7 @@ def rebuild_vertex_sharded(idx: DBLIndex, plan: PL.ShardPlan | None, *,
         n_cap=n_cap, k=k, k_prime=kp)
     live = G.edge_mask(g)
     iters = []
-    sh = vertex_index_shardings(mesh)
+    sh = vertex_index_shardings(mesh, il=idx.il_in is not None)
     for rev, x, seed, fresh, fr in ((False, x_fwd, seed_fwd, fresh_fwd,
                                      fr_fwd),
                                     (True, x_bwd, seed_bwd, fresh_bwd,
@@ -347,9 +420,23 @@ def rebuild_vertex_sharded(idx: DBLIndex, plan: PL.ShardPlan | None, *,
             x_bwd = x
         else:
             x_fwd = x
+    g2 = G.compact(g) if compact else g
+    plan2 = PL.shard_plan(g2.src, g2.dst, int(np.asarray(g2.m)), n_cap,
+                          mesh) if compact else plan
+    # plug-in family repair, as in the replicated delta path: every
+    # interval dimension is churned under deletion, so both planes are
+    # re-derived from the stored seed over the live edge set — bitwise
+    # equal to a full rebuild (deterministic in (seed, n_cap, dim))
+    il_kw = {}
+    if idx.il_in is not None:
+        p_in, p_out, it_f = _il_build_sharded(
+            plan2, sh, n_cap, idx.il_dim, idx.il_seed,
+            G.edge_mask(g2), max_iters)
+        il_kw = dict(il_in=p_in, il_out=p_out)
+        iters.append(it_f[0])
+        iters.append(it_f[1])
     sat = U.saturated(jnp.stack(iters), max_iters)
     _check_saturation(sat, max_iters, check)
-    g2 = G.compact(g) if compact else g
     store = idx.store.with_fused(x_fwd, x_bwd,
                                  landmarks=dplan["landmarks"],
                                  bl_sources=dplan["sources"],
@@ -358,10 +445,8 @@ def rebuild_vertex_sharded(idx: DBLIndex, plan: PL.ShardPlan | None, *,
         store, graph=g2,
         epoch=jnp.asarray(idx.epoch, jnp.int32) + jnp.int32(1),
         label_del_epoch=jnp.array(g2.del_epoch, jnp.int32),
-        saturated=sat)
+        saturated=sat, **il_kw)
     idx2 = place_vertex_sharded(idx2, mesh)
-    plan2 = PL.shard_plan(g2.src, g2.dst, int(np.asarray(g2.m)), n_cap,
-                          mesh) if compact else plan
     reason = "forced" if mode == "delta" else "estimate"
     return idx2, plan2, {"mode": "delta", "reason": reason,
                          "estimate": est}

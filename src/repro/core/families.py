@@ -1,0 +1,148 @@
+"""Label-family registry: one descriptor per prune family, consulted by
+every lifecycle path.
+
+DBL's original pair is hardcoded complementarity — DL answers positives
+(Lemma 1 intersection), BL prunes negatives (Lemma 2 containment) — and
+until this refactor the four planes, their seeds, their fixpoints, their
+insert hooks and their verdict algebra were welded into ``planes.py`` /
+``dbl.py`` / ``query.py`` by name.  This module turns the set of families
+into data.  A :class:`LabelFamily` declares, in one place, everything the
+lifecycle needs to know about a family:
+
+- **plane shape/dtype** — lanes per direction (``plane_width``) and the
+  element type (DL/BL: 0/1 uint8 lanes, packable to uint32 words; IL:
+  int32 rank lanes, never packed);
+- **fixpoint participation** — which monoid its relaxation runs under
+  (``"or"`` bit lanes vs ``"min"`` interval ranks; ``propagate`` routes
+  packed word planes to OR only, so min families keep their own repr);
+- **Alg-1 seed constructor + build** (``seed_plane`` / ``build``);
+- **Alg-3 insert-seeding hook** (``insert_update``) — how a batch of new
+  edges seeds the planes before the maintenance fixpoint;
+- **delta-rebuild hook** (``rebuild``) — how the family repairs itself
+  when the lazy rebuild fires (DL/BL: ``bucket_churn``-style per-column
+  diffs; IL: full re-draw of every churned dimension, i.e. all of them —
+  min planes are not per-column decomposable under deletion);
+- **verdict contribution** (``verdict`` / ``while_dirty``) — positive,
+  negative-prune, or nothing-while-tombstone-dirty, the soundness class
+  the query algebra and the per-family telemetry key off.
+
+``"dl"`` and ``"bl"`` are registered as the **fused core**: their four
+planes share one (k + k')-lane OR fixpoint (``planes.PlaneStore``) and one
+fused verdict kernel, so their hooks stay ``None`` here and the existing
+fused machinery — bitwise-identical to the pre-registry index — runs them
+jointly whenever ``families`` starts with ``("dl", "bl")`` (which it
+must).  Plug-in families (``"il"`` today; TOL/butterfly-style ordered
+labels are the intended next tenants) carry real hooks and are dispatched
+generically by ``dbl.py`` / ``serve.engine`` / ``distributed.py``.
+"""
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+from typing import Callable
+
+#: The fused DL/BL core every index carries; ``resolve`` requires the
+#: enabled-families tuple to start with exactly this prefix.
+CORE_FAMILIES = ("dl", "bl")
+DEFAULT_FAMILIES = CORE_FAMILIES
+
+#: Default interval dimensions per direction for the "il" family.
+DEFAULT_IL_DIM = 4
+
+#: Plug-in family name -> module that registers it on import (lazy so the
+#: registry module itself stays import-cycle-free).
+_PLUGIN_MODULES = {"il": "repro.core.interval"}
+
+
+@dataclass(frozen=True)
+class LabelFamily:
+    """Declarative descriptor of one label family (see module docstring).
+
+    Hook signatures (plug-in families; ``None`` = fused DL/BL core):
+
+    - ``seed_plane(n_cap, dim, seed) -> (n_cap, width) plane``
+    - ``build(g, *, n_cap, dim, seed, max_iters) -> (in, out, iters)``
+    - ``insert_update(g2, p_in, p_out, ns, nd, *, n_cap, max_iters)
+      -> (in', out', iters)`` — ``g2`` already contains the new edges
+    - ``rebuild(g, *, n_cap, dim, seed, max_iters) -> (in, out, iters)``
+      — repair over the current live edge set (delta AND full rebuilds;
+      for IL the two coincide: every dimension re-draws from ``seed``)
+    - ``negative(rows...) -> (Q,) bool`` — the family's negative-prune
+      predicate on gathered query rows (verdict algebra + kernels share
+      it through the family module)
+    """
+    name: str
+    monoid: str           # "or" (bit lanes) | "min" (rank lanes)
+    plane_dtype: str      # "uint8" | "int32"
+    verdict: str          # "positive" | "negative"
+    while_dirty: str      # tombstone-dirty contribution:
+    #   "self-positive" (DL keeps u==v only), "negative" (BL containment
+    #   stays sound — bits are never removed), "none" (IL contributes
+    #   nothing until the rebuild repairs it)
+    fused_core: bool = False
+    packable: bool = False        # may ride plane_repr="packed"
+    plane_width: Callable[[int], int] = staticmethod(lambda d: d)
+    seed_plane: Callable | None = None
+    build: Callable | None = None
+    insert_update: Callable | None = None
+    rebuild: Callable | None = None
+    negative: Callable | None = None
+
+
+_REGISTRY: dict[str, LabelFamily] = {}
+
+
+def register(fam: LabelFamily) -> LabelFamily:
+    """Idempotent by name (module reload / double import safe)."""
+    _REGISTRY[fam.name] = fam
+    return fam
+
+
+def get(name: str) -> LabelFamily:
+    if name not in _REGISTRY and name in _PLUGIN_MODULES:
+        importlib.import_module(_PLUGIN_MODULES[name])
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown label family {name!r}; registered: "
+            f"{sorted(set(_REGISTRY) | set(_PLUGIN_MODULES))}") from None
+
+
+def resolve(families) -> tuple[LabelFamily, ...]:
+    """Validate and resolve an enabled-families tuple.
+
+    The tuple must start with the fused ``("dl", "bl")`` core (the index
+    is not an index without it — DL positives and BL negatives are the
+    completeness argument the BFS residue leans on) and may append
+    plug-in families, each at most once."""
+    families = tuple(families)
+    if families[:2] != CORE_FAMILIES:
+        raise ValueError(
+            f"families must start with {CORE_FAMILIES}, got {families!r}")
+    if len(set(families)) != len(families):
+        raise ValueError(f"duplicate family in {families!r}")
+    return tuple(get(name) for name in families)
+
+
+def plugins(families) -> tuple[LabelFamily, ...]:
+    """The non-core (hook-dispatched) suffix of ``families``."""
+    return resolve(families)[2:]
+
+
+# -- the fused DL/BL core -------------------------------------------------
+# Their planes, seeds, fixpoints, insert seeding, delta churn and verdict
+# algebra are implemented jointly by planes.PlaneStore / labels.py /
+# update.insert_and_update / query.cut_verdicts_rows and the fused Pallas
+# kernels: one (k + k')-lane OR fixpoint maintains all four planes at once
+# (lanes are independent under OR), which is why their hooks live there
+# and not here.  The descriptors still carry the metadata every generic
+# consumer needs: verdict role, dirty policy, telemetry key, dtype.
+register(LabelFamily(
+    name="dl", monoid="or", plane_dtype="uint8", verdict="positive",
+    while_dirty="self-positive", fused_core=True, packable=True,
+    plane_width=staticmethod(lambda k: k)))
+register(LabelFamily(
+    name="bl", monoid="or", plane_dtype="uint8", verdict="negative",
+    while_dirty="negative", fused_core=True, packable=True,
+    plane_width=staticmethod(lambda k_prime: k_prime)))

@@ -1,0 +1,135 @@
+"""GRAIL-style random interval labels ("il") — the first plug-in family.
+
+Classic GRAIL assigns every vertex ``dim`` random DFS post-order intervals
+on a **DAG** and prunes u ⇒ v whenever some interval of v is not contained
+in u's.  The DAG requirement (condensation maintenance under SCC merges)
+is exactly what DBL's design avoids, so this family keeps the containment
+idea and drops the DFS entirely: draw ``dim`` independent random int32
+ranks r_d(v) per vertex and replace each interval end with a min-reduction
+over a reach set —
+
+    lo_d(v) = min { r_d(w) : w ∈ Reach(v) }        hi_d(v) = max {...}
+
+u ⇒ v implies Reach(v) ⊆ Reach(u), and a min over a superset is ≤ the min
+over the subset (dually for max), hence [lo_d(v), hi_d(v)] ⊆
+[lo_d(u), hi_d(u)] for every d; the same containment holds on ancestor
+sets for the "in" direction.  Any violated containment certifies
+non-reachability — a pure O(dim) negative prune.  Storing hi negated
+(``-hi == min(-r)``) makes BOTH ends the same min-monoid fixpoint, so each
+direction's plane is one (n_cap, 2*dim) int32 ``[lo | -hi]`` array driven
+by ``propagate(monoid="min")`` (the path packed word planes reject —
+families route to their own repr), and the verdict is one elementwise
+greater-than sweep:
+
+    il_neg(u, v) = any(out[u] > out[v]) | any(in[v] > in[u])
+
+Soundness classes (``families.LabelFamily``):
+
+- **insert-monotone** — insertions only grow reach sets, so mins only
+  fall: intervals only *coarsen*, and an IL negative computed from newer
+  planes remains valid for any earlier as-of-submit snapshot (the BL
+  argument; no per-lane edge-count gate needed).
+- **tombstone-dirty: contributes nothing** — deletions shrink reach sets
+  and min planes cannot un-shrink lazily, so while
+  ``graph.del_epoch > label_del_epoch`` the family is gated off entirely
+  (like DL positives) and repaired at rebuild time by a full re-draw of
+  every dimension from the SAME ``seed`` over the live edge set: under
+  deletion every dimension is churned (min planes are not per-column
+  decomposable the way hashed BL buckets are), and re-deriving from the
+  seed keeps delta rebuilds bitwise equal to full ones.
+
+Ranks are a deterministic function of (seed, n_cap, dim) — all fixed for
+an index's lifetime — so rebuilds, the replicated/sharded twins, and the
+differential oracles all see identical planes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import families as F
+from . import graph as G
+from . import propagate as P
+
+#: Ranks are drawn from (-2^30, 2^30) so negation never overflows int32
+#: and the int32-max MIN identity is never a real rank.
+_RANK_BOUND = 2 ** 30
+
+
+def dim_of(plane: jax.Array) -> int:
+    """Interval dimensions per direction encoded in a (n_cap, 2*dim) plane."""
+    return plane.shape[-1] // 2
+
+
+def rank_plane(n_cap: int, dim: int, seed) -> jax.Array:
+    """(n_cap, 2*dim) int32 Alg-1 seed plane ``[r | -r]`` — every vertex's
+    interval starts degenerate at its own ranks and only coarsens."""
+    r = jax.random.randint(jax.random.PRNGKey(seed), (n_cap, dim),
+                           -_RANK_BOUND, _RANK_BOUND, dtype=jnp.int32)
+    return jnp.concatenate([r, -r], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("n_cap", "dim", "max_iters"))
+def build_il(g, *, n_cap: int, dim: int, seed, max_iters: int = 256):
+    """Alg-1 analogue: two min fixpoints over the live edge set from the
+    degenerate rank seeds.  Returns (il_in, il_out, iters (2,)); ``iters``
+    reports ``max_iters + 1`` on truncation exactly like the OR planes, so
+    the index's saturation machinery covers this family too."""
+    base = rank_plane(n_cap, dim, seed)
+    live = G.edge_mask(g)
+    frontier = jnp.ones((n_cap,), jnp.bool_)
+    il_in, it0 = P.propagate(base, g.src, g.dst, live, frontier,
+                             n_cap=n_cap, monoid="min", max_iters=max_iters)
+    il_out, it1 = P.propagate(base, g.src, g.dst, live, frontier,
+                              n_cap=n_cap, monoid="min", max_iters=max_iters,
+                              reverse=True)
+    return il_in, il_out, jnp.stack([it0, it1])
+
+
+def insert_update_il(g2, il_in, il_out, new_src, new_dst, *, n_cap: int,
+                     max_iters: int = 256):
+    """Alg-3 analogue for the interval family; ``g2`` already contains the
+    new edges.  Seeding mirrors ``update.insert_seeds``'s role swap under
+    the MIN monoid: edge (u, v) hands u's ancestor mins to v
+    (``in[v] ← min(in[v], in[u])``) and v's reach mins to u
+    (``out[u] ← min(out[u], out[v])``); the fixpoint then pushes only from
+    rows the seeding actually lowered.  Traceable (un-jitted) so the
+    serving engine can fuse it behind its graph-extending insert."""
+    live = G.edge_mask(g2)
+    seeded_in, fr_in = P.seed_scatter_min(il_in, il_in[new_src], new_dst,
+                                          n_cap)
+    il_in2, it0 = P.propagate(seeded_in, g2.src, g2.dst, live, fr_in,
+                              n_cap=n_cap, monoid="min",
+                              max_iters=max_iters)
+    seeded_out, fr_out = P.seed_scatter_min(il_out, il_out[new_dst],
+                                            new_src, n_cap)
+    il_out2, it1 = P.propagate(seeded_out, g2.src, g2.dst, live, fr_out,
+                               n_cap=n_cap, monoid="min",
+                               max_iters=max_iters, reverse=True)
+    return il_in2, il_out2, jnp.stack([it0, it1])
+
+
+def il_negative(ilo_u, ilo_v, ili_u, ili_v):
+    """(Q,) bool containment violation from gathered (Q, 2*dim) rows.
+
+    Shared by the jnp verdict algebra, the kernel references, and the BFS
+    admit planes so every path prunes the identical lane set.  Padding
+    lanes gather whatever row the clamp lands on, but pad lanes are
+    self-queries (``same`` wins as a positive) — same discipline as BL."""
+    return (jnp.any(ilo_u > ilo_v, axis=-1)
+            | jnp.any(ili_v > ili_u, axis=-1))
+
+
+F.register(F.LabelFamily(
+    name="il", monoid="min", plane_dtype="int32", verdict="negative",
+    while_dirty="none", fused_core=False, packable=False,
+    plane_width=staticmethod(lambda dim: 2 * dim),
+    seed_plane=rank_plane, build=build_il,
+    insert_update=insert_update_il,
+    # delta repair == full re-derivation from the same seed over live
+    # edges: every dimension is churned under deletion, and determinism
+    # in (seed, n_cap, dim) makes delta bitwise equal to full
+    rebuild=build_il,
+    negative=il_negative))

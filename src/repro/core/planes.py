@@ -58,7 +58,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import bitset
 from . import query as Q
-from .propagate import check_plane_repr
+from .propagate import _INT_MAX, check_plane_repr
 from .select import leaf_hash
 
 #: the mesh axis vertex-sharded planes are partitioned along
@@ -485,6 +485,64 @@ def _halo_propagate_impl(x, frontier, live, e_slot, e_recv, e_gid, e_valid,
               h_send, h_valid)
 
 
+@functools.partial(jax.jit, static_argnames=("mesh", "max_iters"))
+def _halo_propagate_min_impl(x, frontier, live, e_slot, e_recv, e_gid,
+                             e_valid, h_send, h_valid, *, mesh: Mesh,
+                             max_iters: int):
+    """MIN-monoid twin of ``_halo_propagate_impl`` for int32 rank planes
+    (the "il" plug-in family).  Same round structure and frontier
+    evolution; the identity element flips from 0 to int32 max — inactive
+    contributions travel as ``_INT_MAX`` so ``segment_min`` drops them,
+    exactly as in ``propagate._step_min``."""
+    ax, plane_sp, vec_sp, rep = _vspecs(mesh)
+    d = int(mesh.devices.size)
+    n_cap, kf = x.shape
+    n_loc = n_cap // d
+    H = h_send.shape[2]
+
+    def shard_body(x, fr, live, e_slot, e_recv, e_gid, e_valid, hs, hv):
+        e_slot, e_recv, e_gid, e_valid = (a[0] for a in
+                                          (e_slot, e_recv, e_gid, e_valid))
+        hs, hv = hs[0], hv[0]
+
+        def body(state):
+            x, fr, it = state
+            # boundary frontier rows only; non-frontier boundary rows
+            # travel as int32 max (no-ops under MIN)
+            sf = hv & fr[hs]                               # (d, H)
+            sr = jnp.where(sf[..., None], x[hs], _INT_MAX)
+            rf = jax.lax.all_to_all(sf, ax, 0, 0)
+            rr = jax.lax.all_to_all(sr, ax, 0, 0)
+            comb = jnp.concatenate([x, rr.reshape(d * H, kf)], axis=0)
+            frc = jnp.concatenate([fr, rf.reshape(d * H)], axis=0)
+            active = frc[e_slot] & live[e_gid] & e_valid
+            contrib = jnp.where(active[:, None], comb[e_slot], _INT_MAX)
+            agg = jax.ops.segment_min(contrib, e_recv, num_segments=n_loc)
+            new = jnp.minimum(x, agg)
+            return new, jnp.any(new != x, axis=-1), it + 1
+
+        def cond(state):
+            _, fr, it = state
+            alive = jax.lax.psum(fr.sum().astype(jnp.int32), ax) > 0
+            return alive & (it < max_iters)
+
+        x, fr, it = jax.lax.while_loop(cond, body,
+                                       (x, fr.astype(jnp.bool_),
+                                        jnp.int32(0)))
+        trunc = jax.lax.psum(fr.sum().astype(jnp.int32), ax) > 0
+        iters = jnp.where(trunc, jnp.int32(max_iters + 1), it)
+        return x, iters
+
+    sm = shard_map(
+        shard_body, mesh=mesh, check_rep=False,
+        in_specs=(plane_sp, vec_sp, rep,
+                  plane_sp, plane_sp, plane_sp, plane_sp,
+                  P(ax, None, None), P(ax, None, None)),
+        out_specs=(plane_sp, rep))
+    return sm(x, frontier, live, e_slot, e_recv, e_gid, e_valid,
+              h_send, h_valid)
+
+
 @functools.partial(jax.jit, static_argnames=("mesh", "max_iters", "k"))
 def _halo_propagate_packed_impl(xw, frontier, live, e_slot, e_recv, e_gid,
                                 e_valid, e_start, e_tail, h_send, h_valid,
@@ -546,9 +604,9 @@ def _halo_propagate_packed_impl(xw, frontier, live, e_slot, e_recv, e_gid,
 
 def halo_propagate(plan: ShardPlan, x: jax.Array, frontier: jax.Array,
                    live: jax.Array, *, reverse: bool = False,
-                   max_iters: int = 256,
+                   max_iters: int = 256, monoid: str = "or",
                    plane_repr: str = "bool") -> tuple[jax.Array, jax.Array]:
-    """Vertex-sharded twin of ``propagate.propagate`` (OR monoid).
+    """Vertex-sharded twin of ``propagate.propagate``.
 
     Same contract: returns (labels, iters) with ``iters = max_iters + 1``
     when the loop was cut off with the (global) frontier still non-empty.
@@ -560,9 +618,22 @@ def halo_propagate(plan: ShardPlan, x: jax.Array, frontier: jax.Array,
     packed shard-locally (``PlaneStore.pack_rows`` is row-parallel, so the
     words inherit the rows' sharding), halo rows cross the mesh as uint32
     words (32x less boundary traffic), and the result unpacks back to the
-    caller's dtype — bitwise equal to the bool path."""
+    caller's dtype — bitwise equal to the bool path.
+
+    ``monoid="min"`` relaxes int32 rank planes (the "il" plug-in family)
+    with ``_halo_propagate_min_impl``; like the replicated engine it has
+    no packed form (min planes are ranks, not bit lanes)."""
     check_plane_repr(plane_repr)
+    if monoid not in ("or", "min"):
+        raise ValueError(f"unknown monoid {monoid!r}")
     dp = plan.bwd if reverse else plan.fwd
+    if monoid == "min":
+        if plane_repr == "packed":
+            raise ValueError(
+                "plane_repr='packed' supports the OR monoid only")
+        return _halo_propagate_min_impl(
+            x, frontier, live, dp.e_slot, dp.e_recv, dp.e_gid, dp.e_valid,
+            dp.h_send, dp.h_valid, mesh=plan.mesh, max_iters=max_iters)
     if plane_repr == "packed":
         k = x.shape[1]
         xw = PlaneStore.pack_rows(x)
@@ -605,6 +676,75 @@ def sharded_seed_scatter(x: jax.Array, at_src: jax.Array, at_dst: jax.Array,
                    out_specs=(plane_sp, vec_sp))
     return sm(x, jnp.asarray(at_src, jnp.int32),
               jnp.asarray(at_dst, jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("mesh",))
+def sharded_seed_scatter_min(x: jax.Array, at_src: jax.Array,
+                             at_dst: jax.Array, *, mesh: Mesh
+                             ) -> tuple[jax.Array, jax.Array]:
+    """MIN twin of ``sharded_seed_scatter`` for int32 rank planes: take
+    ``min(x[at_dst[i]], x[at_src[i]])`` row-wise.  The psum row gather is
+    exact for any-sign int32 because each source row has exactly one owner
+    shard (everyone else contributes zeros); rows whose *destination* is
+    out of range (padding) are dropped by the scatter, so the zero-filled
+    rows of out-of-range sources never land anywhere."""
+    ax, plane_sp, vec_sp, rep = _vspecs(mesh)
+    d = int(mesh.devices.size)
+    n_loc = x.shape[0] // d
+
+    def shard_body(x, ns, nd):
+        lo = jax.lax.axis_index(ax).astype(jnp.int32) * n_loc
+        src_local = (ns >= lo) & (ns < lo + n_loc)
+        rows = jnp.where(src_local[:, None],
+                         x[jnp.clip(ns - lo, 0, n_loc - 1)], 0)
+        rows = jax.lax.psum(rows, ax)
+        owned = (nd >= lo) & (nd < lo + n_loc)
+        ldst = jnp.where(owned, nd - lo, n_loc)   # n_loc => dropped
+        new = x.at[ldst].min(rows, mode="drop")
+        return new, jnp.any(new != x, axis=-1)
+
+    sm = shard_map(shard_body, mesh=mesh, check_rep=False,
+                   in_specs=(plane_sp, rep, rep),
+                   out_specs=(plane_sp, vec_sp))
+    return sm(x, jnp.asarray(at_src, jnp.int32),
+              jnp.asarray(at_dst, jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("mesh",))
+def sharded_il_rows(il, u: jax.Array, v: jax.Array, *, mesh: Mesh):
+    """All-gather-free row reconstruction for the interval verdict path:
+    ``(il_out[u], il_out[v], il_in[u], il_in[v])`` as four (Q, 2*dim)
+    int32 blocks, rebuilt everywhere from row-sharded planes with ONE
+    ``psum`` per batch — the int32 twin of ``sharded_rows``.  The psum is
+    exact for any-sign ranks because every in-range row has exactly one
+    owner shard.  Out-of-range ids (the engine's dead-lane sentinel
+    ``n_cap``) come back as all-zero rows; ``0 > 0`` never holds, so dead
+    lanes never prune — and their verdicts are decided by the ``same``
+    term anyway, exactly as on the replicated path."""
+    il_in, il_out = il
+    ax, plane_sp, _, rep = _vspecs(mesh)
+    d = int(mesh.devices.size)
+    n_loc = il_in.shape[0] // d
+
+    def shard_body(il_in, il_out, u, v):
+        lo = jax.lax.axis_index(ax).astype(jnp.int32) * n_loc
+
+        def take(plane, idx):
+            local = (idx >= lo) & (idx < lo + n_loc)
+            rows = plane[jnp.clip(idx - lo, 0, n_loc - 1)]
+            return jnp.where(local[:, None], rows, 0)
+
+        blocks = (take(il_out, u), take(il_out, v),
+                  take(il_in, u), take(il_in, v))
+        cat = jax.lax.psum(jnp.concatenate(blocks, axis=1), ax)
+        w = il_in.shape[1]
+        return tuple(cat[:, i * w:(i + 1) * w] for i in range(4))
+
+    sm = shard_map(shard_body, mesh=mesh, check_rep=False,
+                   in_specs=(plane_sp, plane_sp, rep, rep),
+                   out_specs=(rep,) * 4)
+    return sm(il_in, il_out, jnp.asarray(u, jnp.int32),
+              jnp.asarray(v, jnp.int32))
 
 
 @functools.partial(jax.jit, static_argnames=("mesh",))

@@ -225,3 +225,17 @@ def seed_scatter_or(base: jax.Array, values: jax.Array, at: jax.Array,
     new = jnp.maximum(base, seed)
     frontier = jnp.any(new != base, axis=-1)
     return new, frontier
+
+
+def seed_scatter_min(base: jax.Array, values: jax.Array, at: jax.Array,
+                     n_cap: int) -> tuple[jax.Array, jax.Array]:
+    """MIN twin of ``seed_scatter_or`` for int32 interval planes: take
+    ``min(base[at[i]], values[i])`` row-wise.  ``segment_min`` fills empty
+    segments with int32 max — the MIN identity — so untouched rows come out
+    unchanged and off the frontier.  No packed form (min planes are int32
+    ranks, not bit lanes)."""
+    seed = jax.ops.segment_min(values.astype(base.dtype), at,
+                               num_segments=n_cap)
+    new = jnp.minimum(base, seed)
+    frontier = jnp.any(new != base, axis=-1)
+    return new, frontier

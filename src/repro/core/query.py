@@ -23,6 +23,7 @@ import numpy as np
 
 from . import bitset
 from .graph import Graph, edge_mask
+from .interval import il_negative
 
 
 class PackedLabels(NamedTuple):
@@ -62,6 +63,20 @@ def gather_rows(p: PackedLabels, u: jax.Array, v: jax.Array) -> RowBlocks:
                      p.bl_in[u], p.bl_in[v], p.bl_out[v], p.bl_out[u])
 
 
+def gather_il_rows(il, u: jax.Array, v: jax.Array):
+    """The four (Q, 2*dim) interval rows the "il" plug-in family's
+    containment prune reads (``None`` in → ``None`` out): the row-block
+    discipline of :class:`RowBlocks` extended to the registry's first
+    negative-prune plug-in, so the vertex-sharded path can psum-reconstruct
+    these alongside the eight core rows (``core.planes.sharded_il_rows``).
+
+    ``il`` is the index's ``(il_in, il_out)`` operand pytree."""
+    if il is None:
+        return None
+    il_in, il_out = il
+    return (il_out[u], il_out[v], il_in[u], il_in[v])
+
+
 def verdict_parts_rows(r: RowBlocks):
     """(pos_lbl, bl_neg, thm) boolean evidence masks behind the four rules,
     computed from gathered row blocks.
@@ -91,9 +106,18 @@ def _verdict_parts(p: PackedLabels, u: jax.Array, v: jax.Array):
 
 
 @jax.jit
-def label_verdicts(p: PackedLabels, u: jax.Array, v: jax.Array) -> jax.Array:
-    """(Q,) int8 verdicts from labels only (Alg 2 lines 6-13)."""
+def label_verdicts(p: PackedLabels, u: jax.Array, v: jax.Array,
+                   il=None) -> jax.Array:
+    """(Q,) int8 verdicts from labels only (Alg 2 lines 6-13).
+
+    ``il`` is the optional ``(il_in, il_out)`` interval-family operand: its
+    containment violations join the negative rules (a plug-in negative
+    prune, same soundness slot as Lemma 2).  ``None`` (the fused-core
+    default) traces the exact pre-registry program — no leaves, no
+    operands, bitwise-identical verdicts."""
     pos_lbl, bl_neg, thm = _verdict_parts(p, u, v)
+    if il is not None:
+        bl_neg = bl_neg | il_negative(*gather_il_rows(il, u, v))
     pos = pos_lbl | (u == v)
     neg = ~pos & (bl_neg | thm)
     return jnp.where(pos, jnp.int8(1), jnp.where(neg, jnp.int8(0), jnp.int8(-1)))
@@ -116,7 +140,7 @@ def dirty_label_verdicts(p: PackedLabels, u: jax.Array, v: jax.Array
 
 def cut_verdicts(p: PackedLabels, u: jax.Array, v: jax.Array,
                  m_cut: jax.Array, m_total: jax.Array,
-                 d_fresh: jax.Array | bool) -> jax.Array:
+                 d_fresh: jax.Array | bool, il=None) -> jax.Array:
     """(Q,) int8 verdicts with BOTH staleness cutoffs applied — the traceable
     jnp twin of the ``dbl_query`` kernel's cutoff path:
 
@@ -127,26 +151,62 @@ def cut_verdicts(p: PackedLabels, u: jax.Array, v: jax.Array,
       negatives degrade — only self-queries and BL negatives survive.
 
     ``d_fresh`` broadcasts: a scalar (whole dispatch clean/dirty) or (Q,).
+    ``il`` is the optional ``(il_in, il_out)`` interval operand.
     """
     return cut_verdicts_rows(gather_rows(p, u, v), u, v, m_cut, m_total,
-                             d_fresh)
+                             d_fresh, il_rows=gather_il_rows(il, u, v))
 
 
 def cut_verdicts_rows(r: RowBlocks, u: jax.Array, v: jax.Array,
                       m_cut: jax.Array, m_total: jax.Array,
-                      d_fresh: jax.Array | bool) -> jax.Array:
+                      d_fresh: jax.Array | bool,
+                      il_rows=None) -> jax.Array:
     """``cut_verdicts`` from pre-gathered row blocks — the entry point the
     vertex-sharded engine uses after its psum row reconstruction (the rows,
-    not the planes, cross shards)."""
+    not the planes, cross shards).
+
+    ``il_rows`` is ``gather_il_rows``' 4-tuple (or None).  The interval
+    prune is *insert-monotone* (intervals only coarsen under insertions, so
+    a violation at newer planes holds at every older snapshot — the BL
+    argument, no ``m_cut`` gate) but NOT tombstone-sound: while the labels
+    are deletion-stale (``d_fresh`` False) the family contributes nothing,
+    exactly like the DL positives — its term only joins the fresh branch.
+    """
     pos_lbl, bl_neg, thm = verdict_parts_rows(r)
     same = u == v
     d_fresh = jnp.asarray(d_fresh, jnp.bool_)
     m_fresh = m_cut >= m_total
     pos0 = pos_lbl | same
-    neg0 = ~pos0 & (bl_neg | thm)
+    neg_lbl = bl_neg if il_rows is None else bl_neg | il_negative(*il_rows)
+    neg0 = ~pos0 & (neg_lbl | thm)
     pos = (pos_lbl & m_fresh & d_fresh) | same
     neg = jnp.where(d_fresh, neg0, ~same & bl_neg)
     return jnp.where(pos, jnp.int8(1), jnp.where(neg, jnp.int8(0), jnp.int8(-1)))
+
+
+def verdict_counts(verd: jax.Array, r: RowBlocks,
+                   il_rows=None) -> jax.Array:
+    """(4,) int32 per-family prune attribution [dl⁺, bl⁻, il⁻, thm⁻] for one
+    verdict batch — the label-phase half of ``EngineStats.prune_hits``.
+
+    Each resolved lane is charged to exactly one family, in the order the
+    fused verdict evaluates its evidence: positives to DL (self-query pad
+    lanes are the caller's to subtract — the engine knows its pad count),
+    negatives to BL containment first, then the interval containment, then
+    the theorem-1/2 rules.  Unknown lanes are counted by the caller when
+    they resolve through the BFS residue."""
+    _, bl_neg, _ = verdict_parts_rows(r)
+    if il_rows is None:
+        il_neg = jnp.zeros_like(bl_neg)
+    else:
+        il_neg = il_negative(*il_rows)
+    neg = verd == jnp.int8(0)
+    return jnp.stack([
+        jnp.sum(verd == jnp.int8(1)),
+        jnp.sum(neg & bl_neg),
+        jnp.sum(neg & ~bl_neg & il_neg),
+        jnp.sum(neg & ~bl_neg & ~il_neg),
+    ]).astype(jnp.int32)
 
 
 #: per-lane edge-count-cutoff sentinel that is >= any reachable edge count,
@@ -194,10 +254,12 @@ def label_stats(p: PackedLabels, u: jax.Array, v: jax.Array) -> dict:
 
 
 def _admit_plane(p: PackedLabels, u: jax.Array, v: jax.Array,
-                 n_cap: int, dl_on: jax.Array | None = None) -> jax.Array:
+                 n_cap: int, dl_on: jax.Array | None = None,
+                 il=None, il_on: jax.Array | None = None) -> jax.Array:
     """(n_cap, Qc) bool — vertices x admissible in query q's BFS.
 
-    admit = BL_Contain(x, v_q) ∧ ¬DL_Intersec(u_q, x)   (Alg 2 lines 20/22).
+    admit = BL_Contain(x, v_q) ∧ ¬DL_Intersec(u_q, x)   (Alg 2 lines 20/22),
+    further ∧ ¬IL_Violate(x, v_q) when the interval family is enabled.
 
     ``dl_on`` (Qc,) bool gates the DL-intersection prune per lane.  The BL
     containment prune is *monotone-safe*: labels only gain bits under
@@ -206,13 +268,27 @@ def _admit_plane(p: PackedLabels, u: jax.Array, v: jax.Array,
     with newer BL labels never cuts a true old-snapshot path.  The DL prune
     is not (its soundness argument runs through the lane's verdict being
     non-positive *at the label snapshot*), so epoch-stale lanes disable it.
+
+    ``il`` (il_in, il_out) adds the interval containment test per vertex:
+    x on a live path to v_q implies interval containment, so a violation
+    prunes x from lane q.  Like BL it is insert-monotone (no per-lane
+    epoch gate), but it is NOT deletion-sound, so ``il_on`` (scalar or
+    (Qc,)) gates it off for tombstone-dirty dispatches.
     """
     c1 = bitset.subset(p.bl_in[:, None, :], p.bl_in[v][None, :, :])
     c2 = bitset.subset(p.bl_out[v][None, :, :], p.bl_out[:, None, :])
     d = bitset.intersect_any(p.dl_out[u][None, :, :], p.dl_in[:, None, :])
     if dl_on is not None:
         d = d & dl_on[None, :]
-    return c1 & c2 & ~d
+    admit = c1 & c2 & ~d
+    if il is not None:
+        il_in, il_out = il
+        bad = (jnp.any(il_out[:, None, :] > il_out[v][None, :, :], axis=-1)
+               | jnp.any(il_in[v][None, :, :] > il_in[:, None, :], axis=-1))
+        if il_on is not None:
+            bad = bad & jnp.broadcast_to(il_on, bad.shape[-1:])[None, :]
+        admit = admit & ~bad
+    return admit
 
 
 #: dtypes selectable for the BFS frontier planes (``pruned_bfs`` and the
@@ -229,7 +305,8 @@ FRONTIER_DTYPES = {"int8": jnp.int8, "int32": jnp.int32,
                    "packed": jnp.uint32}
 
 
-def _pruned_bfs_packed(g, p, u, v, admit, m_cut, dl_on, *, n_cap, max_iters):
+def _pruned_bfs_packed(g, p, u, v, admit, m_cut, dl_on, il=None, il_on=None,
+                       *, n_cap, max_iters):
     """Word-packed BFS lanes: (n_cap, Wq) uint32 planes, Wq = ceil(Qc/32).
 
     Identical round structure to the lane-wise loop — gather frontier words
@@ -241,7 +318,7 @@ def _pruned_bfs_packed(g, p, u, v, admit, m_cut, dl_on, *, n_cap, max_iters):
     lane_mask = bitset.pad_mask(qc)                    # (Wq,)
     live = edge_mask(g)
     if admit is None:
-        admit = _admit_plane(p, u, v, n_cap, dl_on)
+        admit = _admit_plane(p, u, v, n_cap, dl_on, il, il_on)
     elif admit.dtype != jnp.bool_:
         admit = admit > 0
     admit_w = bitset.pack(admit)                       # (n_cap, Wq)
@@ -288,6 +365,7 @@ def pruned_bfs(g: Graph, p: PackedLabels, u: jax.Array, v: jax.Array,
                admit: jax.Array | None = None,
                m_cut: jax.Array | None = None,
                dl_clean: jax.Array | None = None,
+               il=None,
                *, n_cap: int, max_iters: int = 256,
                frontier_dtype: str = "int8") -> jax.Array:
     """(Qc,) bool — resolve unknown queries by label-pruned BFS lanes.
@@ -322,6 +400,11 @@ def pruned_bfs(g: Graph, p: PackedLabels, u: jax.Array, v: jax.Array,
     minimum, so the frontier re-binarizes with ``> 0`` rather than a cast).
     "packed" packs the lane axis into uint32 words and runs the whole loop
     on (n_cap, ceil(Qc/32)) word planes — 32 lanes per gather/reduce element.
+
+    ``il`` (il_in, il_out) threads the interval family's containment prune
+    into the admit plane.  It is insert-monotone like BL (no per-lane
+    ``m_cut`` gate) but not deletion-sound, so it shares the ``dl_clean``
+    tombstone gate — a dirty dispatch drops it for every lane.
     """
     ftype = FRONTIER_DTYPES[frontier_dtype]
     qc = u.shape[0]
@@ -332,11 +415,13 @@ def pruned_bfs(g: Graph, p: PackedLabels, u: jax.Array, v: jax.Array,
     else:
         eids = jnp.arange(g.src.shape[0], dtype=jnp.int32)
         dl_on = (m_cut >= g.m) & clean
+    il_on = None if (il is None or dl_clean is None) \
+        else jnp.broadcast_to(clean, u.shape)
     if frontier_dtype == "packed":
-        return _pruned_bfs_packed(g, p, u, v, admit, m_cut, dl_on,
+        return _pruned_bfs_packed(g, p, u, v, admit, m_cut, dl_on, il, il_on,
                                   n_cap=n_cap, max_iters=max_iters)
     if admit is None:
-        admit = _admit_plane(p, u, v, n_cap, dl_on)  # (n_cap, Qc)
+        admit = _admit_plane(p, u, v, n_cap, dl_on, il, il_on)  # (n_cap, Qc)
     elif admit.dtype != jnp.bool_:
         # kernel-supplied admit planes may arrive int8 (same narrow-plane
         # rationale); re-binarize once before the loop
@@ -373,7 +458,7 @@ def pruned_bfs(g: Graph, p: PackedLabels, u: jax.Array, v: jax.Array,
 
 def query(g: Graph, p: PackedLabels, u, v, *, n_cap: int,
           bfs_chunk: int = 64, max_iters: int = 256,
-          return_stats: bool = False, dirty: bool = False):
+          return_stats: bool = False, dirty: bool = False, il=None):
     """Full Alg 2 over a query batch — the HOST-SIDE reference driver.
 
     Materializes verdicts on the host, slices unknowns with numpy, and
@@ -385,11 +470,18 @@ def query(g: Graph, p: PackedLabels, u, v, *, n_cap: int,
     un-rebuilt deletions, so only self-positives and BL negatives answer
     from labels, everything else rides the live-edge BFS with the DL prune
     disabled (tombstoned edges are masked out of traversal either way).
+
+    ``il`` threads the interval family's planes through both phases; the
+    dirty path drops them entirely (while_dirty="none" — the family
+    contributes nothing until the rebuild repairs it).
     """
     u = jnp.asarray(u, jnp.int32)
     v = jnp.asarray(v, jnp.int32)
-    verd_fn = dirty_label_verdicts if dirty else label_verdicts
-    verdicts = np.asarray(verd_fn(p, u, v))
+    if dirty:
+        verdicts = np.asarray(dirty_label_verdicts(p, u, v))
+        il = None
+    else:
+        verdicts = np.asarray(label_verdicts(p, u, v, il=il))
     answers = verdicts == 1
     unknown = np.flatnonzero(verdicts == -1)
     dl_clean = None if not dirty else jnp.asarray(False)
@@ -398,7 +490,7 @@ def query(g: Graph, p: PackedLabels, u, v, *, n_cap: int,
         pad = bfs_chunk - idx.size
         uu = jnp.asarray(np.pad(np.asarray(u)[idx], (0, pad)), jnp.int32)
         vv = jnp.asarray(np.pad(np.asarray(v)[idx], (0, pad)), jnp.int32)
-        hit = np.asarray(pruned_bfs(g, p, uu, vv, dl_clean=dl_clean,
+        hit = np.asarray(pruned_bfs(g, p, uu, vv, dl_clean=dl_clean, il=il,
                                     n_cap=n_cap, max_iters=max_iters))
         answers[idx] = hit[:idx.size]
     if return_stats:

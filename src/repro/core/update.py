@@ -82,6 +82,22 @@ def insert_and_update(g: G.Graph,
     return g2, dl_in2, dl_out2, bl_in2, bl_out2, iters, epoch2
 
 
+@functools.partial(jax.jit, static_argnames=("family", "n_cap", "max_iters"))
+def insert_update_plugin(family: str, g2: G.Graph, p_in, p_out,
+                         new_src: jax.Array, new_dst: jax.Array,
+                         *, n_cap: int, max_iters: int = 256):
+    """Alg-3 maintenance for one plug-in label family (``core.families``
+    registry): dispatches to the family's ``insert_update`` hook under one
+    jit (one executable per (family, plane shapes)).  ``g2`` must already
+    contain the new edges — run this AFTER ``insert_and_update``, whose
+    7-tuple contract is deliberately left untouched.  Returns
+    (p_in', p_out', iters)."""
+    from . import families as F
+    fam = F.get(family)
+    return fam.insert_update(g2, p_in, p_out, new_src, new_dst,
+                             n_cap=n_cap, max_iters=max_iters)
+
+
 def saturated(iters: jax.Array, max_iters: int) -> jax.Array:
     """() bool — True when any label plane's fixpoint was cut off at
     ``max_iters`` without converging (``propagate`` reports a truncated run

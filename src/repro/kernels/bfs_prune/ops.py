@@ -19,6 +19,7 @@ def admit_plane(p: PackedLabels, u: jax.Array, v: jax.Array,
                 m_total: jax.Array | None = None,
                 d_cut: jax.Array | None = None,
                 d_total: jax.Array | None = None,
+                il=None, il_on: jax.Array | None = None,
                 *, n_block: int = 1024, q_block: int = 128,
                 interpret: bool = True,
                 out_dtype=jnp.bool_, streaming: bool = False) -> jax.Array:
@@ -34,6 +35,13 @@ def admit_plane(p: PackedLabels, u: jax.Array, v: jax.Array,
     ``streaming=True`` routes to the double-buffered grid-free kernel
     (explicit HBM→VMEM copy pipeline over the vertex axis; ``q_block``
     only pads the query axis there — the tile spans the full width).
+
+    ``il`` = (il_in, il_out) folds the interval plug-in family's
+    containment prune into the plane as an elementwise AND *around* the
+    kernel output (the bit-plane kernels keep their word layout; XLA fuses
+    the int32 sweep into the surrounding program).  ``il_on`` (() or (Qc,)
+    bool) gates it — the engine passes its tombstone-clean flag, because
+    interval negatives are insert-monotone but not deletion-sound.
     """
     n = p.bl_in.shape[0]
     q = u.shape[0]
@@ -62,4 +70,12 @@ def admit_plane(p: PackedLabels, u: jax.Array, v: jax.Array,
                               blin_v, blout_v, dlo_u, cut, tot, dcut, dtot,
                               n_block=n_block, q_block=q_block,
                               interpret=interpret)
-    return out[:n, :q].astype(out_dtype)
+    out = out[:n, :q]
+    if il is not None:
+        il_in, il_out = il
+        bad = (jnp.any(il_out[:, None, :] > il_out[v][None, :, :], axis=-1)
+               | jnp.any(il_in[v][None, :, :] > il_in[:, None, :], axis=-1))
+        if il_on is not None:
+            bad = bad & jnp.broadcast_to(il_on, (q,))[None, :]
+        out = ((out > 0) & ~bad) if out.dtype != jnp.bool_ else (out & ~bad)
+    return out.astype(out_dtype)

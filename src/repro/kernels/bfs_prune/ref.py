@@ -6,6 +6,7 @@ import jax.numpy as jnp
 
 def admit_ref(blin_all, blout_all, dlin_all, blin_v, blout_v, dlo_u,
               m_cut=None, m_total=None, d_cut=None, d_total=None,
+              il_rows=None, il_on=None,
               out_dtype=jnp.bool_):
     """Inputs word-major: *_all (W, n); per-query (W, Q). -> (n, Q)
     ``out_dtype`` (bool default; ``jnp.int8`` matches the kernel's narrow
@@ -26,6 +27,14 @@ def admit_ref(blin_all, blout_all, dlin_all, blin_v, blout_v, dlo_u,
     ``d_cut`` (Q,) or (1, Q) int32 per-lane tombstone cutoff with
     ``d_total`` scalar/(1, 1): deletion-stale lanes (d_cut < d_total) drop
     the DL term as well — its evidence may certify tombstoned paths.
+
+    ``il_rows`` = (ilo_all (2d, n), ili_all (2d, n), ilo_v (2d, Q),
+    ili_v (2d, Q)) int32 interval-rank streams of the "il" plug-in family:
+    vertex x is additionally pruned from lane q on any containment
+    violation against v_q (insert-monotone, so no m-cut gating); ``il_on``
+    (() or (Q,) bool) is the tombstone-clean gate — this mirrors the
+    ops-level composition, where the interval AND wraps the bit-plane
+    kernel rather than living inside it.
     """
     z = jnp.uint32(0)
     c1 = jnp.all((blin_all[:, :, None] & ~blin_v[:, None, :]) == z, axis=0)
@@ -36,4 +45,12 @@ def admit_ref(blin_all, blout_all, dlin_all, blin_v, blout_v, dlo_u,
         if d_cut is not None:
             fresh = fresh & (jnp.ravel(d_cut) >= jnp.ravel(d_total)[0])
         d = d & fresh[None, :]
-    return (c1 & c2 & ~d).astype(out_dtype)
+    admit = c1 & c2 & ~d
+    if il_rows is not None:
+        ilo_all, ili_all, ilo_v, ili_v = il_rows
+        bad = (jnp.any(ilo_all[:, :, None] > ilo_v[:, None, :], axis=0)
+               | jnp.any(ili_v[:, None, :] > ili_all[:, :, None], axis=0))
+        if il_on is not None:
+            bad = bad & jnp.broadcast_to(il_on, bad.shape[-1:])[None, :]
+        admit = admit & ~bad
+    return admit.astype(out_dtype)

@@ -32,9 +32,15 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _make_kernel(with_cut: bool, with_del: bool):
+def _make_kernel(with_cut: bool, with_del: bool, with_il: bool = False):
     def kernel(dlo_u, dli_v, dlo_v, dli_u,
                blin_u, blin_v, blout_u, blout_v, same, *rest):
+        rest = list(rest)
+        if with_il:
+            # four (2*dim, QB) int32 interval-rank streams, word-major like
+            # the label words: queries on lanes, interval ends on sublanes
+            ilo_u, ilo_v, ili_u, ili_v = rest[:4]
+            rest = rest[4:]
         if with_del:
             m_cut, m_total, d_cut, d_total, out = rest
         elif with_cut:
@@ -50,7 +56,16 @@ def _make_kernel(with_cut: bool, with_del: bool):
         thm1 = jnp.any((dlo_v[...] & dli_u[...]) != z, axis=0)
         thm2 = (jnp.any((dlo_u[...] & dli_u[...]) != z, axis=0)
                 | jnp.any((dlo_v[...] & dli_v[...]) != z, axis=0))
-        neg = ~pos & (bl_neg | thm1 | thm2)
+        neg_lbl = bl_neg
+        if with_il:
+            # interval containment violation (plug-in negative prune):
+            # pure elementwise greater-than sweep over the rank sublanes.
+            # Insert-monotone like BL, so it skips the m-cut; it joins ONLY
+            # the d-fresh branch below (contributes nothing while dirty).
+            # Padding lanes carry rank 0 on both sides: 0 > 0 never prunes.
+            neg_lbl = neg_lbl | jnp.any(ilo_u[...] > ilo_v[...], axis=0) \
+                | jnp.any(ili_v[...] > ili_u[...], axis=0)
+        neg = ~pos & (neg_lbl | thm1 | thm2)
         if with_cut:
             # per-lane edge-count cutoff: a positive proven only by labels
             # NEWER than the lane's snapshot (stale lane) may ride edges the
@@ -79,10 +94,19 @@ def _make_kernel(with_cut: bool, with_del: bool):
 def dbl_query_verdicts(dlo_u, dli_v, dlo_v, dli_u,
                        blin_u, blin_v, blout_u, blout_v, same,
                        m_cut=None, m_total=None, d_cut=None, d_total=None,
+                       il_rows=None,
                        *, q_block: int = 512, interpret: bool = True):
     """All label args (W, Q) uint32 word-major; same (Q,) int32. -> (Q,) int32.
 
     Q must be a multiple of q_block (callers pad; see ops.py).
+
+    Optional ``il_rows`` = (ilo_u, ilo_v, ili_u, ili_v), four (2*dim, Q)
+    int32 word-major interval-rank streams of the "il" plug-in family:
+    containment violations join the negative rules in-kernel (the fused
+    verdict stays one pass; +4·2·dim words per query of extra traffic).
+    Like BL the interval prune skips the edge-count cutoff
+    (insert-monotone), and like DL positives it is dropped entirely on
+    tombstone-stale lanes (``d_cut < d_total``).
 
     Optional ``m_cut`` (Q,) int32 per-lane edge-count cutoff + ``m_total``
     (1,) int32 newest edge count: verdicts become valid "as of" each lane's
@@ -120,6 +144,11 @@ def dbl_query_verdicts(dlo_u, dli_v, dlo_v, dli_u,
             blin_u, blin_v, blout_u, blout_v, same]
     with_cut = m_cut is not None
     with_del = d_cut is not None
+    with_il = il_rows is not None
+    if with_il:
+        wi = il_rows[0].shape[0]
+        in_specs += [pl.BlockSpec((wi, q_block), lambda i: (0, i))] * 4
+        args += [r.astype(jnp.int32) for r in il_rows]
     if with_cut:
         in_specs += [pl.BlockSpec((q_block,), lambda i: (i,)),
                      pl.BlockSpec((1,), lambda i: (0,))]
@@ -132,7 +161,7 @@ def dbl_query_verdicts(dlo_u, dli_v, dlo_v, dli_u,
                  jnp.reshape(d_total, (1,)).astype(jnp.int32)]
 
     return pl.pallas_call(
-        _make_kernel(with_cut, with_del),
+        _make_kernel(with_cut, with_del, with_il),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((q_block,), lambda i: (i,)),

@@ -20,6 +20,7 @@ def verdicts_device(p: PackedLabels, u: jax.Array, v: jax.Array,
                     m_total: jax.Array | None = None,
                     d_cut: jax.Array | None = None,
                     d_total: jax.Array | None = None,
+                    il=None,
                     *, q_block: int = 512, interpret: bool = True,
                     out_dtype=jnp.int32, streaming: bool = False
                     ) -> jax.Array:
@@ -34,14 +35,28 @@ def verdicts_device(p: PackedLabels, u: jax.Array, v: jax.Array,
     ``out_dtype=jnp.int8`` emits the engine's narrow verdict lane directly
     (values identical to the int32 path).  ``streaming=True`` routes to the
     double-buffered grid-free kernel (explicit HBM→VMEM copy pipeline,
-    bitwise-identical verdicts)."""
+    bitwise-identical verdicts).
+
+    ``il`` = (il_in, il_out) threads the interval plug-in family: four more
+    (2*dim, Q) int32 rank streams ride into the grid kernel and the
+    containment check fuses into the same pass.  Pad lanes carry rank 0 on
+    both sides of every comparison, so they never prune.  The streamed
+    kernel keeps its fixed 3-operand copy pipeline and rejects IL."""
+    if streaming and il is not None:
+        raise ValueError(
+            "the streamed dbl_query kernel does not take interval-family "
+            "operands; use the grid kernel (streaming=False) with il")
     q = u.shape[0]
     streams = [p.dl_out[u], p.dl_in[v], p.dl_out[v], p.dl_in[u],
                p.bl_in[u], p.bl_in[v], p.bl_out[v], p.bl_out[u]]
     # word-major (W, Q), pad Q to a block multiple
     streams = [_pad_to(s.T, q_block, 1) for s in streams]
     same = _pad_to((u == v).astype(jnp.int32), q_block, 0)
-    cut = tot = dcut = dtot = None
+    cut = tot = dcut = dtot = il_rows = None
+    if il is not None:
+        il_in, il_out = il
+        il_rows = tuple(_pad_to(s.T.astype(jnp.int32), q_block, 1)
+                        for s in (il_out[u], il_out[v], il_in[u], il_in[v]))
     if m_cut is not None:
         cut = _pad_to(m_cut.astype(jnp.int32), q_block, 0, value=FRESH_CUT)
         tot = jnp.asarray(m_total, jnp.int32)
@@ -51,19 +66,26 @@ def verdicts_device(p: PackedLabels, u: jax.Array, v: jax.Array,
     # note arg order: kernel wants (dlo_u, dli_v, dlo_v, dli_u,
     #                               blin_u, blin_v, blout_u, blout_v)
     dlo_u, dli_v, dlo_v, dli_u, blin_u, blin_v, blout_v, blout_u = streams
-    fn = dbl_query_verdicts_streamed if streaming else dbl_query_verdicts
-    out = fn(dlo_u, dli_v, dlo_v, dli_u,
-             blin_u, blin_v, blout_u, blout_v, same,
-             cut, tot, dcut, dtot,
-             q_block=q_block, interpret=interpret)
+    if streaming:
+        out = dbl_query_verdicts_streamed(
+            dlo_u, dli_v, dlo_v, dli_u,
+            blin_u, blin_v, blout_u, blout_v, same,
+            cut, tot, dcut, dtot,
+            q_block=q_block, interpret=interpret)
+    else:
+        out = dbl_query_verdicts(
+            dlo_u, dli_v, dlo_v, dli_u,
+            blin_u, blin_v, blout_u, blout_v, same,
+            cut, tot, dcut, dtot, il_rows,
+            q_block=q_block, interpret=interpret)
     return out[:q].astype(out_dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("q_block", "interpret",
                                              "streaming"))
-def query_verdicts(p: PackedLabels, u: jax.Array, v: jax.Array,
+def query_verdicts(p: PackedLabels, u: jax.Array, v: jax.Array, il=None,
                    *, q_block: int = 512, interpret: bool = True,
                    streaming: bool = False) -> jax.Array:
     """(Q,) int32 verdicts; same contract as core.query.label_verdicts."""
-    return verdicts_device(p, u, v, q_block=q_block, interpret=interpret,
-                           streaming=streaming)
+    return verdicts_device(p, u, v, il=il, q_block=q_block,
+                           interpret=interpret, streaming=streaming)

@@ -86,7 +86,7 @@ import math
 import time
 import warnings
 import weakref
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
@@ -150,6 +150,14 @@ class EngineStats:
     policy_flushes: int = 0   # flushes initiated by the adaptive policy
     stale_lanes: int = 0      # residue lanes resolved across an epoch gap
     saturation_events: int = 0  # inserts whose label fixpoint hit max_iters
+    #: per-family prune attribution over every resolved lane: "dl" counts
+    #: label positives (Lemma 1 + self-queries), "bl"/"il" count negative
+    #: lanes charged to BL containment / interval containment (first
+    #: family whose evidence fires, in fused-verdict evaluation order),
+    #: "thm" the theorem-1/2 negatives, and "bfs" the residue lanes that
+    #: rode a pruned BFS — so sum(prune_hits.values()) == queries.
+    prune_hits: dict = field(default_factory=lambda: {
+        "dl": 0, "bl": 0, "il": 0, "thm": 0, "bfs": 0})
 
     def as_dict(self) -> dict:
         rho = self.label_answered / max(self.queries, 1)
@@ -161,7 +169,8 @@ class EngineStats:
                 "flushes": self.flushes,
                 "policy_flushes": self.policy_flushes,
                 "stale_lanes": self.stale_lanes,
-                "saturation_events": self.saturation_events}
+                "saturation_events": self.saturation_events,
+                "prune_hits": dict(self.prune_hits)}
 
 
 class _Pending:
@@ -174,12 +183,13 @@ class _Pending:
     consume them while the pending is still in flight."""
 
     __slots__ = ("engine", "index", "q", "answers", "order",
-                 "u_c", "v_c", "n_unknown",
+                 "u_c", "v_c", "n_unknown", "counts",
                  "lineage", "epoch", "m_at_submit", "t_submit",
                  "_result", "_nu", "__weakref__")
 
     def __init__(self, engine, index, q, answers, order, u_c, v_c, n_unknown,
-                 lineage=None, epoch=None, m_at_submit=None, t_submit=None):
+                 counts=None, lineage=None, epoch=None, m_at_submit=None,
+                 t_submit=None):
         self.engine = engine
         self.index = index
         self.q = q
@@ -188,6 +198,9 @@ class _Pending:
         self.u_c = u_c
         self.v_c = v_c
         self.n_unknown = n_unknown
+        # (4,) int32 device vector: label-phase [dl+, bl-, il-, thm-]
+        # attribution, synced lazily at resolve time with everything else
+        self.counts = counts
         self.lineage = lineage
         # epoch is serving telemetry (which snapshot the batch observed);
         # resolution keys off m_at_submit — the edge-count cutoff — alone
@@ -377,7 +390,7 @@ class QueryEngine:
             return jnp.broadcast_to(
                 jnp.where(d_stale, jnp.int32(0), jnp.int32(1)), shape)
 
-        def label_phase(p: Q.PackedLabels, u, v, d_stale):
+        def label_phase(p: Q.PackedLabels, il, u, v, d_stale):
             """Verdicts + on-device compaction of unknown lanes, fused.
 
             Compaction is an O(Q) cumsum/scatter (not a sort): unknown lanes
@@ -390,24 +403,40 @@ class QueryEngine:
             labels; DL positives / theorem negatives join the unknown lanes
             and ride the live-edge BFS.
 
+            ``il`` is the index's ``(il_in, il_out)`` interval-family
+            operand (or None — the fused-core default, which traces the
+            exact pre-registry program): its containment violations join
+            the negative rules on tombstone-clean dispatches and the
+            per-family attribution counts get an "il" column.
+
             Vertex-sharded layout: the verdicts read only the eight (Q, W)
-            row blocks, reconstructed from the row-partitioned planes by
-            ONE psum of per-shard masked gathers — all-gather-free (the
-            planes never move; see ``core.planes.sharded_rows``)."""
+            row blocks — plus the four interval rows when enabled —
+            reconstructed from the row-partitioned planes by ONE psum of
+            per-shard masked gathers — all-gather-free (the planes never
+            move; see ``core.planes.sharded_rows``)."""
             if vertex_mesh is not None:
                 rows = PL.sharded_rows(p, u, v, mesh=vertex_mesh)
+                il_rows = None if il is None else \
+                    PL.sharded_il_rows(il, u, v, mesh=vertex_mesh)
                 verd = Q.cut_verdicts_rows(rows, u, v, jnp.int32(1),
-                                           jnp.int32(0), ~d_stale)
+                                           jnp.int32(0), ~d_stale,
+                                           il_rows=il_rows)
             elif backend in ("pallas", "pallas-interpret"):
                 verd = verdicts_device(
                     p, u, v,
                     jnp.full(u.shape, Q.FRESH_CUT, jnp.int32), jnp.int32(0),
-                    _d_cut_vec(d_stale, u.shape), jnp.int32(1),
+                    _d_cut_vec(d_stale, u.shape), jnp.int32(1), il,
                     q_block=q_block, interpret=interpret,
                     out_dtype=out_dtype)
+                rows = Q.gather_rows(p, u, v)
+                il_rows = Q.gather_il_rows(il, u, v)
             else:
-                verd = Q.cut_verdicts(p, u, v, jnp.int32(1), jnp.int32(0),
-                                      ~d_stale)
+                rows = Q.gather_rows(p, u, v)
+                il_rows = Q.gather_il_rows(il, u, v)
+                verd = Q.cut_verdicts_rows(rows, u, v, jnp.int32(1),
+                                           jnp.int32(0), ~d_stale,
+                                           il_rows=il_rows)
+            counts = Q.verdict_counts(verd, rows, il_rows)
             unknown = verd == jnp.int8(-1)
             n_unknown = unknown.sum().astype(jnp.int32)
             rank_u = jnp.cumsum(unknown.astype(jnp.int32))
@@ -419,10 +448,10 @@ class QueryEngine:
             u_c = jnp.zeros(q, jnp.int32).at[pos].set(u)
             v_c = jnp.zeros(q, jnp.int32).at[pos].set(v)
             answers = verd == jnp.int8(1)
-            return answers, order, u_c, v_c, n_unknown
+            return answers, order, u_c, v_c, n_unknown, counts
 
         def make_coalesced_phase(chunk: int):
-            def coalesced(g: Q.Graph, p: Q.PackedLabels, uu, vv, m_cut,
+            def coalesced(g: Q.Graph, p: Q.PackedLabels, il, uu, vv, m_cut,
                           d_stale):
                 """One (chunk,)-shaped epoch-coalesced residue dispatch.
 
@@ -449,19 +478,24 @@ class QueryEngine:
                 cutoffs stay exact under it.
 
                 Dead lanes (padding / answered) carry an out-of-range
-                source so they never extend the BFS while-loop."""
+                source so they never extend the BFS while-loop.
+
+                ``il`` (or None) joins the re-check the same way it joins
+                the label phase — insert-monotone, so coalesced stale lanes
+                keep it without an edge-count gate — and threads into the
+                residue BFS admit planes under the tombstone-clean gate."""
                 n_cap = p.dl_in.shape[0]
                 live_lane = uu < jnp.int32(n_cap)
                 uu_safe = jnp.minimum(uu, jnp.int32(n_cap - 1))
                 if backend in ("pallas", "pallas-interpret"):
                     verd = verdicts_device(
                         p, uu_safe, vv, m_cut, g.m,
-                        _d_cut_vec(d_stale, uu.shape), jnp.int32(1),
+                        _d_cut_vec(d_stale, uu.shape), jnp.int32(1), il,
                         q_block=min(q_block, chunk),
                         interpret=interpret, out_dtype=out_dtype)
                 else:
                     verd = Q.cut_verdicts(p, uu_safe, vv, m_cut, g.m,
-                                          ~d_stale)
+                                          ~d_stale, il=il)
                 need = live_lane & (verd == jnp.int8(-1))
                 uu2 = jnp.where(need, uu, jnp.int32(n_cap))
                 admit = None
@@ -470,17 +504,18 @@ class QueryEngine:
                         p, jnp.minimum(uu2, jnp.int32(n_cap - 1)), vv,
                         m_cut, g.m,
                         _d_cut_vec(d_stale, uu.shape), jnp.int32(1),
+                        il, ~d_stale,
                         n_block=min(1024, max(8, n_cap)),
                         q_block=min(128, chunk), interpret=interpret,
                         out_dtype=jnp.int8)
                 hit = Q.pruned_bfs(g, p, uu2, vv, admit, m_cut, ~d_stale,
-                                   n_cap=n_cap, max_iters=max_iters,
+                                   il, n_cap=n_cap, max_iters=max_iters,
                                    frontier_dtype=frontier_dtype)
                 return ((verd == jnp.int8(1)) & live_lane) | hit
             return coalesced
 
         def make_coalesced_sharded(chunk: int):
-            def coalesced(g, p: Q.PackedLabels, uu, vv, m_cut, d_stale,
+            def coalesced(g, p: Q.PackedLabels, il, uu, vv, m_cut, d_stale,
                           e_slot, e_recv, e_gid, e_valid, h_send, h_valid,
                           e_start, e_tail):
                 """Sharded twin of the coalesced phase: the re-check reads
@@ -490,14 +525,23 @@ class QueryEngine:
                 their shards (no all-gather; see ``core.planes``).  The
                 plan's routing arrays ride in as operands so insert-time
                 plan rebuilds reuse this executable as long as the padded
-                extents hold."""
+                extents hold.
+
+                ``il`` joins the re-check via psum-reconstructed interval
+                rows.  The residue BFS deliberately skips the interval
+                admit term: the prune is *sound* (a pruned vertex can reach
+                no lane target), so which lanes hit is bitwise unchanged
+                with or without it — the sharded loop keeps its bit-plane
+                halo machinery untouched."""
                 from repro.core.graph import edge_mask
                 n_cap = p.dl_in.shape[0]
                 live_lane = uu < jnp.int32(n_cap)
                 uu_safe = jnp.minimum(uu, jnp.int32(n_cap - 1))
                 rows = PL.sharded_rows(p, uu_safe, vv, mesh=vertex_mesh)
+                il_rows = None if il is None else \
+                    PL.sharded_il_rows(il, uu_safe, vv, mesh=vertex_mesh)
                 verd = Q.cut_verdicts_rows(rows, uu_safe, vv, m_cut, g.m,
-                                           ~d_stale)
+                                           ~d_stale, il_rows=il_rows)
                 need = live_lane & (verd == jnp.int8(-1))
                 uu2 = jnp.where(need, uu, jnp.int32(n_cap))
                 plan = PL.ShardPlan(
@@ -518,8 +562,12 @@ class QueryEngine:
             from repro.launch.sharding import reach_query_shardings
             qsh, repl = reach_query_shardings(self.mesh)
             label_shardings = Q.PackedLabels(repl, repl, repl, repl)
+            # the il operand is a (None | (il_in, il_out)) pytree; `repl`
+            # acts as a prefix spec, so the None (leafless) default and the
+            # replicated interval planes both satisfy it
             self._label_phase = jax.jit(
-                label_phase, in_shardings=(label_shardings, qsh, qsh, repl))
+                label_phase,
+                in_shardings=(label_shardings, repl, qsh, qsh, repl))
         else:
             self._label_phase = jax.jit(label_phase)
 
@@ -603,15 +651,15 @@ class QueryEngine:
             qsh, _ = reach_query_shardings(self.mesh)
             uj = jax.device_put(uj, qsh)
             vj = jax.device_put(vj, qsh)
-        answers, order, u_c, v_c, n_unknown = self._label_phase(
-            index.packed, uj, vj, index.dirty_flag)
+        answers, order, u_c, v_c, n_unknown, counts = self._label_phase(
+            index.packed, index.il, uj, vj, index.dirty_flag)
         if self._index is not None and index is self._index:
             tag = dict(lineage=self._lineage, epoch=self.epoch,
                        m_at_submit=self._m_now)
         else:
             tag = {}
         pend = _Pending(self, index, q, answers, order, u_c, v_c, n_unknown,
-                        t_submit=self._clock(), **tag)
+                        counts, t_submit=self._clock(), **tag)
         if tag:
             self._inflight = [r for r in self._inflight
                               if r() is not None and r()._result is None]
@@ -744,7 +792,7 @@ class QueryEngine:
                     "lineage-scoped)")
             hit_parts = []
             for start in range(0, total, chunk):
-                hit_parts.append(fn(index.graph, index.packed,
+                hit_parts.append(fn(index.graph, index.packed, index.il,
                                     jnp.asarray(uu[start:start + chunk]),
                                     jnp.asarray(vv[start:start + chunk]),
                                     jnp.asarray(cuts[start:start + chunk]),
@@ -767,6 +815,18 @@ class QueryEngine:
             self.stats.batches += 1
             self.stats.bfs_answered += nu
             self.stats.label_answered += p.q - nu
+            if p.counts is not None:
+                # padding lanes are vertex-0 self-queries: always label
+                # positives, charged to "dl" on device — back them out so
+                # the attribution covers exactly the p.q real lanes
+                dl, bl, il, thm = (int(x) for x in np.asarray(p.counts))
+                pad = int(np.asarray(p.answers).shape[0]) - p.q
+                ph = self.stats.prune_hits
+                ph["dl"] += dl - pad
+                ph["bl"] += bl
+                ph["il"] += il
+                ph["thm"] += thm
+                ph["bfs"] += nu
 
     def run(self, index: DBLIndex, u, v, *, return_stats: bool = False):
         """Full Alg 2 on ``index`` for one batch; returns (Q,) np.bool_."""
@@ -813,12 +873,23 @@ class QueryEngine:
             g2, a, b, c, d, packed, epoch2, sat = self._insert_fn(
                 idx.graph, idx.dl_in, idx.dl_out, idx.bl_in, idx.bl_out,
                 ns, nd, jnp.int32(self.epoch))
+            il_kw = {}
+            if idx.il_in is not None:
+                # plug-in family maintenance rides the same Alg-3 batch:
+                # min-monoid seed + fixpoint over the already-extended
+                # graph (one executable per family; planes not donated —
+                # they are int32 rank planes, tiny next to the bit planes)
+                il_in, il_out, it_il = U.insert_update_plugin(
+                    "il", g2, idx.il_in, idx.il_out, ns, nd,
+                    n_cap=idx.n_cap, max_iters=self.max_iters)
+                il_kw = dict(il_in=il_in, il_out=il_out)
+                sat = sat | U.saturated(it_il, self.max_iters)
             # direct field write: an insert advances the epoch WITHIN the
             # current lineage (the property setter would start a new one)
             self._index = idx._replace(
                 graph=g2, dl_in=a, dl_out=b, bl_in=c, bl_out=d,
                 packed=packed, epoch=epoch2,
-                saturated=jnp.asarray(idx.saturated) | sat)
+                saturated=jnp.asarray(idx.saturated) | sat, **il_kw)
         self._sat_flags.append(sat)   # checked lazily at flush boundaries
         self.epoch += 1
         self._m_now += int(ns.size)
@@ -917,19 +988,27 @@ class QueryEngine:
         # every engine knob the compiled executables bake in beyond their
         # input avals MUST be in the key — a hit under different knobs
         # would silently serve the old semantics (e.g. a smaller max_iters
-        # truncating BFS lanes into false negatives)
+        # truncating BFS lanes into false negatives).  The enabled label
+        # families are part of that contract: the interval planes change
+        # the input avals, but dim-equal planes from a different rank seed
+        # (or a families flip at equal shapes) would alias without the
+        # explicit (families, il_dim, il_seed) triple in the blob.
         config = {"max_iters": self.max_iters, "q_block": self.q_block,
                   "bfs_chunk": self.bfs_chunk, "bfs_kernel": self.bfs_kernel,
                   "frontier_dtype": self.frontier_dtype,
                   "out_dtype": self.out_dtype,
-                  "plane_repr": self.plane_repr}
+                  "plane_repr": self.plane_repr,
+                  "families": list(index.families),
+                  "il_dim": index.il_dim,
+                  "il_seed": None if index.il_seed is None
+                  else int(np.asarray(index.il_seed))}
         if not isinstance(self._label_phase, ShapeDispatcher):
             self._label_phase = ShapeDispatcher(self._label_phase)
         n_cap = index.packed.dl_in.shape[0]
         for q in batch_sizes:
             qp = max(self._granule, -(-int(q) // self._granule)
                      * self._granule)
-            args = (index.packed, jnp.zeros(qp, jnp.int32),
+            args = (index.packed, index.il, jnp.zeros(qp, jnp.int32),
                     jnp.zeros(qp, jnp.int32), jnp.asarray(False))
             key = AOTCache.key("label", self.backend, args, config=config)
             fn = cache.load(key)
@@ -941,7 +1020,7 @@ class QueryEngine:
             c = self._bucket_for(chunk)
             if not isinstance(self._coal_phases[c], ShapeDispatcher):
                 self._coal_phases[c] = ShapeDispatcher(self._coal_phases[c])
-            args = (index.graph, index.packed,
+            args = (index.graph, index.packed, index.il,
                     jnp.full((c,), n_cap, jnp.int32),
                     jnp.zeros((c,), jnp.int32),
                     jnp.full((c,), Q.FRESH_CUT, jnp.int32),
@@ -982,7 +1061,7 @@ class QueryEngine:
         for chunk in (bfs_buckets or (self.bfs_chunk,)):
             c = self._bucket_for(chunk)
             self._coal_phases[c](
-                index.graph, index.packed,
+                index.graph, index.packed, index.il,
                 jnp.full((c,), n_cap, jnp.int32),
                 jnp.zeros((c,), jnp.int32),
                 jnp.full((c,), Q.FRESH_CUT, jnp.int32),

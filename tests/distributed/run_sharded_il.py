@@ -1,0 +1,129 @@
+"""Vertex-sharded interval-family differential suite.  Runs in a
+subprocess with 4 forced host devices: the ENTIRE sharded lifecycle of a
+``families=("dl", "bl", "il")`` index — build, insert, delete, delta/full
+rebuild, engine query stream — must be bitwise identical to the
+replicated oracle, with the int32 rank planes row-partitioned and the
+per-family prune telemetry agreeing across layouts.
+
+Invoked by tests/test_families.py; exits non-zero on mismatch.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np  # noqa: E402
+
+from repro.core import DBLIndex, make_graph  # noqa: E402
+from repro.core import distributed as D  # noqa: E402
+from repro.core import planes as PL  # noqa: E402
+from repro.graphs.generators import power_law  # noqa: E402
+from repro.serve.engine import QueryEngine  # noqa: E402
+
+K = dict(k=16, k_prime=16, max_iters=64)
+FAM = dict(families=("dl", "bl", "il"), il_dim=4, il_seed=7)
+
+
+def eq(a, b, what):
+    a, b = np.asarray(a), np.asarray(b)
+    assert (a == b).all(), what
+
+
+def check(ref, idx, what):
+    for f in ("dl_in", "dl_out", "bl_in", "bl_out", "il_in", "il_out"):
+        eq(getattr(ref, f), getattr(idx, f), f"{what}: {f} diverged")
+    assert int(np.asarray(idx.il_seed)) == FAM["il_seed"]
+
+
+def lifecycle():
+    n, m = 256, 1400
+    src, dst = power_law(n, m, seed=3)
+    g = make_graph(src, dst, n, m_cap=m + 512)
+    mesh = D.vertex_mesh(4)
+    ref = DBLIndex.build(g, n_cap=n, **K, **FAM)
+    idx, plan = D.build_vertex_sharded(g, mesh, n_cap=n, **K, **FAM)
+    check(ref, idx, "build")
+
+    # placement contract: rank planes row-sharded like the bool planes
+    sh = D.vertex_index_shardings(mesh, il=True)
+    assert idx.il_in.sharding == sh.il_in
+    assert idx.il_out.sharding == sh.il_out
+
+    # sharded_il_rows: one-psum row reconstruction, exact for any sign
+    rng = np.random.default_rng(0)
+    u = rng.integers(0, n, 100).astype(np.int32)
+    v = rng.integers(0, n, 100).astype(np.int32)
+    rows = PL.sharded_il_rows(idx.il, u, v, mesh=mesh)
+    for a, b in zip(rows, (ref.il_out[u], ref.il_out[v],
+                           ref.il_in[u], ref.il_in[v])):
+        eq(a, b, "sharded_il_rows")
+    # the dead-lane sentinel n_cap is owned by no shard -> all-zero rows
+    dead = np.full(4, n, np.int32)
+    for r in PL.sharded_il_rows(idx.il, dead, dead, mesh=mesh):
+        assert (np.asarray(r) == 0).all(), "sentinel rows must be zero"
+
+    for r in range(3):
+        ns = rng.integers(0, n, 32).astype(np.int32)
+        nd = rng.integers(0, n, 32).astype(np.int32)
+        ref = ref.insert_edges(ns, nd, max_iters=64)
+        idx, plan, _ = D.insert_vertex_sharded(idx, plan, ns, nd,
+                                               max_iters=64)
+        check(ref, idx, f"insert round {r}")
+
+    ref = ref.delete_edges(src[10:60], dst[10:60])
+    idx = idx.delete_edges(src[10:60], dst[10:60])
+    assert ref.is_dirty and idx.is_dirty
+
+    refd = ref.rebuild(mode="delta", max_iters=64)
+    idxd, pland, info = D.rebuild_vertex_sharded(idx, plan, mode="delta",
+                                                 max_iters=64)
+    assert info["mode"] == "delta"
+    check(refd, idxd, "delta rebuild")
+    reff = ref.rebuild(mode="full", max_iters=64)
+    idxf, _, _ = D.rebuild_vertex_sharded(idx, plan, mode="full",
+                                          max_iters=64)
+    check(reff, idxf, "full rebuild")
+    print("sharded IL lifecycle bitwise OK")
+
+
+def engine_stream():
+    n, m = 256, 1200
+    src, dst = power_law(n, m, seed=9)
+    g = make_graph(src, dst, n, m_cap=m + 1024)
+    mesh = D.vertex_mesh(4)
+    ref = DBLIndex.build(g, n_cap=n, **K, **FAM)
+    eng_r = QueryEngine(ref, bfs_chunk=64, max_iters=64)
+    eng_s = QueryEngine(ref, bfs_chunk=64, max_iters=64, vertex_mesh=mesh)
+    rng = np.random.default_rng(4)
+    pend_r, pend_s = [], []
+    for r in range(6):
+        u = rng.integers(0, n, 96).astype(np.int32)
+        v = rng.integers(0, n, 96).astype(np.int32)
+        eq(eng_r.query(u, v), eng_s.query(u, v), f"query round {r}")
+        pend_r.append(eng_r.submit(eng_r.index, u, v))
+        pend_s.append(eng_s.submit(eng_s.index, u, v))
+        ns = rng.integers(0, n, 24).astype(np.int32)
+        nd = rng.integers(0, n, 24).astype(np.int32)
+        eng_r.insert(ns, nd)
+        eng_s.insert(ns, nd)
+        if r == 3:
+            eng_r.delete(src[:20], dst[:20])
+            eng_s.delete(src[:20], dst[:20])
+    for a, b in zip(eng_r.flush(pend_r), eng_s.flush(pend_s)):
+        eq(a, b, "flush parity")
+    assert eng_r.stats.prune_hits == eng_s.stats.prune_hits, (
+        eng_r.stats.prune_hits, eng_s.stats.prune_hits)
+    assert eng_s.stats.prune_hits["il"] > 0, "IL never fired in the stream"
+    i1 = eng_r.rebuild(mode="delta")
+    i2 = eng_s.rebuild(mode="delta")
+    check(i1, i2, "engine rebuild")
+    u = rng.integers(0, n, 300).astype(np.int32)
+    v = rng.integers(0, n, 300).astype(np.int32)
+    eq(eng_r.query(u, v), eng_s.query(u, v), "post-rebuild queries")
+    print("sharded IL engine stream parity OK")
+
+
+if __name__ == "__main__":
+    lifecycle()
+    engine_stream()
+    print("SHARDED_IL_OK")

@@ -204,8 +204,8 @@ def verdict_path_hlo_is_all_gather_free():
     eng = QueryEngine(idx, bfs_chunk=64, max_iters=64, vertex_mesh=mesh)
     qp = eng._granule
     label_txt = eng._label_phase.lower(
-        idx.packed, jnp.zeros(qp, jnp.int32), jnp.zeros(qp, jnp.int32),
-        jnp.asarray(False)).compile().as_text()
+        idx.packed, idx.il, jnp.zeros(qp, jnp.int32),
+        jnp.zeros(qp, jnp.int32), jnp.asarray(False)).compile().as_text()
     assert "all-gather" not in label_txt, \
         "label phase lowered to an all-gather"
     assert "all-reduce" in label_txt or "reduce-scatter" in label_txt, \
@@ -213,7 +213,7 @@ def verdict_path_hlo_is_all_gather_free():
     c = eng._bucket_for(16)
     extra = eng._coalesced_extra_args()
     coal_txt = eng._coal_phases[c].lower(
-        idx.graph, idx.packed, jnp.full((c,), n, jnp.int32),
+        idx.graph, idx.packed, idx.il, jnp.full((c,), n, jnp.int32),
         jnp.zeros((c,), jnp.int32),
         jnp.full((c,), 2**31 - 1, jnp.int32), jnp.asarray(False),
         *extra).compile().as_text()

@@ -488,6 +488,122 @@ def sharded_stream(bg, *, shards: int | None = None, rounds: int = 6,
     }
 
 
+def plan_extension_stream(bg, *, shards: int | None = None, rounds: int = 11,
+                          insert_b: int = 64, seed: int = 23):
+    """PR-9 section: incremental ``planes.extend_plan`` vs from-scratch
+    ``planes.shard_plan`` routing-table maintenance on a sharded insert
+    stream.  Two vertex-sharded indices consume an identical batch stream
+    — one extending the plan per batch (O(m + Δm log Δm) host work, keeps
+    compiled fixpoint shapes alive inside a granule), one rebuilding it
+    (O(m log m) re-sort of every edge, every batch) — interleaved
+    batch-by-batch so shared-CPU noise lands on both sides.  A replicated
+    ``DBLIndex.insert_edges`` oracle rides along; after the stream both
+    sharded indices go through delete -> delta rebuild -> one more
+    extending insert, and the labels must come out bitwise equal to the
+    oracle across the whole lifecycle.  Also reports the bare plan-op
+    latencies (the host cost the tentpole removes from the insert path)."""
+    from repro.core import distributed as D
+    from repro.core import planes as PL
+
+    shards = shards or len(jax.devices())
+    n_cap = -(-bg.n // shards) * shards
+    m_cap = len(bg.src) + (rounds + 2) * insert_b + 64
+    rng = np.random.default_rng(seed)
+    # no self-loops so the normalized batches stay full-size on both paths
+    batches = []
+    for _ in range(rounds + 1):
+        ns = rng.integers(0, bg.n, insert_b).astype(np.int32)
+        nd = ((ns + rng.integers(1, bg.n, insert_b)) % bg.n).astype(np.int32)
+        batches.append((ns, nd))
+
+    g = G.make_graph(bg.src, bg.dst, bg.n, m_cap=m_cap)
+    mesh = D.vertex_mesh(shards)
+    idx_e, plan_e = D.build_vertex_sharded(g, mesh, n_cap=n_cap, k=64,
+                                           k_prime=64, max_iters=64)
+    idx_s, plan_s = idx_e, plan_e
+    ref = DBLIndex.build(G.make_graph(bg.src, bg.dst, bg.n, m_cap=m_cap),
+                         n_cap=n_cap, k=64, k_prime=64, max_iters=64)
+
+    ext_ms, scr_ms, plan_ext_ms, plan_scr_ms = [], [], [], []
+    for i, (ns, nd) in enumerate(batches[:rounds]):
+        # bare plan ops first (host-only, pre-mutation state is identical
+        # on both sides by construction)
+        t0 = time.perf_counter()
+        PL.extend_plan(plan_e, ns, nd)
+        t1 = time.perf_counter()
+        src2 = np.concatenate([np.asarray(idx_e.graph.src)[:plan_e.m], ns])
+        dst2 = np.concatenate([np.asarray(idx_e.graph.dst)[:plan_e.m], nd])
+        t2 = time.perf_counter()
+        PL.shard_plan(src2, dst2, plan_e.m + len(ns), n_cap, mesh)
+        t3 = time.perf_counter()
+
+        def run_ext():
+            nonlocal idx_e, plan_e
+            t0 = time.perf_counter()
+            idx_e, plan_e, _ = D.insert_vertex_sharded(
+                idx_e, plan_e, ns, nd, max_iters=64, extend=True)
+            idx_e.packed.dl_in.block_until_ready()
+            return time.perf_counter() - t0
+
+        def run_scr():
+            nonlocal idx_s, plan_s
+            t0 = time.perf_counter()
+            idx_s, plan_s, _ = D.insert_vertex_sharded(
+                idx_s, plan_s, ns, nd, max_iters=64, extend=False)
+            idx_s.packed.dl_in.block_until_ready()
+            return time.perf_counter() - t0
+
+        # alternate which side dispatches first: a halo-granule spill
+        # changes the fixpoint shapes, and whichever side runs first pays
+        # the (process-shared) jit compile for both — always putting the
+        # extend side first would bias the medians against it
+        if i % 2 == 0:
+            te, ts_ = run_ext(), run_scr()
+        else:
+            ts_, te = run_scr(), run_ext()
+        ref = ref.insert_edges(ns, nd, max_iters=64)
+        if i > 0:                        # round 0 pays jit warmup; drop it
+            plan_ext_ms.append(1e3 * (t1 - t0))
+            plan_scr_ms.append(1e3 * (t3 - t2))
+            ext_ms.append(1e3 * te)
+            scr_ms.append(1e3 * ts_)
+
+    # lifecycle tail: delete + delta rebuild + one more extending insert
+    ds, dd = bg.src[:insert_b // 2], bg.dst[:insert_b // 2]
+    ref = ref.delete_edges(ds, dd)
+    idx_e, idx_s = idx_e.delete_edges(ds, dd), idx_s.delete_edges(ds, dd)
+    idx_e, plan_e, _ = D.rebuild_vertex_sharded(idx_e, plan_e, mode="delta",
+                                                max_iters=64)
+    idx_s, plan_s, _ = D.rebuild_vertex_sharded(idx_s, plan_s, mode="delta",
+                                                max_iters=64)
+    ref = ref.rebuild(mode="delta", max_iters=64)
+    ns, nd = batches[rounds]
+    idx_e, plan_e, _ = D.insert_vertex_sharded(idx_e, plan_e, ns, nd,
+                                               max_iters=64, extend=True)
+    idx_s, plan_s, _ = D.insert_vertex_sharded(idx_s, plan_s, ns, nd,
+                                               max_iters=64, extend=False)
+    ref = ref.insert_edges(ns, nd, max_iters=64)
+
+    ok = True
+    for name in ("dl_in", "dl_out", "bl_in", "bl_out"):
+        a = np.asarray(getattr(ref, name))
+        ok &= bool((a == np.asarray(getattr(idx_e, name))).all())
+        ok &= bool((a == np.asarray(getattr(idx_s, name))).all())
+    med = lambda xs: sorted(xs)[len(xs) // 2]  # noqa: E731
+    return {
+        "shards": shards,
+        "m_final": int(np.asarray(idx_e.graph.m)),
+        "insert_batch": insert_b,
+        "insert_ms_extend": med(ext_ms),
+        "insert_ms_scratch": med(scr_ms),
+        "insert_speedup": med(scr_ms) / max(med(ext_ms), 1e-9),
+        "plan_op_ms_extend": med(plan_ext_ms),
+        "plan_op_ms_scratch": med(plan_scr_ms),
+        "plan_op_speedup": med(plan_scr_ms) / max(med(plan_ext_ms), 1e-9),
+        "labels_bitwise_equal": ok,
+    }
+
+
 def packed_stream(bg, *, rounds: int = 4, query_b: int = 512,
                   insert_b: int = 64, seed: int = 17):
     """PR-7 section: uint32 word-plane fixpoint (``plane_repr="packed"``)
@@ -667,7 +783,7 @@ def families_stream(bg, *, rounds: int = 4, query_b: int = 512,
 #: via argparse choices; programmatic callers are validated against the
 #: same tuple (an unknown name used to be silently skipped)
 KNOWN_SECTIONS = ("classic", "mixed", "epoch", "fully_dynamic", "delta",
-                  "sharded", "packed", "families")
+                  "sharded", "packed", "families", "planext")
 
 
 def main(scale: float = 0.1, datasets=("LJ", "Email", "Reddit"),
@@ -691,7 +807,7 @@ def main(scale: float = 0.1, datasets=("LJ", "Email", "Reddit"),
     report = {"scale": scale, "backend": jax.default_backend(),
               "datasets": {}, "epoch_coalescing": {}, "fully_dynamic": {},
               "delta_rebuild": {}, "sharded": {}, "packed": {},
-              "families": {}}
+              "families": {}, "plan_extension": {}}
     if "families" in sections:
         print("dataset,build_s_core,build_s_il,insert_ms_core,insert_ms_il,"
               "flush_ms_core,flush_ms_il,bfs_core,bfs_il,il_hit_rate,"
@@ -725,11 +841,26 @@ def main(scale: float = 0.1, datasets=("LJ", "Email", "Reddit"),
               f"{r['bool']['delta_rebuild_ms']:.0f},"
               f"{r['packed']['delta_rebuild_ms']:.0f},"
               f"{r['answers_bitwise_equal']}")
-    if "sharded" in sections and len(jax.devices()) < 2:
-        print("sharded section needs >=2 devices "
-              "(set XLA_FLAGS=--xla_force_host_platform_device_count=4); "
-              "skipping")
-        sections = sections - {"sharded"}
+    for sec in ("sharded", "planext"):
+        if sec in sections and len(jax.devices()) < 2:
+            print(f"{sec} section needs >=2 devices "
+                  "(set XLA_FLAGS=--xla_force_host_platform_device_count=4); "
+                  "skipping")
+            sections = sections - {sec}
+    if "planext" in sections:
+        print("dataset,shards,insert_ms_extend,insert_ms_scratch,speedup,"
+              "planop_ms_extend,planop_ms_scratch,planop_speedup,bitwise"
+              "  (extend_plan vs from-scratch shard_plan)")
+    for name in datasets if "planext" in sections else ():
+        bg = load(name, scale=scale)
+        r = plan_extension_stream(bg)
+        report["plan_extension"][name] = r
+        print(f"{name},{r['shards']},"
+              f"{r['insert_ms_extend']:.1f},{r['insert_ms_scratch']:.1f},"
+              f"{r['insert_speedup']:.2f}x,"
+              f"{r['plan_op_ms_extend']:.1f},{r['plan_op_ms_scratch']:.1f},"
+              f"{r['plan_op_speedup']:.2f}x,"
+              f"{r['labels_bitwise_equal']}")
     if "sharded" in sections:
         print("dataset,shards,bytes/dev_repl,bytes/dev_shard,ratio,"
               "insert_ms_repl,insert_ms_shard,flush_ms_repl,flush_ms_shard,"

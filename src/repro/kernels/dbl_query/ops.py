@@ -6,6 +6,7 @@ bitwise verdict so no (Q, W) intermediates round-trip through HBM.
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -13,6 +14,9 @@ import jax.numpy as jnp
 from repro.core.query import FRESH_CUT, PackedLabels
 from repro.kernels._pad import pad_axis as _pad_to
 from .dbl_query import dbl_query_verdicts, dbl_query_verdicts_streamed
+
+#: one-time-warning latch for the streaming+il grid fallback below
+_stream_il_warned = False
 
 
 def verdicts_device(p: PackedLabels, u: jax.Array, v: jax.Array,
@@ -41,11 +45,19 @@ def verdicts_device(p: PackedLabels, u: jax.Array, v: jax.Array,
     (2*dim, Q) int32 rank streams ride into the grid kernel and the
     containment check fuses into the same pass.  Pad lanes carry rank 0 on
     both sides of every comparison, so they never prune.  The streamed
-    kernel keeps its fixed 3-operand copy pipeline and rejects IL."""
+    kernel keeps its fixed copy pipeline and takes no interval operands;
+    ``streaming=True`` with ``il`` falls back to the grid kernel (identical
+    verdicts) with a one-time warning instead of failing the dispatch."""
     if streaming and il is not None:
-        raise ValueError(
-            "the streamed dbl_query kernel does not take interval-family "
-            "operands; use the grid kernel (streaming=False) with il")
+        global _stream_il_warned
+        if not _stream_il_warned:
+            _stream_il_warned = True
+            warnings.warn(
+                "the streamed dbl_query kernel's fixed copy pipeline takes "
+                "no interval-family operands; il-enabled verdict dispatches "
+                "fall back to the grid kernel (bitwise-identical verdicts)",
+                stacklevel=2)
+        streaming = False
     q = u.shape[0]
     streams = [p.dl_out[u], p.dl_in[v], p.dl_out[v], p.dl_in[u],
                p.bl_in[u], p.bl_in[v], p.bl_out[v], p.bl_out[u]]

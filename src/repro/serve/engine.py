@@ -10,6 +10,11 @@ keeps the whole pipeline device-resident:
 - **backend selected once at construction** — the Pallas ``dbl_query``
   verdict kernel on TPU, the fused jnp path elsewhere (``"pallas-interpret"``
   forces the kernel through the Pallas interpreter for parity testing);
+  ``streaming=True`` routes kernel backends through the PR-7 double-buffered
+  streamed kernels (verdicts + BFS admit planes) instead of the grid forms —
+  il-enabled verdict dispatches fall back to the grid kernel with a one-time
+  warning, since the streamed verdict kernel's fixed copy pipeline takes no
+  interval operands;
 - **one fused label phase** — verdicts, unknown-lane compaction (stable
   cumsum/scatter), and endpoint gathers run in a single compiled executable;
   the only host traffic per batch is one int32 scalar (the unknown count);
@@ -234,6 +239,7 @@ class QueryEngine:
                  bfs_chunk: int = 256, max_iters: int = 256,
                  backend: str = "auto", q_block: int = 512,
                  mesh=None, vertex_mesh=None, bfs_kernel: bool = False,
+                 streaming: bool = False,
                  donate: str | bool = "auto",
                  consistency: str = "as-of-submit",
                  frontier_dtype: str = "int8",
@@ -271,6 +277,17 @@ class QueryEngine:
         self.max_iters = int(max_iters)
         self.backend = select_backend(backend)
         self.q_block = int(q_block)
+        self.streaming = bool(streaming)
+        if self.streaming and self.backend == "jnp":
+            raise ValueError(
+                "streaming=True routes verdicts and admit planes through "
+                "the double-buffered streamed Pallas kernels; construct "
+                "with backend='pallas' or 'pallas-interpret'")
+        if self.streaming and vertex_mesh is not None:
+            raise ValueError(
+                "the vertex-sharded layout reconstructs verdict row blocks "
+                "with shard_map collectives and never dispatches the "
+                "query kernels — streaming=True would be dead there")
         self.mesh = mesh
         self.vertex_mesh = vertex_mesh
         self.layout = "vertex_sharded" if vertex_mesh is not None \
@@ -335,17 +352,26 @@ class QueryEngine:
         if self._index is not None:
             self._drain_inflight()    # also clears the inflight list
         self._lineage += 1
+        # consume the override unconditionally: whatever happens below, a
+        # stale plan must never survive to a LATER re-bind
+        override, self._plan_override = self._plan_override, None
         if idx is not None and self.vertex_mesh is not None:
             from repro.core import distributed as D
             idx = D.place_vertex_sharded(idx, self.vertex_mesh)
-            if self._plan_override is not None:
+            m_idx = int(np.asarray(idx.graph.m))
+            if (override is not None and override.m == m_idx
+                    and override.n_cap == idx.n_cap):
                 # rebuild() already built routing tables for exactly this
-                # index's edges — don't pay the O(m) plan pass twice
-                self._plan, self._plan_override = self._plan_override, None
+                # index's edges — don't pay the O(m) plan pass twice.  The
+                # (m, n_cap) check guards the handoff: the insert path now
+                # EXTENDS whatever plan is installed here, so adopting a
+                # plan for a different edge prefix would corrupt every
+                # subsequent routing table, not just slow one query down.
+                self._plan = override
             else:
                 self._plan = PL.shard_plan(idx.graph.src, idx.graph.dst,
-                                           int(np.asarray(idx.graph.m)),
-                                           idx.n_cap, self.vertex_mesh)
+                                           m_idx, idx.n_cap,
+                                           self.vertex_mesh)
         self._index = idx
         if idx is not None:
             self.epoch = int(np.asarray(idx.epoch))
@@ -376,6 +402,7 @@ class QueryEngine:
         self._interpret = interpret
         max_iters = self.max_iters
         use_bfs_kernel = self.bfs_kernel
+        streaming = self.streaming
         vertex_mesh = self.vertex_mesh
         frontier_dtype = self.frontier_dtype
         plane_repr = self.plane_repr
@@ -427,7 +454,7 @@ class QueryEngine:
                     jnp.full(u.shape, Q.FRESH_CUT, jnp.int32), jnp.int32(0),
                     _d_cut_vec(d_stale, u.shape), jnp.int32(1), il,
                     q_block=q_block, interpret=interpret,
-                    out_dtype=out_dtype)
+                    out_dtype=out_dtype, streaming=streaming)
                 rows = Q.gather_rows(p, u, v)
                 il_rows = Q.gather_il_rows(il, u, v)
             else:
@@ -492,7 +519,8 @@ class QueryEngine:
                         p, uu_safe, vv, m_cut, g.m,
                         _d_cut_vec(d_stale, uu.shape), jnp.int32(1), il,
                         q_block=min(q_block, chunk),
-                        interpret=interpret, out_dtype=out_dtype)
+                        interpret=interpret, out_dtype=out_dtype,
+                        streaming=streaming)
                 else:
                     verd = Q.cut_verdicts(p, uu_safe, vv, m_cut, g.m,
                                           ~d_stale, il=il)
@@ -507,7 +535,7 @@ class QueryEngine:
                         il, ~d_stale,
                         n_block=min(1024, max(8, n_cap)),
                         q_block=min(128, chunk), interpret=interpret,
-                        out_dtype=jnp.int8)
+                        out_dtype=jnp.int8, streaming=streaming)
                 hit = Q.pruned_bfs(g, p, uu2, vv, admit, m_cut, ~d_stale,
                                    il, n_cap=n_cap, max_iters=max_iters,
                                    frontier_dtype=frontier_dtype)
@@ -995,6 +1023,7 @@ class QueryEngine:
         # explicit (families, il_dim, il_seed) triple in the blob.
         config = {"max_iters": self.max_iters, "q_block": self.q_block,
                   "bfs_chunk": self.bfs_chunk, "bfs_kernel": self.bfs_kernel,
+                  "streaming": self.streaming,
                   "frontier_dtype": self.frontier_dtype,
                   "out_dtype": self.out_dtype,
                   "plane_repr": self.plane_repr,

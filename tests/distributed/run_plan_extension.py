@@ -1,0 +1,381 @@
+"""Incremental shard-plan extension suite. Runs in a subprocess with 4
+forced host devices.
+
+Pins the PR-9 contract: ``planes.extend_plan`` must reproduce from-scratch
+``shard_plan`` routing tables over random insert streams (bucket arrays
+bit-identical on clean batches, slot decoding semantically identical
+always), keep granule-rounded extents stable until a tail genuinely
+overflows, early-out on zero-cut and empty-normalized batches, dedupe
+in-batch duplicates/self-loops, extend the OVERRIDE plan after an engine
+rebuild, and compile NOTHING for in-granule extensions — while labels,
+verdicts, and answers stay bitwise equal to the replicated oracle across
+the full lifecycle (build -> insert stream -> delete -> rebuild).
+
+Invoked by tests/test_plan_extension.py; exits non-zero on mismatch.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+
+from repro.core import DBLIndex, make_graph  # noqa: E402
+from repro.core import distributed as D  # noqa: E402
+from repro.core import planes as PL  # noqa: E402
+from repro.graphs.generators import power_law  # noqa: E402
+from repro.serve.engine import QueryEngine  # noqa: E402
+
+K = dict(k=16, k_prime=16, max_iters=64)
+SHARDS = 4
+
+
+def assert_index_eq(ref, idx, what):
+    for name in ("dl_in", "dl_out", "bl_in", "bl_out", "landmarks",
+                 "bl_sources", "bl_sinks"):
+        a = np.asarray(getattr(ref, name))
+        b = np.asarray(getattr(idx, name))
+        assert (a == b).all(), f"{what}: {name} diverged"
+
+
+def clean_batch(rng, n, b):
+    """A random batch with no self-loops and no in-batch duplicates (the
+    regime where extension must match from-scratch tables BIT for bit)."""
+    ns = rng.integers(0, n, b).astype(np.int32)
+    nd = ((ns + rng.integers(1, n, b)) % n).astype(np.int32)
+    seen, keep = set(), np.ones(b, bool)
+    for i, pair in enumerate(zip(ns.tolist(), nd.tolist())):
+        if pair in seen:
+            keep[i] = False
+        seen.add(pair)
+    return ns[keep], nd[keep]
+
+
+def decoded_push(plan, dp):
+    """(d, E_pad) global pushing-vertex id per bucket entry — the slot
+    semantics (local row vs halo-buffer position) made order-independent,
+    so plans whose halo lists differ only in ordering compare equal."""
+    n_loc = plan.n_cap // plan.shards
+    es = np.asarray(dp.e_slot)
+    hs = np.asarray(dp.h_send)
+    H = hs.shape[2]
+    out = np.zeros_like(es, dtype=np.int64)
+    for t in range(plan.shards):
+        sl = es[t].astype(np.int64)
+        local = sl < n_loc
+        out[t][local] = t * n_loc + sl[local]
+        off = sl[~local] - n_loc
+        out[t][~local] = (off // H) * n_loc + hs[off // H, t, off % H]
+    return out
+
+
+def assert_plan_equiv(pe, ps, what, *, exact_buckets=True):
+    """Extended plan == from-scratch plan: bucket arrays bit-identical
+    (clean streams), halo routing semantically identical always."""
+    assert pe.m == ps.m, (what, pe.m, ps.m)
+    for dname in ("fwd", "bwd"):
+        de, ds = getattr(pe, dname), getattr(ps, dname)
+        if exact_buckets:
+            assert de.e_recv.shape == ds.e_recv.shape, \
+                (what, dname, de.e_recv.shape, ds.e_recv.shape)
+            assert de.h_send.shape == ds.h_send.shape, \
+                (what, dname, de.h_send.shape, ds.h_send.shape)
+            for f in ("e_recv", "e_gid", "e_valid", "e_start", "e_tail"):
+                a = np.asarray(getattr(de, f))
+                b = np.asarray(getattr(ds, f))
+                assert (a == b).all(), f"{what}: {dname}.{f} diverged"
+        val = np.asarray(de.e_valid)
+        a, b = decoded_push(pe, de), decoded_push(ps, ds)
+        assert (a[val] == b[val]).all(), \
+            f"{what}: {dname} slot decoding diverged"
+        # halo lists: same vertex SETS per (sender, receiver) pair
+        # (extension appends fresh vertices instead of re-sorting, so the
+        # order may differ from the from-scratch globally-sorted lists)
+        for s in range(SHARDS):
+            for t in range(SHARDS):
+                ae = np.asarray(de.h_send[s, t])[np.asarray(de.h_valid[s, t])]
+                as_ = np.asarray(ds.h_send[s, t])[np.asarray(ds.h_valid[s, t])]
+                assert set(ae.tolist()) == set(as_.tolist()), \
+                    f"{what}: {dname} halo need set ({s}->{t}) diverged"
+                assert len(ae) == len(set(ae.tolist())), \
+                    f"{what}: {dname} halo list ({s}->{t}) has duplicates"
+
+
+def plan_stream_equivalence():
+    """Random insert stream, both granule regimes: default granules (tails
+    absorb every batch — extents frozen) and tiny granules (repeated
+    spills) — extended tables == from-scratch tables each round."""
+    n, m0 = 256, 900
+    src, dst = power_law(n, m0, seed=7)
+    mesh = D.vertex_mesh(SHARDS)
+    rng = np.random.default_rng(11)
+    for eg, hg, rounds, what in ((1024, 64, 6, "in-granule"),
+                                 (32, 4, 6, "spill")):
+        gran = dict(edge_granule=eg, halo_granule=hg)
+        plan = PL.shard_plan(src, dst, m0, n, mesh, **gran)
+        e0 = (plan.fwd.e_recv.shape, plan.fwd.h_send.shape)
+        asrc, adst = src, dst
+        spilled = False
+        for r in range(rounds):
+            ns, nd = clean_batch(rng, n, int(rng.integers(8, 64)))
+            plan = PL.extend_plan(plan, ns, nd, **gran)
+            asrc = np.concatenate([asrc, ns])
+            adst = np.concatenate([adst, nd])
+            scratch = PL.shard_plan(asrc, adst, len(asrc), n, mesh, **gran)
+            assert_plan_equiv(plan, scratch, f"{what} round {r}")
+            spilled |= (plan.fwd.e_recv.shape, plan.fwd.h_send.shape) != e0
+        if what == "in-granule":
+            assert not spilled, "default granules spilled on a small stream"
+        else:
+            assert spilled, "tiny granules never spilled — overflow untested"
+    print("plan stream equivalence OK")
+
+
+def early_outs_and_dedupe():
+    """Zero-cut batches reuse the halo arrays (object identity, not just
+    equality); empty-normalized batches only advance m; duplicate pairs and
+    self-loops never double-count in buckets or halo send lists."""
+    n, m0 = 64, 200
+    rng = np.random.default_rng(3)
+    src = rng.integers(0, n, m0).astype(np.int32)
+    dst = rng.integers(0, n, m0).astype(np.int32)
+    mesh = D.vertex_mesh(SHARDS)
+    plan = PL.shard_plan(src, dst, m0, n, mesh)
+    n_loc = n // SHARDS
+
+    # zero-cut: all new edges inside shard 0's rows [0, n_loc)
+    ns = np.arange(0, n_loc - 1, dtype=np.int32)
+    nd = ns + 1
+    p2 = PL.extend_plan(plan, ns, nd)
+    assert p2.m == plan.m + len(ns)
+    for dname in ("fwd", "bwd"):
+        de, d0 = getattr(p2, dname), getattr(plan, dname)
+        assert de.h_send is d0.h_send and de.h_valid is d0.h_valid, \
+            f"zero-cut batch copied the {dname} halo arrays"
+    scratch = PL.shard_plan(np.concatenate([src, ns]),
+                            np.concatenate([dst, nd]),
+                            m0 + len(ns), n, mesh)
+    assert_plan_equiv(p2, scratch, "zero-cut")
+
+    # empty after normalization: self-loops + an in-batch duplicate pair
+    ns = np.array([5, 5, 9], np.int32)
+    nd = np.array([5, 5, 9], np.int32)
+    p3 = PL.extend_plan(p2, ns, nd)
+    assert p3.m == p2.m + 3, "raw batch size must advance m"
+    assert p3.fwd.e_recv is p2.fwd.e_recv and p3.bwd.e_gid is p2.bwd.e_gid, \
+        "empty-normalized batch rebuilt bucket arrays"
+
+    # duplicates + self-loops mixed into a real batch: each surviving pair
+    # appears EXACTLY once per direction bucket, first (lowest) gid kept
+    ns = np.array([1, 1, 1, 17, 17, 40, 2, 2], np.int32)
+    nd = np.array([33, 33, 33, 49, 49, 40, 60, 60], np.int32)
+    p4 = PL.extend_plan(p3, ns, nd)
+    assert p4.m == p3.m + len(ns)
+    base = p3.m
+    for dname in ("fwd", "bwd"):
+        dp = getattr(p4, dname)
+        gids = np.asarray(dp.e_gid)[np.asarray(dp.e_valid)]
+        new = np.sort(gids[gids >= base])
+        # kept slots: first occurrence of (1,33) at +0, (17,49) at +3,
+        # (2,60) at +6; (40,40) is a self-loop, dropped
+        assert new.tolist() == [base, base + 3, base + 6], \
+            f"{dname}: dedupe kept wrong slots {new.tolist()} (base {base})"
+    print("early-outs + dedupe OK")
+
+
+def lifecycle_labels_bitwise():
+    """The acceptance differential: replicated oracle vs sharded-with-
+    extension vs sharded-from-scratch across build -> insert stream (with a
+    duplicate/self-loop batch) -> delete -> delta rebuild -> insert -> full
+    rebuild.  Labels bitwise equal at every step; queries equal at the end."""
+    n, m = 256, 1400
+    src, dst = power_law(n, m, seed=5)
+    mesh = D.vertex_mesh(SHARDS)
+    rng = np.random.default_rng(21)
+
+    g = make_graph(src, dst, n, m_cap=m + 1024)
+    ref = DBLIndex.build(g, n_cap=n, **K)
+    idx_e, plan_e = D.build_vertex_sharded(g, mesh, n_cap=n, **K)
+    idx_s, plan_s = D.build_vertex_sharded(g, mesh, n_cap=n, **K)
+
+    batches = [clean_batch(rng, n, 48) for _ in range(3)]
+    # a hostile batch: duplicates + self-loops, raw (the graph keeps every
+    # slot; only the routing tables dedupe)
+    hostile = (np.array([7, 7, 7, 200, 13, 13], np.int32),
+               np.array([190, 190, 190, 200, 77, 77], np.int32))
+    batches.insert(2, hostile)
+    for r, (ns, nd) in enumerate(batches):
+        ref = ref.insert_edges(ns, nd, max_iters=64)
+        idx_e, plan_e, _ = D.insert_vertex_sharded(idx_e, plan_e, ns, nd,
+                                                   max_iters=64)
+        idx_s, plan_s, _ = D.insert_vertex_sharded(idx_s, plan_s, ns, nd,
+                                                   max_iters=64,
+                                                   extend=False)
+        assert plan_e.m == plan_s.m == int(np.asarray(idx_e.graph.m))
+        assert_index_eq(ref, idx_e, f"extend insert {r}")
+        assert_index_eq(ref, idx_s, f"scratch insert {r}")
+
+    ds, dd = src[20:70], dst[20:70]
+    ref = ref.delete_edges(ds, dd)
+    idx_e = idx_e.delete_edges(ds, dd)
+    refd = ref.rebuild(mode="delta", max_iters=64)
+    idxd, pland, info = D.rebuild_vertex_sharded(idx_e, plan_e, mode="delta",
+                                                 max_iters=64)
+    assert info["mode"] == "delta", info
+    assert_index_eq(refd, idxd, "delta rebuild")
+    # the delta path hands back a compacted from-scratch plan; the next
+    # insert extends IT
+    ns, nd = clean_batch(rng, n, 24)
+    refd = refd.insert_edges(ns, nd, max_iters=64)
+    idxd, pland, _ = D.insert_vertex_sharded(idxd, pland, ns, nd,
+                                             max_iters=64)
+    assert_index_eq(refd, idxd, "post-delta extend insert")
+    reff = refd.rebuild(mode="full", max_iters=64)
+    idxf, _, _ = D.rebuild_vertex_sharded(idxd, pland, mode="full",
+                                          max_iters=64)
+    assert_index_eq(reff, idxf, "full rebuild")
+
+    # stale-plan catch-up inside the delta rebuild path: hand it a plan
+    # that misses the last insert window — it must extend, not misroute
+    idx2, plan2 = D.build_vertex_sharded(g, mesh, n_cap=n, **K)
+    ref2 = DBLIndex.build(g, n_cap=n, **K)
+    ns, nd = clean_batch(rng, n, 32)
+    idx2, plan_new, _ = D.insert_vertex_sharded(idx2, plan2, ns, nd,
+                                                max_iters=64)
+    ref2 = ref2.insert_edges(ns, nd, max_iters=64)
+    ref2 = ref2.delete_edges(src[:10], dst[:10])
+    idx2 = idx2.delete_edges(src[:10], dst[:10])
+    refd2 = ref2.rebuild(mode="delta", max_iters=64)
+    # pass the PRE-insert plan: plan2.m < m_now forces the catch-up branch
+    idxd2, _, info2 = D.rebuild_vertex_sharded(idx2, plan2, mode="delta",
+                                               max_iters=64)
+    assert info2["mode"] == "delta", info2
+    assert_index_eq(refd2, idxd2, "delta rebuild with stale plan")
+    print("lifecycle labels bitwise OK")
+
+
+def rebuild_insert_flush_ordering():
+    """Engine ordering regression (satellite 3): after rebuild() hands the
+    engine a fresh plan via _plan_override, an insert BEFORE the next flush
+    must extend the override plan — not a stale one, and not pay a
+    from-scratch rebuild.  Answers must match the replicated engine across
+    submit -> delete -> rebuild -> insert -> submit -> flush."""
+    n, m = 256, 1400
+    src, dst = power_law(n, m, seed=13)
+    g = make_graph(src, dst, n, m_cap=m + 1024)
+    mesh = D.vertex_mesh(SHARDS)
+    ref = DBLIndex.build(g, n_cap=n, **K)
+    eng_r = QueryEngine(ref, bfs_chunk=64, max_iters=64)
+    eng_s = QueryEngine(ref, bfs_chunk=64, max_iters=64, vertex_mesh=mesh)
+    rng = np.random.default_rng(17)
+
+    u = rng.integers(0, n, 96).astype(np.int32)
+    v = rng.integers(0, n, 96).astype(np.int32)
+    p_r = eng_r.submit(eng_r.index, u, v)
+    p_s = eng_s.submit(eng_s.index, u, v)
+    eng_r.delete(src[:30], dst[:30])
+    eng_s.delete(src[:30], dst[:30])
+    eng_r.rebuild(mode="delta")
+    eng_s.rebuild(mode="delta")
+    assert eng_s._plan_override is None, "override leaked past the re-bind"
+    adopted = eng_s._plan
+    assert adopted.m == int(np.asarray(eng_s.index.graph.m)), \
+        "adopted plan does not cover the rebuilt index"
+
+    # insert BEFORE any flush: must extend the adopted override plan
+    import repro.core.planes as planes_mod
+    calls = {"n": 0}
+    orig = planes_mod.shard_plan
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return orig(*a, **kw)
+
+    planes_mod.shard_plan = counting
+    try:
+        ns, nd = clean_batch(rng, n, 24)
+        eng_r.insert(ns, nd)
+        eng_s.insert(ns, nd)
+    finally:
+        planes_mod.shard_plan = orig
+    assert calls["n"] == 0, \
+        "insert after rebuild paid a from-scratch plan rebuild"
+    assert eng_s._plan.m == adopted.m + len(ns), \
+        "insert did not extend the override plan"
+
+    u2 = rng.integers(0, n, 96).astype(np.int32)
+    v2 = rng.integers(0, n, 96).astype(np.int32)
+    p_r2 = eng_r.submit(eng_r.index, u2, v2)
+    p_s2 = eng_s.submit(eng_s.index, u2, v2)
+    for a, b in zip(eng_r.flush([p_r, p_r2]), eng_s.flush([p_s, p_s2])):
+        assert (np.asarray(a) == np.asarray(b)).all(), \
+            "rebuild-then-insert-then-flush answers diverged"
+
+    # a STALE override must be rejected at adoption, not trusted: plant one
+    # for a different edge count and re-bind — the setter must rebuild
+    eng_s._plan_override = eng_s._plan._replace(m=eng_s._plan.m + 999)
+    eng_s.index = eng_s.index
+    assert eng_s._plan_override is None
+    assert eng_s._plan.m == int(np.asarray(eng_s.index.graph.m)), \
+        "setter adopted a plan for the wrong edge prefix"
+    u3 = rng.integers(0, n, 64).astype(np.int32)
+    v3 = rng.integers(0, n, 64).astype(np.int32)
+    assert (eng_r.query(u3, v3) == eng_s.query(u3, v3)).all()
+    print("rebuild/insert/flush ordering OK")
+
+
+def in_granule_extension_compiles_nothing():
+    """Dispatch-shape budget: once the sharded engine is warm, a stream of
+    in-granule inserts + queries + flushes adds ZERO compiled executables —
+    neither engine phases nor the halo-fixpoint/seed-scatter impls (the
+    extended plan keeps every operand shape, so jit caches never grow)."""
+    n, m = 256, 1400
+    src, dst = power_law(n, m, seed=19)
+    g = make_graph(src, dst, n, m_cap=m + 2048)
+    mesh = D.vertex_mesh(SHARDS)
+    ref = DBLIndex.build(g, n_cap=n, **K)
+    eng = QueryEngine(ref, bfs_chunk=64, max_iters=64, vertex_mesh=mesh)
+    eng.warmup(eng.index, bfs_buckets=eng._chunk_buckets())
+    rng = np.random.default_rng(23)
+    # one warm round: first insert/flush compiles the fixpoint shapes
+    ns, nd = clean_batch(rng, n, 24)
+    eng.insert(ns, nd)
+    u = rng.integers(0, n, 96).astype(np.int32)
+    v = rng.integers(0, n, 96).astype(np.int32)
+    eng.flush([eng.submit(eng.index, u, v)])
+
+    e_shape = (eng._plan.fwd.e_recv.shape, eng._plan.fwd.h_send.shape)
+    warm = (eng.dispatch_shapes(),
+            PL._halo_propagate_impl._cache_size(),
+            PL.sharded_seed_scatter._cache_size())
+    for r in range(4):
+        ns, nd = clean_batch(rng, n, 24)
+        eng.insert(ns, nd)
+        u = rng.integers(0, n, 96).astype(np.int32)
+        v = rng.integers(0, n, 96).astype(np.int32)
+        pend = eng.submit(eng.index, u, v)
+        (a,) = eng.flush([pend])
+        assert a.shape == (96,)
+    assert (eng._plan.fwd.e_recv.shape, eng._plan.fwd.h_send.shape) \
+        == e_shape, "in-granule stream changed plan extents"
+    now = (eng.dispatch_shapes(),
+           PL._halo_propagate_impl._cache_size(),
+           PL.sharded_seed_scatter._cache_size())
+    assert now == warm, \
+        f"in-granule extension stream recompiled: {warm} -> {now}"
+    print("in-granule extension compiles nothing OK")
+
+
+def main():
+    assert len(jax.devices()) == 4, jax.devices()
+    plan_stream_equivalence()
+    early_outs_and_dedupe()
+    lifecycle_labels_bitwise()
+    rebuild_insert_flush_ordering()
+    in_granule_extension_compiles_nothing()
+    print("PLAN_EXTENSION_OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -624,3 +624,37 @@ def test_streamed_kernels_on_real_index():
                                max_iters=48)
     np.testing.assert_array_equal(np.asarray(hits[False]),
                                   np.asarray(hits[True]))
+
+
+def test_streamed_verdicts_il_falls_back_to_grid():
+    """streaming=True with interval operands must not raise: the ops layer
+    falls back to the grid kernel (which fuses the containment check) with
+    a ONE-TIME warning, and the verdicts equal the explicit grid call."""
+    import warnings
+    from repro.kernels.dbl_query import ops as dq_ops
+    from repro.kernels.dbl_query.ops import verdicts_device
+    from repro.core.interval import build_il
+    rng = np.random.default_rng(27)
+    n = 48
+    g = make_graph(rng.integers(0, n, 200).astype(np.int32),
+                   rng.integers(0, n, 200).astype(np.int32), n, m_cap=224)
+    idx = DBLIndex.build(g, n_cap=n, k=8, k_prime=8, max_iters=32)
+    il_in, il_out, _ = build_il(g, n_cap=n, dim=2, seed=5, max_iters=32)
+    u = jnp.asarray(rng.integers(0, n, 40).astype(np.int32))
+    v = jnp.asarray(rng.integers(0, n, 40).astype(np.int32))
+    grid = verdicts_device(idx.packed, u, v, il=(il_in, il_out),
+                           q_block=64, interpret=True)
+    dq_ops._stream_il_warned = False
+    try:
+        with pytest.warns(UserWarning, match="grid kernel"):
+            dma = verdicts_device(idx.packed, u, v, il=(il_in, il_out),
+                                  q_block=64, interpret=True, streaming=True)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            dma2 = verdicts_device(idx.packed, u, v, il=(il_in, il_out),
+                                   q_block=64, interpret=True,
+                                   streaming=True)
+    finally:
+        dq_ops._stream_il_warned = True
+    np.testing.assert_array_equal(np.asarray(grid), np.asarray(dma))
+    np.testing.assert_array_equal(np.asarray(grid), np.asarray(dma2))

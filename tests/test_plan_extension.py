@@ -1,0 +1,30 @@
+"""Incremental shard-plan extension suite (the PR-9 planext CI step).
+
+The differential assertions live in tests/distributed/run_plan_extension.py
+and run in a subprocess with XLA_FLAGS forcing 4 host devices: extend_plan
+must reproduce from-scratch shard_plan routing tables over random insert
+streams (granule overflow included), early-out on zero-cut and
+empty-normalized batches, dedupe in-batch duplicates/self-loops, extend
+the override plan across an engine rebuild-then-insert-then-flush
+ordering, and compile nothing for in-granule extensions — with labels and
+answers bitwise equal to the replicated oracle across the full
+lifecycle."""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+@pytest.mark.slow
+def test_plan_extension_differential():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{ROOT / 'src'}:{ROOT}"
+    out = subprocess.run(
+        [sys.executable, str(ROOT / "tests/distributed/run_plan_extension.py")],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert "PLAN_EXTENSION_OK" in out.stdout

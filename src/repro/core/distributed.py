@@ -315,7 +315,9 @@ def insert_vertex_sharded(idx: DBLIndex, plan: PL.ShardPlan, new_src,
                 f"graph has m={m0}, n_cap={idx.n_cap}): rebuilding the "
                 "routing tables from scratch", stacklevel=2)
         plan2 = PL.shard_plan(g2.src, g2.dst, int(np.asarray(g2.m)),
-                              idx.n_cap, mesh)
+                              idx.n_cap, mesh,
+                              edge_granule=plan.edge_granule,
+                              halo_granule=plan.halo_granule)
     live = G.edge_mask(g2)
     store = idx.store
     seeded_f, fr_f = PL.sharded_seed_scatter(store.fused(), ns, nd,
@@ -407,15 +409,24 @@ def rebuild_vertex_sharded(idx: DBLIndex, plan: PL.ShardPlan | None, *,
         return i2, p2, {**info, "estimate": est}
     g = idx.graph
     m_now = int(np.asarray(g.m))
+    gran = {} if plan is None else dict(edge_granule=plan.edge_granule,
+                                        halo_granule=plan.halo_granule)
     if plan is None or plan.n_cap != n_cap or plan.mesh != mesh \
             or plan.m > m_now:
-        plan = PL.shard_plan(g.src, g.dst, m_now, n_cap, mesh)
+        plan = PL.shard_plan(g.src, g.dst, m_now, n_cap, mesh, **gran)
     elif plan.m < m_now:
         # O(Δm) catch-up over the append-only window the plan missed —
         # slots [plan.m, m_now) are exactly the edges inserted since the
-        # plan was built, so extension reproduces the from-scratch tables
+        # plan was built.  The window may span SEVERAL insert batches with
+        # deletes interleaved, so keep every raw slot (dedupe=False): the
+        # per-batch first-occurrence dedupe would keep a tombstoned slot
+        # and drop its live re-inserted twin, and the live edge would
+        # never relax.  Raw slots make the bucket arrays bit-identical to
+        # the from-scratch tables (duplicates/self-loops are as harmless
+        # here as they are in _build_dir).
         src, dst = np.asarray(g.src), np.asarray(g.dst)
-        plan = PL.extend_plan(plan, src[plan.m:m_now], dst[plan.m:m_now])
+        plan = PL.extend_plan(plan, src[plan.m:m_now], dst[plan.m:m_now],
+                              dedupe=False)
     (x_fwd, x_bwd, fresh_fwd, fresh_bwd, seed_fwd, seed_bwd,
      fr_fwd, fr_bwd) = L.delta_plane_state(
         g, idx.dl_in, idx.dl_out, idx.bl_in, idx.bl_out,
@@ -442,7 +453,7 @@ def rebuild_vertex_sharded(idx: DBLIndex, plan: PL.ShardPlan | None, *,
             x_fwd = x
     g2 = G.compact(g) if compact else g
     plan2 = PL.shard_plan(g2.src, g2.dst, int(np.asarray(g2.m)), n_cap,
-                          mesh) if compact else plan
+                          mesh, **gran) if compact else plan
     # plug-in family repair, as in the replicated delta path: every
     # interval dimension is churned under deletion, so both planes are
     # re-derived from the stored seed over the live edge set — bitwise

@@ -317,12 +317,18 @@ class ShardPlan(NamedTuple):
     edges; compact renumbers slots) — tombstones do NOT invalidate it, the
     live mask is gathered per round via ``e_gid``.  Array extents are
     rounded up to granules so steady insert streams reuse the compiled
-    fixpoint executables instead of recompiling per batch."""
+    fixpoint executables instead of recompiling per batch; the granules the
+    plan was built with are recorded so :func:`extend_plan` (and the
+    rebuild fallbacks) round on the SAME grid — extending a custom-granule
+    plan on the default grid would spill to extents a from-scratch build
+    never picks, churning compiled shapes for no reason."""
     mesh: Mesh
     n_cap: int
     m: int               # edge prefix the plan covers
     fwd: _DirPlan
     bwd: _DirPlan
+    edge_granule: int = 1024
+    halo_granule: int = 64
 
     @property
     def shards(self) -> int:
@@ -423,15 +429,16 @@ def shard_plan(src, dst, m: int, n_cap: int, mesh: Mesh, *,
         fwd=_build_dir(src, dst, int(m), n_loc, d, edge_granule,
                        halo_granule),
         bwd=_build_dir(dst, src, int(m), n_loc, d, edge_granule,
-                       halo_granule))
+                       halo_granule),
+        edge_granule=edge_granule, halo_granule=halo_granule)
 
 
 # ------------------------------------------- incremental plan extension
-def _normalize_batch(new_src, new_dst, m0: int
+def _normalize_batch(new_src, new_dst, m0: int, dedupe: bool = True
                      ) -> tuple[np.ndarray, np.ndarray, np.ndarray, int]:
-    """Normalize one insert batch for plan extension: drop self-loops and
-    in-batch duplicate pairs, keeping each pair's FIRST (lowest-gid)
-    occurrence.
+    """Normalize one insert batch for plan extension.  With ``dedupe``
+    (the single-batch default) self-loops and in-batch duplicate pairs are
+    dropped, keeping each pair's FIRST (lowest-gid) occurrence.
 
     Self-loops are OR/MIN no-ops in every fixpoint (a row relaxed into
     itself) and BFS no-ops (the pushing vertex is already visited), so the
@@ -444,13 +451,20 @@ def _normalize_batch(new_src, new_dst, m0: int
     can separate two slots of the same batch.  (The graph itself still
     appends every raw slot; only the routing tables dedupe.)
 
+    ``dedupe=False`` keeps EVERY raw slot, exactly like a from-scratch
+    ``_build_dir``.  That is the only sound mode for a window that spans
+    multiple batches (the rebuild catch-up): a pair inserted, tombstoned,
+    and re-inserted inside the window has a dead slot with a lower gid than
+    its live twin, and the first-occurrence rule would route the dead slot
+    (masked out per round via ``e_gid``) while dropping the live one.
+
     Returns (src, dst, gid, raw) with ``gid`` the kept edges' global slots
     (``m0 + position in the raw batch``) and ``raw`` the raw batch size."""
     src = np.asarray(new_src, np.int64).ravel()
     dst = np.asarray(new_dst, np.int64).ravel()
     raw = int(src.size)
     gid = m0 + np.arange(raw, dtype=np.int64)
-    if raw == 0:
+    if raw == 0 or not dedupe:
         return src, dst, gid, raw
     hi = int(max(src.max(), dst.max())) + 1
     _, first = np.unique(src * hi + dst, return_index=True)
@@ -471,8 +485,19 @@ def _extend_dir(dp: _DirPlan, push: np.ndarray, recv: np.ndarray,
     OR bits if a recv id had runs in both the old and an appended region.
     So new edges are MERGED into recv-sorted position via two searchsorted
     passes (new gids sort after old gids within equal recv, reproducing
-    exactly the from-scratch stable order) — O(Δm log Δm) sort work plus
-    O(E) memcpy, never a re-sort of the existing edges."""
+    exactly the from-scratch stable order of ``e_recv``/``e_gid``) —
+    O(Δm log Δm) sort work plus O(E) memcpy, never a re-sort of the
+    existing edges.
+
+    Scope of the bit-for-bit claim: ``e_recv``/``e_gid``/``e_valid`` (and
+    the derived ``e_start``/``e_tail``) match a from-scratch build exactly.
+    ``h_send`` appends fresh cut vertices AFTER the existing slots —
+    existing slot positions are the invariant compiled executables depend
+    on — so when a fresh vertex sorts below an existing one the halo list
+    order (and with it the ``e_slot`` values that index into it) diverges
+    from the from-scratch globally-sorted order.  Only semantic equivalence
+    holds there: the decoded (slot -> global pushing vertex) map is
+    identical, which is what the fixpoint reads."""
     e_slot = np.asarray(dp.e_slot).astype(np.int64, copy=True)
     e_recv = np.asarray(dp.e_recv)
     e_gid = np.asarray(dp.e_gid)
@@ -599,8 +624,9 @@ def _extend_dir(dp: _DirPlan, push: np.ndarray, recv: np.ndarray,
 
 
 def extend_plan(plan: ShardPlan, new_src, new_dst, *,
-                edge_granule: int = 1024,
-                halo_granule: int = 64) -> ShardPlan:
+                edge_granule: int | None = None,
+                halo_granule: int | None = None,
+                dedupe: bool = True) -> ShardPlan:
     """Append a Δ-batch of edges into an existing plan's routing tables —
     the O(m + Δm log Δm) incremental twin of :func:`shard_plan` (no re-sort
     of the m existing edges; the only per-edge work on them is memcpy).
@@ -608,21 +634,38 @@ def extend_plan(plan: ShardPlan, new_src, new_dst, *,
     The new edges take global slots ``[plan.m, plan.m + Δ)`` — exactly what
     ``graph.insert_edges`` assigns — so the extended plan covers the same
     edge prefix a from-scratch ``shard_plan`` over the appended arrays
-    would, and (absent in-batch duplicates/self-loops, which extension
-    drops from the tables) its bucket arrays are bit-identical to it.
+    would.  The equivalence contract: ``e_recv``/``e_gid``/``e_valid`` come
+    out bit-identical to the from-scratch build (absent in-batch
+    duplicates/self-loops, which ``dedupe`` drops from the tables);
+    ``h_send``/``e_slot`` are only semantically equivalent — fresh halo
+    vertices append after the existing slots instead of re-sorting the
+    lists, so their order can diverge (see :func:`_extend_dir`).
+
+    ``dedupe`` MUST be False when the batch spans more than one insert
+    batch — e.g. the rebuild catch-up window — because a pair deleted and
+    re-inserted across batches would have its live slot dropped in favor
+    of its tombstoned twin (see :func:`_normalize_batch`).  With
+    ``dedupe=False`` every raw slot enters the tables, exactly as in
+    ``_build_dir`` (duplicates/self-loops are harmless in the buckets),
+    and the bucket arrays are bit-identical to from-scratch even on
+    hostile input.
 
     Shape discipline: the padded extents ``E_pad``/``H`` are KEPT as long
     as the appended entries fit the granule-rounded tails, so compiled
     fixpoint executables keyed on those extents keep firing across steady
     insert streams; a bucket overflow spills to ``_round_up(needed,
-    granule)`` — the same extent a from-scratch build would pick.  A batch
-    that adds no cut edge leaves ``h_send``/``h_valid`` untouched (the very
-    arrays, not copies), and a batch that normalizes to nothing returns the
-    plan with only ``m`` advanced."""
+    granule)`` — the same extent a from-scratch build would pick.
+    Granules default to the ones ``plan`` was built with (recorded on the
+    plan), so extension rounds on the same grid as the original build.  A
+    batch that adds no cut edge leaves ``h_send``/``h_valid`` untouched
+    (the very arrays, not copies), and a batch that normalizes to nothing
+    returns the plan with only ``m`` advanced."""
+    edge_granule = plan.edge_granule if edge_granule is None else edge_granule
+    halo_granule = plan.halo_granule if halo_granule is None else halo_granule
     layout = vertex_layout(plan.mesh)
     n_loc = _check_rows(plan.n_cap, layout)
     d = layout.shards
-    src, dst, gid, raw = _normalize_batch(new_src, new_dst, plan.m)
+    src, dst, gid, raw = _normalize_batch(new_src, new_dst, plan.m, dedupe)
     m2 = plan.m + raw
     if src.size == 0:
         return plan._replace(m=m2)
@@ -631,7 +674,8 @@ def extend_plan(plan: ShardPlan, new_src, new_dst, *,
         fwd=_extend_dir(plan.fwd, src, dst, gid, n_loc, d, edge_granule,
                         halo_granule),
         bwd=_extend_dir(plan.bwd, dst, src, gid, n_loc, d, edge_granule,
-                        halo_granule))
+                        halo_granule),
+        edge_granule=edge_granule, halo_granule=halo_granule)
 
 
 # ------------------------------------------------- sharded collectives

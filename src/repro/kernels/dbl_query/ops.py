@@ -15,8 +15,13 @@ from repro.core.query import FRESH_CUT, PackedLabels
 from repro.kernels._pad import pad_axis as _pad_to
 from .dbl_query import dbl_query_verdicts, dbl_query_verdicts_streamed
 
-#: one-time-warning latch for the streaming+il grid fallback below
-_stream_il_warned = False
+class StreamILFallbackWarning(UserWarning):
+    """A streaming+il verdict dispatch fell back to the grid kernel (the
+    streamed kernel's fixed copy pipeline takes no interval operands;
+    verdicts are bitwise identical).  A dedicated category so callers can
+    silence or escalate the fallback with the standard ``warnings``
+    filters — there is no process-wide latch that would mute the signal
+    for unrelated engines or threads."""
 
 
 def verdicts_device(p: PackedLabels, u: jax.Array, v: jax.Array,
@@ -47,16 +52,16 @@ def verdicts_device(p: PackedLabels, u: jax.Array, v: jax.Array,
     both sides of every comparison, so they never prune.  The streamed
     kernel keeps its fixed copy pipeline and takes no interval operands;
     ``streaming=True`` with ``il`` falls back to the grid kernel (identical
-    verdicts) with a one-time warning instead of failing the dispatch."""
+    verdicts), signalling a :class:`StreamILFallbackWarning` on every
+    traced dispatch instead of failing it.  Jit caching means a steady
+    stream warns once per compiled shape; the QueryEngine additionally
+    latches it to once per engine instance."""
     if streaming and il is not None:
-        global _stream_il_warned
-        if not _stream_il_warned:
-            _stream_il_warned = True
-            warnings.warn(
-                "the streamed dbl_query kernel's fixed copy pipeline takes "
-                "no interval-family operands; il-enabled verdict dispatches "
-                "fall back to the grid kernel (bitwise-identical verdicts)",
-                stacklevel=2)
+        warnings.warn(
+            "the streamed dbl_query kernel's fixed copy pipeline takes "
+            "no interval-family operands; il-enabled verdict dispatches "
+            "fall back to the grid kernel (bitwise-identical verdicts)",
+            StreamILFallbackWarning, stacklevel=2)
         streaming = False
     q = u.shape[0]
     streams = [p.dl_out[u], p.dl_in[v], p.dl_out[v], p.dl_in[u],

@@ -12,9 +12,9 @@ keeps the whole pipeline device-resident:
   forces the kernel through the Pallas interpreter for parity testing);
   ``streaming=True`` routes kernel backends through the PR-7 double-buffered
   streamed kernels (verdicts + BFS admit planes) instead of the grid forms —
-  il-enabled verdict dispatches fall back to the grid kernel with a one-time
-  warning, since the streamed verdict kernel's fixed copy pipeline takes no
-  interval operands;
+  il-enabled verdict dispatches fall back to the grid kernel with a
+  once-per-engine ``StreamILFallbackWarning``, since the streamed verdict
+  kernel's fixed copy pipeline takes no interval operands;
 - **one fused label phase** — verdicts, unknown-lane compaction (stable
   cumsum/scatter), and endpoint gathers run in a single compiled executable;
   the only host traffic per batch is one int32 scalar (the unknown count);
@@ -103,7 +103,8 @@ from repro.core import update as U
 from repro.core.propagate import check_plane_repr
 from repro.core.dbl import (DBLIndex, LabelSaturationWarning,
                             _saturation_message)
-from repro.kernels.dbl_query.ops import verdicts_device
+from repro.kernels.dbl_query.ops import (StreamILFallbackWarning,
+                                         verdicts_device)
 from repro.kernels.bfs_prune.ops import admit_plane as bfs_admit_plane_op
 
 #: supported consistency modes (``"latest-snapshot"`` is an alias)
@@ -288,6 +289,10 @@ class QueryEngine:
                 "the vertex-sharded layout reconstructs verdict row blocks "
                 "with shard_map collectives and never dispatches the "
                 "query kernels — streaming=True would be dead there")
+        # per-ENGINE latch for the streaming+il grid fallback warning: the
+        # ops layer warns per traced shape, which this narrows to exactly
+        # one signal per engine instance without muting other engines
+        self._stream_il_warned = False
         self.mesh = mesh
         self.vertex_mesh = vertex_mesh
         self.layout = "vertex_sharded" if vertex_mesh is not None \
@@ -417,6 +422,25 @@ class QueryEngine:
             return jnp.broadcast_to(
                 jnp.where(d_stale, jnp.int32(0), jnp.int32(1)), shape)
 
+        def verdict_streaming(il):
+            """Trace-time effective ``streaming`` flag for a verdict
+            dispatch: the streamed kernel takes no interval operands, so
+            il-enabled dispatches route to the grid kernel here — warning
+            once per engine with the ops layer's dedicated category, then
+            handing ``streaming=False`` down so the per-trace ops warning
+            stays silent."""
+            if streaming and il is not None:
+                if not self._stream_il_warned:
+                    self._stream_il_warned = True
+                    warnings.warn(
+                        "streaming engine bound to an il-enabled index: "
+                        "verdict dispatches fall back to the grid kernel "
+                        "(bitwise-identical verdicts); the streamed "
+                        "dbl_query kernel takes no interval-family "
+                        "operands", StreamILFallbackWarning, stacklevel=2)
+                return False
+            return streaming
+
         def label_phase(p: Q.PackedLabels, il, u, v, d_stale):
             """Verdicts + on-device compaction of unknown lanes, fused.
 
@@ -454,7 +478,7 @@ class QueryEngine:
                     jnp.full(u.shape, Q.FRESH_CUT, jnp.int32), jnp.int32(0),
                     _d_cut_vec(d_stale, u.shape), jnp.int32(1), il,
                     q_block=q_block, interpret=interpret,
-                    out_dtype=out_dtype, streaming=streaming)
+                    out_dtype=out_dtype, streaming=verdict_streaming(il))
                 rows = Q.gather_rows(p, u, v)
                 il_rows = Q.gather_il_rows(il, u, v)
             else:
@@ -520,7 +544,7 @@ class QueryEngine:
                         _d_cut_vec(d_stale, uu.shape), jnp.int32(1), il,
                         q_block=min(q_block, chunk),
                         interpret=interpret, out_dtype=out_dtype,
-                        streaming=streaming)
+                        streaming=verdict_streaming(il))
                 else:
                     verd = Q.cut_verdicts(p, uu_safe, vv, m_cut, g.m,
                                           ~d_stale, il=il)

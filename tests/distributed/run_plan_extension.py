@@ -6,8 +6,11 @@ Pins the PR-9 contract: ``planes.extend_plan`` must reproduce from-scratch
 bit-identical on clean batches, slot decoding semantically identical
 always), keep granule-rounded extents stable until a tail genuinely
 overflows, early-out on zero-cut and empty-normalized batches, dedupe
-in-batch duplicates/self-loops, extend the OVERRIDE plan after an engine
-rebuild, and compile NOTHING for in-granule extensions — while labels,
+in-batch duplicates/self-loops, keep EVERY raw slot over a multi-batch
+rebuild catch-up window (insert -> delete -> re-insert of one pair must
+route the live slot, not its tombstoned twin), extend the OVERRIDE plan
+after an engine rebuild, and compile NOTHING for in-granule extensions —
+while labels,
 verdicts, and answers stay bitwise equal to the replicated oracle across
 the full lifecycle (build -> insert stream -> delete -> rebuild).
 
@@ -255,6 +258,74 @@ def lifecycle_labels_bitwise():
     print("lifecycle labels bitwise OK")
 
 
+def catchup_window_reinsert():
+    """Regression (REVIEW high): the delta-rebuild catch-up window spans
+    MULTIPLE insert batches, and a pair inserted, tombstoned, and
+    re-inserted inside it has a dead slot with a lower gid than its live
+    twin.  The per-batch first-occurrence dedupe would keep the dead slot
+    (masked out every round via e_gid) and drop the live one — the edge
+    would never relax and sharded labels would be silently wrong.  The
+    catch-up must extend with dedupe=False: every raw slot routed, bucket
+    arrays bit-identical to from-scratch, labels equal to the replicated
+    oracle."""
+    n, m = 256, 1200
+    src, dst = power_law(n, m, seed=29)
+    mesh = D.vertex_mesh(SHARDS)
+    rng = np.random.default_rng(31)
+    a, b = 3, n - 5                      # cross-shard pair (shard 0 -> 3)
+    keep = ~((src == a) & (dst == b))    # not present in the base graph
+    src, dst = src[keep], dst[keep]
+    m0 = len(src)
+    g = make_graph(src, dst, n, m_cap=m0 + 1024)
+    ref = DBLIndex.build(g, n_cap=n, **K)
+    idx, plan0 = D.build_vertex_sharded(g, mesh, n_cap=n, **K)
+
+    # window batch 1 ends with (a, b); plan0 stays STALE on purpose
+    ns1, nd1 = clean_batch(rng, n, 16)
+    keep = ~((ns1 == a) & (nd1 == b))
+    ns1 = np.concatenate([ns1[keep], [a]]).astype(np.int32)
+    nd1 = np.concatenate([nd1[keep], [b]]).astype(np.int32)
+    ref = ref.insert_edges(ns1, nd1, max_iters=64)
+    idx, plan1, _ = D.insert_vertex_sharded(idx, plan0, ns1, nd1,
+                                            max_iters=64)
+    gid_dead = m0 + len(ns1) - 1
+    # tombstone (a, b) — kills the batch-1 slot only
+    da = np.array([a], np.int32)
+    db = np.array([b], np.int32)
+    ref = ref.delete_edges(da, db)
+    idx = idx.delete_edges(da, db)
+    # window batch 2 re-inserts (a, b): a NEW live slot, higher gid
+    gid_live = int(np.asarray(idx.graph.m))
+    ref = ref.insert_edges(da, db, max_iters=64)
+    idx, plan2, _ = D.insert_vertex_sharded(idx, plan1, da, db,
+                                            max_iters=64)
+    m_now = int(np.asarray(idx.graph.m))
+
+    # table-level pin: raw-slot extension over the whole window ==
+    # from-scratch tables BIT for bit, with BOTH twins routed
+    gsrc = np.asarray(idx.graph.src)
+    gdst = np.asarray(idx.graph.dst)
+    pext = PL.extend_plan(plan0, gsrc[plan0.m:m_now], gdst[plan0.m:m_now],
+                          dedupe=False)
+    scratch = PL.shard_plan(gsrc, gdst, m_now, n, mesh)
+    assert_plan_equiv(pext, scratch, "catch-up window")
+    for dname in ("fwd", "bwd"):
+        dp = getattr(pext, dname)
+        gids = set(np.asarray(dp.e_gid)[np.asarray(dp.e_valid)].tolist())
+        assert gid_dead in gids and gid_live in gids, \
+            f"{dname}: catch-up dropped a window slot " \
+            f"(dead {gid_dead}, live {gid_live}, have {sorted(gids)[-8:]})"
+
+    # end-to-end: delta rebuild handed the STALE plan0 must catch up over
+    # the window and come out bitwise equal to the replicated oracle
+    refd = ref.rebuild(mode="delta", max_iters=64)
+    idxd, _, info = D.rebuild_vertex_sharded(idx, plan0, mode="delta",
+                                             max_iters=64)
+    assert info["mode"] == "delta", info
+    assert_index_eq(refd, idxd, "catch-up reinsert delta rebuild")
+    print("catch-up window re-insert OK")
+
+
 def rebuild_insert_flush_ordering():
     """Engine ordering regression (satellite 3): after rebuild() hands the
     engine a fresh plan via _plan_override, an insert BEFORE the next flush
@@ -372,6 +443,7 @@ def main():
     plan_stream_equivalence()
     early_outs_and_dedupe()
     lifecycle_labels_bitwise()
+    catchup_window_reinsert()
     rebuild_insert_flush_ordering()
     in_granule_extension_compiles_nothing()
     print("PLAN_EXTENSION_OK")

@@ -633,10 +633,11 @@ def test_engine_streaming_knob_validation():
 
 def test_engine_streaming_il_falls_back_with_one_warning():
     """An il-enabled index on a streaming engine must SERVE (grid-kernel
-    fallback), not crash in the kernel layer — warning exactly once, with
+    fallback), not crash in the kernel layer — warning exactly once PER
+    ENGINE (a fresh engine signals again; no process-wide latch), with
     answers bitwise equal to the non-streaming engine."""
     import warnings as _w
-    from repro.kernels.dbl_query import ops as dq_ops
+    from repro.kernels.dbl_query.ops import StreamILFallbackWarning
     src, dst = power_law(128, 700, seed=41)
     g = make_graph(src, dst, 128, m_cap=764)
     idx = DBLIndex.build(g, n_cap=128, k=8, k_prime=8, max_iters=64,
@@ -648,14 +649,17 @@ def test_engine_streaming_il_falls_back_with_one_warning():
                         backend="pallas-interpret")
     eng_s = QueryEngine(idx, bfs_chunk=64, max_iters=64,
                         backend="pallas-interpret", streaming=True)
-    dq_ops._stream_il_warned = False
-    try:
-        with pytest.warns(UserWarning, match="grid kernel"):
-            a = eng_s.query(u, v)
-        with _w.catch_warnings():
-            _w.simplefilter("error")     # second dispatch must stay silent
-            b = eng_s.query(v, u)
-    finally:
-        dq_ops._stream_il_warned = True
+    with pytest.warns(StreamILFallbackWarning, match="grid kernel"):
+        a = eng_s.query(u, v)
+    with _w.catch_warnings():
+        _w.simplefilter("error")     # second dispatch must stay silent
+        b = eng_s.query(v, u)
     np.testing.assert_array_equal(a, eng_g.query(u, v))
     np.testing.assert_array_equal(b, eng_g.query(v, u))
+    # the latch is per engine instance: a NEW streaming engine must not be
+    # silently downgraded by the first one's warning
+    eng_s2 = QueryEngine(idx, bfs_chunk=64, max_iters=64,
+                         backend="pallas-interpret", streaming=True)
+    with pytest.warns(StreamILFallbackWarning, match="grid kernel"):
+        a2 = eng_s2.query(u, v)
+    np.testing.assert_array_equal(a2, a)

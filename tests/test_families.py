@@ -300,14 +300,10 @@ def test_grid_kernel_and_admit_plane_parity_with_il():
                                        q_block=128))
     np.testing.assert_array_equal(ref, got)
     # streaming+il no longer raises: the dispatch falls back to the grid
-    # kernel (one-time warning, bitwise-identical verdicts)
-    QK._stream_il_warned = False
-    try:
-        with pytest.warns(UserWarning, match="grid kernel"):
-            via_stream = np.asarray(QK.query_verdicts(
-                idx.packed, uj, vj, il=idx.il, q_block=128, streaming=True))
-    finally:
-        QK._stream_il_warned = True
+    # kernel (StreamILFallbackWarning, bitwise-identical verdicts)
+    with pytest.warns(QK.StreamILFallbackWarning, match="grid kernel"):
+        via_stream = np.asarray(QK.query_verdicts(
+            idx.packed, uj, vj, il=idx.il, q_block=128, streaming=True))
     np.testing.assert_array_equal(ref, via_stream)
     # admit plane: interval AND wraps the bit-plane kernel output
     q = min(64, len(u))

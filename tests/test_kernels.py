@@ -629,10 +629,12 @@ def test_streamed_kernels_on_real_index():
 def test_streamed_verdicts_il_falls_back_to_grid():
     """streaming=True with interval operands must not raise: the ops layer
     falls back to the grid kernel (which fuses the containment check) with
-    a ONE-TIME warning, and the verdicts equal the explicit grid call."""
+    a dedicated StreamILFallbackWarning on every dispatch — no process-wide
+    latch, so the category stays filterable per caller — and the verdicts
+    equal the explicit grid call."""
     import warnings
-    from repro.kernels.dbl_query import ops as dq_ops
-    from repro.kernels.dbl_query.ops import verdicts_device
+    from repro.kernels.dbl_query.ops import (StreamILFallbackWarning,
+                                             verdicts_device)
     from repro.core.interval import build_il
     rng = np.random.default_rng(27)
     n = 48
@@ -644,17 +646,16 @@ def test_streamed_verdicts_il_falls_back_to_grid():
     v = jnp.asarray(rng.integers(0, n, 40).astype(np.int32))
     grid = verdicts_device(idx.packed, u, v, il=(il_in, il_out),
                            q_block=64, interpret=True)
-    dq_ops._stream_il_warned = False
-    try:
-        with pytest.warns(UserWarning, match="grid kernel"):
-            dma = verdicts_device(idx.packed, u, v, il=(il_in, il_out),
-                                  q_block=64, interpret=True, streaming=True)
-        with warnings.catch_warnings():
-            warnings.simplefilter("error")
-            dma2 = verdicts_device(idx.packed, u, v, il=(il_in, il_out),
-                                   q_block=64, interpret=True,
-                                   streaming=True)
-    finally:
-        dq_ops._stream_il_warned = True
+    with pytest.warns(StreamILFallbackWarning, match="grid kernel"):
+        dma = verdicts_device(idx.packed, u, v, il=(il_in, il_out),
+                              q_block=64, interpret=True, streaming=True)
+    # the category is the contract: a caller that accepts the fallback can
+    # silence EXACTLY it while every other warning stays fatal
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        warnings.simplefilter("ignore", StreamILFallbackWarning)
+        dma2 = verdicts_device(idx.packed, u, v, il=(il_in, il_out),
+                               q_block=64, interpret=True,
+                               streaming=True)
     np.testing.assert_array_equal(np.asarray(grid), np.asarray(dma))
     np.testing.assert_array_equal(np.asarray(grid), np.asarray(dma2))

@@ -4,7 +4,9 @@ The differential assertions live in tests/distributed/run_plan_extension.py
 and run in a subprocess with XLA_FLAGS forcing 4 host devices: extend_plan
 must reproduce from-scratch shard_plan routing tables over random insert
 streams (granule overflow included), early-out on zero-cut and
-empty-normalized batches, dedupe in-batch duplicates/self-loops, extend
+empty-normalized batches, dedupe in-batch duplicates/self-loops, keep
+every raw slot over a multi-batch rebuild catch-up window (a pair deleted
+and re-inserted inside the window must route its live slot), extend
 the override plan across an engine rebuild-then-insert-then-flush
 ordering, and compile nothing for in-granule extensions — with labels and
 answers bitwise equal to the replicated oracle across the full

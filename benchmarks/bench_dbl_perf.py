@@ -527,7 +527,12 @@ def plan_extension_stream(bg, *, shards: int | None = None, rounds: int = 11,
     ext_ms, scr_ms, plan_ext_ms, plan_scr_ms = [], [], [], []
     for i, (ns, nd) in enumerate(batches[:rounds]):
         # bare plan ops first (host-only, pre-mutation state is identical
-        # on both sides by construction)
+        # on both sides by construction); drain the async queue first —
+        # the replicated oracle's insert from the previous round is still
+        # executing, and whichever bare op runs first would absorb the
+        # device-queue wait in its uploads, contaminating a host-only
+        # measurement
+        jax.block_until_ready(ref.dl_in)
         t0 = time.perf_counter()
         PL.extend_plan(plan_e, ns, nd)
         t1 = time.perf_counter()
@@ -601,6 +606,95 @@ def plan_extension_stream(bg, *, shards: int | None = None, rounds: int = 11,
         "plan_op_ms_scratch": med(plan_scr_ms),
         "plan_op_speedup": med(plan_scr_ms) / max(med(plan_ext_ms), 1e-9),
         "labels_bitwise_equal": ok,
+    }
+
+
+def halo_stream(bg, *, shards: int | None = None, rounds: int = 6,
+                query_b: int = 256, insert_b: int = 64, seed: int = 31,
+                hub_count: int = 8):
+    """PR-10 section: dense vs sparse compressed halo exchange on the
+    vertex-sharded fixpoint, against the replicated baseline — the same
+    insert/query stream three ways (replicated, sharded halo_mode="dense",
+    sharded halo_mode="sparse" with the hub broadcast lane).  Reports the
+    modeled halo bytes each transport ships for the IDENTICAL round
+    structure (sparse is bitwise equal to dense by construction, so the
+    reduction is pure bandwidth), build/insert/flush latency, and the
+    sharded-vs-replicated latency gap the sparse exchange narrows
+    (compare against the PR-5 ``sharded`` section's gap)."""
+    from repro.core import distributed as D
+    from repro.core import halo as HL
+
+    shards = shards or len(jax.devices())
+    n_cap = -(-bg.n // shards) * shards
+    m_cap = len(bg.src) + rounds * insert_b + 64
+    rng = np.random.default_rng(seed)
+    stream = [(rng.integers(0, bg.n, query_b).astype(np.int32),
+               rng.integers(0, bg.n, query_b).astype(np.int32),
+               rng.integers(0, bg.n, insert_b).astype(np.int32),
+               rng.integers(0, bg.n, insert_b).astype(np.int32))
+              for _ in range(rounds)]
+
+    def run(mode: str):
+        g = G.make_graph(bg.src, bg.dst, bg.n, m_cap=m_cap)
+        t0 = time.perf_counter()
+        if mode == "replicated":
+            idx = DBLIndex.build(g, n_cap=n_cap, k=64, k_prime=64,
+                                 max_iters=64)
+            eng = QueryEngine(idx, bfs_chunk=256, max_iters=64)
+        else:
+            tel = HL.HaloTelemetry()
+            hub = hub_count if mode == "sparse" else 0
+            mesh = D.vertex_mesh(shards)
+            idx, _ = D.build_vertex_sharded(
+                g, mesh, n_cap=n_cap, k=64, k_prime=64, max_iters=64,
+                halo_mode=mode, hub_count=hub, telemetry=tel)
+            eng = QueryEngine(idx, bfs_chunk=256, max_iters=64,
+                              vertex_mesh=mesh, halo_mode=mode,
+                              hub_count=hub)
+            # one accounting stream across build + engine inserts/rebuilds
+            eng._halo_telemetry = tel
+        build_s = time.perf_counter() - t0
+        insert_s, pend = 0.0, []
+        for u, v, ns, nd in stream:
+            pend.append(eng.submit(eng.index, u, v))
+            t0 = time.perf_counter()
+            eng.insert(ns, nd)
+            eng.index.packed.dl_in.block_until_ready()
+            insert_s += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        answers = eng.flush(pend)
+        flush_s = time.perf_counter() - t0
+        out = {"build_s": build_s,
+               "insert_ms_per_batch": insert_s / rounds * 1e3,
+               "flush_ms": flush_s * 1e3}
+        if mode != "replicated":
+            out["halo"] = eng.halo_stats()
+        return out, np.concatenate(answers)
+
+    rep, ans_r = run("replicated")
+    den, ans_d = run("dense")
+    spr, ans_s = run("sparse")
+    hb_d = den["halo"]["halo_bytes"]
+    hb_s = spr["halo"]["halo_bytes"]
+    return {
+        "shards": shards,
+        "hub_count": hub_count,
+        "replicated": rep,
+        "dense": den,
+        "sparse": spr,
+        "halo_bytes_dense": hb_d,
+        "halo_bytes_sparse": hb_s,
+        "halo_byte_reduction": hb_d / max(hb_s, 1),
+        "halo_rounds_dense": den["halo"]["halo_rounds"],
+        "halo_rounds_sparse": spr["halo"]["halo_rounds"],
+        "build_gap_dense": den["build_s"] / rep["build_s"],
+        "build_gap_sparse": spr["build_s"] / rep["build_s"],
+        "insert_gap_dense": den["insert_ms_per_batch"]
+        / max(rep["insert_ms_per_batch"], 1e-9),
+        "insert_gap_sparse": spr["insert_ms_per_batch"]
+        / max(rep["insert_ms_per_batch"], 1e-9),
+        "answers_bitwise_equal": bool((ans_r == ans_d).all()
+                                      and (ans_r == ans_s).all()),
     }
 
 
@@ -783,7 +877,7 @@ def families_stream(bg, *, rounds: int = 4, query_b: int = 512,
 #: via argparse choices; programmatic callers are validated against the
 #: same tuple (an unknown name used to be silently skipped)
 KNOWN_SECTIONS = ("classic", "mixed", "epoch", "fully_dynamic", "delta",
-                  "sharded", "packed", "families", "planext")
+                  "sharded", "packed", "families", "planext", "halo")
 
 
 def main(scale: float = 0.1, datasets=("LJ", "Email", "Reddit"),
@@ -807,7 +901,7 @@ def main(scale: float = 0.1, datasets=("LJ", "Email", "Reddit"),
     report = {"scale": scale, "backend": jax.default_backend(),
               "datasets": {}, "epoch_coalescing": {}, "fully_dynamic": {},
               "delta_rebuild": {}, "sharded": {}, "packed": {},
-              "families": {}, "plan_extension": {}}
+              "families": {}, "plan_extension": {}, "halo": {}}
     if "families" in sections:
         print("dataset,build_s_core,build_s_il,insert_ms_core,insert_ms_il,"
               "flush_ms_core,flush_ms_il,bfs_core,bfs_il,il_hit_rate,"
@@ -841,12 +935,27 @@ def main(scale: float = 0.1, datasets=("LJ", "Email", "Reddit"),
               f"{r['bool']['delta_rebuild_ms']:.0f},"
               f"{r['packed']['delta_rebuild_ms']:.0f},"
               f"{r['answers_bitwise_equal']}")
-    for sec in ("sharded", "planext"):
+    for sec in ("sharded", "planext", "halo"):
         if sec in sections and len(jax.devices()) < 2:
             print(f"{sec} section needs >=2 devices "
                   "(set XLA_FLAGS=--xla_force_host_platform_device_count=4); "
                   "skipping")
             sections = sections - {sec}
+    if "halo" in sections:
+        print("dataset,shards,halo_bytes_dense,halo_bytes_sparse,reduction,"
+              "rounds_dense,rounds_sparse,insert_gap_dense,"
+              "insert_gap_sparse,bitwise  (dense vs sparse halo exchange)")
+    for name in datasets if "halo" in sections else ():
+        bg = load(name, scale=scale)
+        r = halo_stream(bg)
+        report["halo"][name] = r
+        print(f"{name},{r['shards']},"
+              f"{r['halo_bytes_dense']},{r['halo_bytes_sparse']},"
+              f"{r['halo_byte_reduction']:.1f}x,"
+              f"{r['halo_rounds_dense']},{r['halo_rounds_sparse']},"
+              f"{r['insert_gap_dense']:.2f}x,"
+              f"{r['insert_gap_sparse']:.2f}x,"
+              f"{r['answers_bitwise_equal']}")
     if "planext" in sections:
         print("dataset,shards,insert_ms_extend,insert_ms_scratch,speedup,"
               "planop_ms_extend,planop_ms_scratch,planop_speedup,bitwise"

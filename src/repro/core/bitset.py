@@ -146,6 +146,19 @@ def popcount(words: jax.Array, k: int | None = None) -> jax.Array:
     return per_word.astype(jnp.int32).sum(axis=-1)
 
 
+def rows_changed(a: jax.Array, b: jax.Array,
+                 k: int | None = None) -> jax.Array:
+    """(..., n, W) x (..., n, W) -> (..., n) bool: rows whose word content
+    differs — the popcount-diff primitive behind the sparse halo exchange's
+    changed-row sets.  Pass ``k`` to mask pad bits first, so foreign words
+    that violate the pad-bit invariant can never flag a phantom change."""
+    if k is not None:
+        m = pad_mask(k)
+        a = a & m
+        b = b & m
+    return jnp.any(a != b, axis=-1)
+
+
 def bit_row(k: int, idx: jax.Array) -> jax.Array:
     """One-hot packed row(s): (..., W) uint32 with bit ``idx`` set."""
     w = n_words(k)

@@ -203,7 +203,9 @@ def _check_saturation(sat, max_iters: int, check: str, stacklevel: int = 3):
 
 
 def _il_build_sharded(plan: PL.ShardPlan, sh: DBLIndex, n_cap: int,
-                      dim: int, seed, live, max_iters: int):
+                      dim: int, seed, live, max_iters: int,
+                      halo_mode: str = "dense", telemetry=None,
+                      halo_caps=None):
     """Sharded twin of ``interval.build_il``: the deterministic rank seed
     plane is row-placed and both directions run the MIN halo fixpoint from
     the all-ones frontier — the same rounds as the replicated min
@@ -212,9 +214,13 @@ def _il_build_sharded(plan: PL.ShardPlan, sh: DBLIndex, n_cap: int,
     base = jax.device_put(fam.seed_plane(n_cap, dim, seed), sh.il_in)
     fr = jax.device_put(jnp.ones((n_cap,), jnp.bool_), sh.bl_sources)
     il_in, it0 = PL.halo_propagate(plan, base, fr, live, monoid="min",
-                                   max_iters=max_iters)
+                                   max_iters=max_iters, halo_mode=halo_mode,
+                                   telemetry=telemetry,
+                                   halo_caps=halo_caps)
     il_out, it1 = PL.halo_propagate(plan, base, fr, live, reverse=True,
-                                    monoid="min", max_iters=max_iters)
+                                    monoid="min", max_iters=max_iters,
+                                    halo_mode=halo_mode, telemetry=telemetry,
+                                    halo_caps=halo_caps)
     return il_in, il_out, jnp.stack([it0, it1])
 
 
@@ -223,7 +229,9 @@ def build_vertex_sharded(g: Graph, mesh: Mesh, *, n_cap: int, k: int = 64,
                          leaf_r: int = 0, max_iters: int = 256,
                          check: str = "warn", plane_repr: str = "bool",
                          families=F.DEFAULT_FAMILIES,
-                         il_dim: int = F.DEFAULT_IL_DIM, il_seed=0
+                         il_dim: int = F.DEFAULT_IL_DIM, il_seed=0,
+                         halo_mode: str = "dense", hub_count: int = 0,
+                         telemetry=None, halo_caps=None
                          ) -> tuple[DBLIndex, PL.ShardPlan]:
     """Alg 1 with vertex-sharded label planes: ONE fused (k + k')-lane
     halo fixpoint per direction over row-partitioned seed planes.  Lanes
@@ -235,7 +243,13 @@ def build_vertex_sharded(g: Graph, mesh: Mesh, *, n_cap: int, k: int = 64,
 
     ``families`` enables plug-in label families exactly as in
     ``DBLIndex.build``; the interval family's rank planes build through
-    the MIN-monoid halo fixpoint, row-partitioned like the bool planes."""
+    the MIN-monoid halo fixpoint, row-partitioned like the bool planes.
+
+    ``halo_mode="sparse"`` runs every halo fixpoint through the compacted
+    changed-row exchange (``core.halo``) — bitwise equal to dense;
+    ``hub_count`` freezes that many top-cut-degree hub vertices on the
+    plan for the sparse broadcast lane; ``telemetry`` (a
+    ``halo.HaloTelemetry``) accumulates wire-byte/round accounting."""
     plugin_fams = F.plugins(families)
     layout = PL.vertex_layout(mesh)
     PL._check_rows(n_cap, layout)
@@ -246,7 +260,8 @@ def build_vertex_sharded(g: Graph, mesh: Mesh, *, n_cap: int, k: int = 64,
     seeds = PL.PlaneStore.seeds(landmarks, sources, sinks, n_cap=n_cap,
                                 k=k, k_prime=k_prime, layout=layout)
     fr_fwd, fr_bwd = seeds.seed_frontiers()
-    plan = PL.shard_plan(g.src, g.dst, int(np.asarray(g.m)), n_cap, mesh)
+    plan = PL.shard_plan(g.src, g.dst, int(np.asarray(g.m)), n_cap, mesh,
+                         hub_count=hub_count)
     live = G.edge_mask(g)
     x_fwd = jax.device_put(seeds.fused(), sh.dl_in)
     x_bwd = jax.device_put(seeds.fused(reverse=True), sh.dl_in)
@@ -254,16 +269,22 @@ def build_vertex_sharded(g: Graph, mesh: Mesh, *, n_cap: int, k: int = 64,
     x_fwd, it0 = PL.halo_propagate(plan, x_fwd,
                                    jax.device_put(fr_fwd, vec_sh), live,
                                    max_iters=max_iters,
-                                   plane_repr=plane_repr)
+                                   plane_repr=plane_repr,
+                                   halo_mode=halo_mode, telemetry=telemetry,
+                                   halo_caps=halo_caps)
     x_bwd, it1 = PL.halo_propagate(plan, x_bwd,
                                    jax.device_put(fr_bwd, vec_sh), live,
                                    reverse=True, max_iters=max_iters,
-                                   plane_repr=plane_repr)
+                                   plane_repr=plane_repr,
+                                   halo_mode=halo_mode, telemetry=telemetry,
+                                   halo_caps=halo_caps)
     all_iters = [it0, it1]
     il_kw = {}
     for fam in plugin_fams:
         p_in, p_out, it_f = _il_build_sharded(plan, sh, n_cap, il_dim,
-                                              il_seed, live, max_iters)
+                                              il_seed, live, max_iters,
+                                              halo_mode, telemetry,
+                                              halo_caps)
         il_kw = dict(il_in=p_in, il_out=p_out,
                      il_seed=jnp.int32(il_seed))
         all_iters.append(it_f[0])
@@ -282,7 +303,8 @@ def build_vertex_sharded(g: Graph, mesh: Mesh, *, n_cap: int, k: int = 64,
 def insert_vertex_sharded(idx: DBLIndex, plan: PL.ShardPlan, new_src,
                           new_dst, *, max_iters: int = 256,
                           check: str = "warn", plane_repr: str = "bool",
-                          extend: bool = True
+                          extend: bool = True, halo_mode: str = "dense",
+                          telemetry=None, halo_caps=None
                           ) -> tuple[DBLIndex, PL.ShardPlan, jax.Array]:
     """Batched Alg-3 insert on the vertex-sharded layout.
 
@@ -317,19 +339,24 @@ def insert_vertex_sharded(idx: DBLIndex, plan: PL.ShardPlan, new_src,
         plan2 = PL.shard_plan(g2.src, g2.dst, int(np.asarray(g2.m)),
                               idx.n_cap, mesh,
                               edge_granule=plan.edge_granule,
-                              halo_granule=plan.halo_granule)
+                              halo_granule=plan.halo_granule,
+                              hub_count=plan.hub_count)
     live = G.edge_mask(g2)
     store = idx.store
     seeded_f, fr_f = PL.sharded_seed_scatter(store.fused(), ns, nd,
                                              mesh=mesh)
     x_fwd, it0 = PL.halo_propagate(plan2, seeded_f, fr_f, live,
                                    max_iters=max_iters,
-                                   plane_repr=plane_repr)
+                                   plane_repr=plane_repr,
+                                   halo_mode=halo_mode, telemetry=telemetry,
+                                   halo_caps=halo_caps)
     seeded_b, fr_b = PL.sharded_seed_scatter(store.fused(reverse=True),
                                              nd, ns, mesh=mesh)
     x_bwd, it1 = PL.halo_propagate(plan2, seeded_b, fr_b, live,
                                    reverse=True, max_iters=max_iters,
-                                   plane_repr=plane_repr)
+                                   plane_repr=plane_repr,
+                                   halo_mode=halo_mode, telemetry=telemetry,
+                                   halo_caps=halo_caps)
     sat_now = U.saturated(jnp.stack([it0, it1]), max_iters)
     il_kw = {}
     if idx.il_in is not None:
@@ -339,12 +366,18 @@ def insert_vertex_sharded(idx: DBLIndex, plan: PL.ShardPlan, new_src,
         s_in, fr_i = PL.sharded_seed_scatter_min(idx.il_in, ns, nd,
                                                  mesh=mesh)
         il_in2, it2 = PL.halo_propagate(plan2, s_in, fr_i, live,
-                                        monoid="min", max_iters=max_iters)
+                                        monoid="min", max_iters=max_iters,
+                                        halo_mode=halo_mode,
+                                        telemetry=telemetry,
+                                        halo_caps=halo_caps)
         s_out, fr_o = PL.sharded_seed_scatter_min(idx.il_out, nd, ns,
                                                   mesh=mesh)
         il_out2, it3 = PL.halo_propagate(plan2, s_out, fr_o, live,
                                          reverse=True, monoid="min",
-                                         max_iters=max_iters)
+                                         max_iters=max_iters,
+                                         halo_mode=halo_mode,
+                                         telemetry=telemetry,
+                                         halo_caps=halo_caps)
         il_kw = dict(il_in=il_in2, il_out=il_out2)
         sat_now = sat_now | U.saturated(jnp.stack([it2, it3]), max_iters)
     _check_saturation(sat_now, max_iters, check)
@@ -365,7 +398,9 @@ def rebuild_vertex_sharded(idx: DBLIndex, plan: PL.ShardPlan | None, *,
                            max_iters: int = 256, compact: bool = True,
                            check: str = "warn",
                            delta_threshold: float = 0.99,
-                           plane_repr: str = "bool"
+                           plane_repr: str = "bool",
+                           halo_mode: str = "dense", telemetry=None,
+                           halo_caps=None
                            ) -> tuple[DBLIndex, PL.ShardPlan, dict]:
     """Sharded twin of ``DBLIndex.rebuild_info``: full Alg-1 rebuild or the
     incremental delta repair, on row-partitioned planes.
@@ -386,7 +421,9 @@ def rebuild_vertex_sharded(idx: DBLIndex, plan: PL.ShardPlan | None, *,
     n_cap, k, kp = idx.n_cap, idx.k, idx.k_prime
     build_kw = dict(n_cap=n_cap, k=k, k_prime=kp, selection=selection,
                     leaf_r=leaf_r, max_iters=max_iters, check=check,
-                    plane_repr=plane_repr)
+                    plane_repr=plane_repr, halo_mode=halo_mode,
+                    telemetry=telemetry, halo_caps=halo_caps,
+                    hub_count=plan.hub_count if plan is not None else 0)
     if idx.il_in is not None:
         build_kw.update(families=idx.families, il_dim=idx.il_dim,
                         il_seed=idx.il_seed)
@@ -410,7 +447,8 @@ def rebuild_vertex_sharded(idx: DBLIndex, plan: PL.ShardPlan | None, *,
     g = idx.graph
     m_now = int(np.asarray(g.m))
     gran = {} if plan is None else dict(edge_granule=plan.edge_granule,
-                                        halo_granule=plan.halo_granule)
+                                        halo_granule=plan.halo_granule,
+                                        hub_count=plan.hub_count)
     if plan is None or plan.n_cap != n_cap or plan.mesh != mesh \
             or plan.m > m_now:
         plan = PL.shard_plan(g.src, g.dst, m_now, n_cap, mesh, **gran)
@@ -445,7 +483,9 @@ def rebuild_vertex_sharded(idx: DBLIndex, plan: PL.ShardPlan | None, *,
         x, it = PL.halo_propagate(plan, jax.device_put(x, sh.dl_in),
                                   jax.device_put(fr, sh.bl_sources), live,
                                   reverse=rev, max_iters=max_iters,
-                                  plane_repr=plane_repr)
+                                  plane_repr=plane_repr,
+                                  halo_mode=halo_mode, telemetry=telemetry,
+                                  halo_caps=halo_caps)
         iters.append(it)
         if rev:
             x_bwd = x
@@ -462,7 +502,8 @@ def rebuild_vertex_sharded(idx: DBLIndex, plan: PL.ShardPlan | None, *,
     if idx.il_in is not None:
         p_in, p_out, it_f = _il_build_sharded(
             plan2, sh, n_cap, idx.il_dim, idx.il_seed,
-            G.edge_mask(g2), max_iters)
+            G.edge_mask(g2), max_iters, halo_mode, telemetry,
+            halo_caps)
         il_kw = dict(il_in=p_in, il_out=p_out)
         iters.append(it_f[0])
         iters.append(it_f[1])

@@ -58,7 +58,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import bitset
 from . import query as Q
-from .propagate import _INT_MAX, check_plane_repr
+from .propagate import _INT_MAX, check_halo_mode, check_plane_repr
 from .select import leaf_hash
 
 #: the mesh axis vertex-sharded planes are partitioned along
@@ -308,6 +308,18 @@ class _DirPlan(NamedTuple):
     h_valid: jax.Array   # (d, d, H) bool
     e_start: jax.Array   # (d, E_pad) bool  — first entry of each recv segment
     e_tail: jax.Array    # (d, E_pad) bool  — last entry of each recv segment
+    # --- sparse-halo hub lane (PR 10; None on hub-free plans) -----------
+    # The top-`hub_count` highest-cut-degree vertices (frozen at plan
+    # time) leave the per-pair compaction buckets during sparse rounds and
+    # travel once per round on a broadcast psum lane instead of being
+    # duplicated into up to d-1 pair buffers.
+    h_hub: jax.Array | None = None   # (d, d, H) bool — h_send entry is a hub
+    hubs: jax.Array | None = None    # (Hub,) int32 global ids, pad = n_cap
+    hub_slot: jax.Array | None = None  # (d, Hub) int32 receiver-side slot
+    #                                     into [local | halo]; pad slot is
+    #                                     n_loc + d*H (scatter-dropped)
+    host: tuple | None = None        # numpy mirrors for O(Δm) extension —
+    #                                   never crosses into jit
 
 
 class ShardPlan(NamedTuple):
@@ -329,6 +341,7 @@ class ShardPlan(NamedTuple):
     bwd: _DirPlan
     edge_granule: int = 1024
     halo_granule: int = 64
+    hub_count: int = 0   # requested hub-lane width (0 = no hub lane)
 
     @property
     def shards(self) -> int:
@@ -343,8 +356,45 @@ def _round_up(x: int, granule: int) -> int:
     return max(granule, -(-x // granule) * granule)
 
 
+class _DirHost(NamedTuple):
+    """Numpy mirrors of one direction's routing tables.  Kept on the plan
+    (``_DirPlan.host``) so :func:`extend_plan` never round-trips the O(E)
+    device arrays back to the host per batch — the D2H readback was the
+    dominant cost of small-Δm extensions on small graphs (the BENCH_PR9
+    Email regression).  ``e_start``/``e_tail`` are derived from ``e_recv``
+    at upload time and are not mirrored."""
+    e_slot: np.ndarray
+    e_recv: np.ndarray
+    e_gid: np.ndarray
+    e_valid: np.ndarray
+    h_send: np.ndarray
+    h_valid: np.ndarray
+    h_hub: np.ndarray | None
+    hub_slot: np.ndarray | None
+    hubs: np.ndarray | None      # REAL hub ids (unpadded, sorted ascending)
+
+
+def _select_hubs(need: list, hub_count: int) -> np.ndarray:
+    """Top-`hub_count` cut vertices by cut degree (= number of (receiver,
+    sender) need lists containing the vertex).  Degree-1 vertices are
+    excluded — a broadcast lane only pays off when a row would otherwise be
+    duplicated into several pair buckets.  Deterministic: ties break on
+    vertex id, result sorted ascending (membership via searchsorted)."""
+    d = len(need)
+    lists = [need[t][s] for t in range(d) for s in range(d)
+             if need[t][s].size]
+    if hub_count <= 0 or not lists:
+        return np.zeros(0, np.int64)
+    verts, cnts = np.unique(np.concatenate(lists), return_counts=True)
+    keep = cnts >= 2
+    verts, cnts = verts[keep], cnts[keep]
+    order = np.lexsort((verts, -cnts))
+    return np.sort(verts[order[:hub_count]])
+
+
 def _build_dir(push: np.ndarray, recv: np.ndarray, m: int, n_loc: int,
-               d: int, edge_granule: int, halo_granule: int) -> _DirPlan:
+               d: int, edge_granule: int, halo_granule: int,
+               hub_count: int = 0) -> _DirPlan:
     gids = np.arange(m, dtype=np.int64)
     owner_recv = recv[:m].astype(np.int64) // n_loc
     owner_push = push[:m].astype(np.int64) // n_loc
@@ -405,20 +455,55 @@ def _build_dir(push: np.ndarray, recv: np.ndarray, m: int, n_loc: int,
     e_start[:, 1:] = e_recv[:, 1:] != e_recv[:, :-1]
     e_tail[:, :-1] = e_recv[:, 1:] != e_recv[:, :-1]
     e_tail[:, -1] = True
-    return _DirPlan(jnp.asarray(e_slot), jnp.asarray(e_recv),
-                    jnp.asarray(e_gid), jnp.asarray(e_valid),
-                    jnp.asarray(h_send), jnp.asarray(h_valid),
-                    jnp.asarray(e_start), jnp.asarray(e_tail))
+    # ---- hub lane: frozen at plan time ---------------------------------
+    h_hub = hub_slot = hubs_arr = hubs_np = None
+    if hub_count > 0:
+        hubs_np = _select_hubs(need, hub_count)
+        h_hub = np.zeros((d, d, H), bool)
+        hubs_arr = np.full(hub_count, n_loc * d, np.int64)
+        hubs_arr[:hubs_np.size] = hubs_np
+        # receiver-side slot of hub j in [local rows | halo buffer]; the
+        # pad sentinel n_loc + d*H is one past the combined table, so the
+        # scatter drops it
+        hub_slot = np.full((d, hub_count), n_loc + d * H, np.int64)
+        if hubs_np.size:
+            for t in range(d):
+                for s in range(d):
+                    ids = need[t][s]
+                    if ids.size == 0:
+                        continue
+                    j = np.searchsorted(hubs_np, ids)
+                    jc = np.minimum(j, hubs_np.size - 1)
+                    ishub = (j < hubs_np.size) & (hubs_np[jc] == ids)
+                    h_hub[s, t, :ids.size] = ishub
+                    pos = np.arange(ids.size)
+                    hub_slot[t, j[ishub]] = n_loc + s * H + pos[ishub]
+    return _DirPlan(
+        jnp.asarray(e_slot), jnp.asarray(e_recv),
+        jnp.asarray(e_gid), jnp.asarray(e_valid),
+        jnp.asarray(h_send), jnp.asarray(h_valid),
+        jnp.asarray(e_start), jnp.asarray(e_tail),
+        h_hub=None if h_hub is None else jnp.asarray(h_hub),
+        hubs=None if hubs_arr is None else jnp.asarray(
+            hubs_arr.astype(np.int32)),
+        hub_slot=None if hub_slot is None else jnp.asarray(
+            hub_slot.astype(np.int32)),
+        host=_DirHost(e_slot, e_recv, e_gid, e_valid,
+                      h_send, h_valid, h_hub, hub_slot, hubs_np))
 
 
 def shard_plan(src, dst, m: int, n_cap: int, mesh: Mesh, *,
                edge_granule: int = 1024,
-               halo_granule: int = 64) -> ShardPlan:
+               halo_granule: int = 64,
+               hub_count: int = 0) -> ShardPlan:
     """Partition the edge prefix ``[0, m)`` for a vertex mesh (host-side).
 
     ``src``/``dst`` are the graph's (m_cap,) edge arrays (numpy or device;
     synced once).  O(m log m) numpy work — paid at bind time and after
-    mutations that extend or renumber the edge arrays, never per query."""
+    mutations that extend or renumber the edge arrays, never per query.
+    ``hub_count > 0`` additionally selects the top-`hub_count` cut-degree
+    vertices per direction for the sparse halo's broadcast lane (frozen
+    until the next from-scratch plan)."""
     layout = vertex_layout(mesh)
     n_loc = _check_rows(n_cap, layout)
     src = np.asarray(src)
@@ -427,10 +512,11 @@ def shard_plan(src, dst, m: int, n_cap: int, mesh: Mesh, *,
     return ShardPlan(
         mesh, n_cap, int(m),
         fwd=_build_dir(src, dst, int(m), n_loc, d, edge_granule,
-                       halo_granule),
+                       halo_granule, hub_count),
         bwd=_build_dir(dst, src, int(m), n_loc, d, edge_granule,
-                       halo_granule),
-        edge_granule=edge_granule, halo_granule=halo_granule)
+                       halo_granule, hub_count),
+        edge_granule=edge_granule, halo_granule=halo_granule,
+        hub_count=hub_count)
 
 
 # ------------------------------------------- incremental plan extension
@@ -497,13 +583,38 @@ def _extend_dir(dp: _DirPlan, push: np.ndarray, recv: np.ndarray,
     order (and with it the ``e_slot`` values that index into it) diverges
     from the from-scratch globally-sorted order.  Only semantic equivalence
     holds there: the decoded (slot -> global pushing vertex) map is
-    identical, which is what the fixpoint reads."""
-    e_slot = np.asarray(dp.e_slot).astype(np.int64, copy=True)
-    e_recv = np.asarray(dp.e_recv)
-    e_gid = np.asarray(dp.e_gid)
-    e_valid = np.asarray(dp.e_valid)
-    h_send = np.asarray(dp.h_send)
-    h_valid = np.asarray(dp.h_valid)
+    identical, which is what the fixpoint reads.
+
+    Cost model (the BENCH_PR9 Email fix): the tables are read from the
+    plan's numpy mirrors (``_DirHost``), never synced back from the device
+    — the per-batch D2H readback of six O(E) arrays used to dominate the
+    bare-op cost on small graphs.  Per bucket, when the batch appends in
+    recv-sorted position (its smallest local recv row is >= the bucket's
+    last occupied one — trivially true for untouched buckets) the two-pass
+    searchsorted merge is skipped outright: the old prefix is one
+    contiguous memcpy and the Δ entries land in the granule-headroom tail,
+    which is exactly the position the full merge would pick."""
+    host = dp.host
+    if host is None:
+        hub_ids = None if dp.hubs is None else np.asarray(dp.hubs)
+        host = _DirHost(
+            np.asarray(dp.e_slot).astype(np.int64), np.asarray(dp.e_recv),
+            np.asarray(dp.e_gid), np.asarray(dp.e_valid),
+            np.asarray(dp.h_send), np.asarray(dp.h_valid),
+            None if dp.h_hub is None else np.asarray(dp.h_hub),
+            None if dp.hub_slot is None else
+            np.asarray(dp.hub_slot).astype(np.int64),
+            None if hub_ids is None else
+            hub_ids[hub_ids < n_loc * d].astype(np.int64))
+    e_slot = host.e_slot
+    e_recv = host.e_recv
+    e_gid = host.e_gid
+    e_valid = host.e_valid
+    h_send = host.h_send
+    h_valid = host.h_valid
+    h_hub = host.h_hub
+    hub_slot = host.hub_slot
+    hubs_np = host.hubs
     E_old = e_recv.shape[1]
     H_old = h_send.shape[2]
     ne = e_valid.sum(axis=1)                       # (d,) valid prefix sizes
@@ -544,20 +655,48 @@ def _extend_dir(dp: _DirPlan, push: np.ndarray, recv: np.ndarray,
             H_needed = max(H_needed, c + fresh.size)
     grew_h = H_needed > H_old
     H_new = _round_up(H_needed, halo_granule) if grew_h else H_old
+    hh2 = hub_slot2 = None
     if grew_h:
         hs2 = np.zeros((d, d, H_new), np.int32)
         hv2 = np.zeros((d, d, H_new), bool)
         hs2[:, :, :H_old] = h_send
         hv2[:, :, :H_old] = h_valid
+        if h_hub is not None:
+            hh2 = np.zeros((d, d, H_new), bool)
+            hh2[:, :, :H_old] = h_hub
+        if hub_slot is not None:
+            # the combined-table stride n_loc + s*H + pos changed: remap
+            # the hub fill slots and move the drop sentinel to the new
+            # table size, mirroring the e_slot remap below
+            off = hub_slot - n_loc
+            hub_slot2 = np.where(
+                hub_slot >= n_loc + d * H_old, n_loc + d * H_new,
+                np.where(hub_slot >= n_loc,
+                         n_loc + (off // H_old) * H_new + off % H_old,
+                         hub_slot))
     elif new_halo:
         hs2 = h_send.copy()
         hv2 = h_valid.copy()
+        if h_hub is not None:
+            hh2 = h_hub.copy()
+        if hub_slot is not None:
+            hub_slot2 = hub_slot.copy()
     else:
         hs2 = hv2 = None     # zero-cut early-out: reuse dp's device arrays
     for (s, t), fresh in new_halo.items():
         c = int(hc[s, t])
         hs2[s, t, c:c + fresh.size] = (fresh - s * n_loc).astype(np.int32)
         hv2[s, t, c:c + fresh.size] = True
+        # fresh cut vertices that belong to the frozen hub set get their
+        # hub flags + receiver fill slots as they enter the send lists
+        if hubs_np is not None and hubs_np.size and fresh.size:
+            j = np.searchsorted(hubs_np, fresh)
+            jc = np.minimum(j, hubs_np.size - 1)
+            ishub = (j < hubs_np.size) & (hubs_np[jc] == fresh)
+            if ishub.any():
+                pos = c + np.arange(fresh.size)
+                hh2[s, t, pos[ishub]] = True
+                hub_slot2[t, j[ishub]] = n_loc + s * H_new + pos[ishub]
 
     # ---- edge buckets: merge per receiving shard -----------------------
     counts = np.bincount(owner_recv, minlength=d)[:d]
@@ -596,6 +735,19 @@ def _extend_dir(dp: _DirPlan, push: np.ndarray, recv: np.ndarray,
             msel = own_s == s
             k = np.searchsorted(verts, push_s[msel])
             slot_new[msel] = n_loc + int(s) * H_new + pos[k]
+        if nold == 0 or rl_s[0] >= int(e_recv[t, nold - 1]):
+            # append-sorted fast path: the whole batch lands at or after
+            # the bucket's last occupied recv row, so the granule-headroom
+            # tail positions are exactly the ones the two-pass merge would
+            # pick (equal recv ids order new gids after old) — skip it
+            s2[t, :nold] = e_slot[t, :nold]
+            s2[t, nold:nold + b] = slot_new
+            r2[t, :nold] = e_recv[t, :nold]
+            r2[t, nold:nold + b] = rl_s
+            g2[t, :nold] = e_gid[t, :nold]
+            g2[t, nold:nold + b] = gid_s
+            v2[t, :nold + b] = True
+            continue
         old_r = e_recv[t, :nold].astype(np.int64)
         dst_old = np.arange(nold) + np.searchsorted(rl_s, old_r, "left")
         dst_new = np.searchsorted(old_r, rl_s, "right") + np.arange(b)
@@ -612,15 +764,48 @@ def _extend_dir(dp: _DirPlan, push: np.ndarray, recv: np.ndarray,
     start[:, 1:] = r2[:, 1:] != r2[:, :-1]
     tail[:, :-1] = r2[:, 1:] != r2[:, :-1]
     tail[:, -1] = True
-    # one device_put per dtype instead of six: dispatch overhead on the
-    # small per-batch uploads is a visible slice of the extension cost on
-    # small graphs, and the arrays are all (d, E_new) anyway
-    ints = jnp.asarray(np.stack([s2, r2, g2]))
-    flags = jnp.asarray(np.stack([v2, start, tail]))
-    return _DirPlan(ints[0], ints[1], ints[2], flags[0],
-                    dp.h_send if hs2 is None else jnp.asarray(hs2),
-                    dp.h_valid if hv2 is None else jnp.asarray(hv2),
-                    flags[1], flags[2])
+    # Defer the upload: return the numpy tables plus a finisher so
+    # extend_plan can push BOTH directions' tables in one batched
+    # device_put — per-array uploads (and the earlier stack-then-slice
+    # variant, whose device-side slices cost a dispatch each) dominate
+    # the bare-op cost on small graphs, and even one device_put per
+    # direction is a visible slice of the Email bare op
+    parts = [s2, r2, g2, v2, start, tail]
+    if hs2 is not None:
+        parts += [hs2, hv2]
+        if hh2 is not None:
+            parts.append(hh2)
+        if hub_slot2 is not None:
+            parts.append(hub_slot2.astype(np.int32))
+
+    def finish(dev):
+        s2j, r2j, g2j, v2j, startj, tailj = dev[:6]
+        pos = 6
+        if hs2 is not None:
+            hs2j, hv2j = dev[pos:pos + 2]
+            pos += 2
+        else:
+            hs2j, hv2j = dp.h_send, dp.h_valid
+        hh2j = dp.h_hub
+        if hs2 is not None and hh2 is not None:
+            hh2j = dev[pos]
+            pos += 1
+        hub_slot2j = dp.hub_slot
+        if hs2 is not None and hub_slot2 is not None:
+            hub_slot2j = dev[pos]
+        return _DirPlan(
+            s2j, r2j, g2j, v2j, hs2j, hv2j, startj, tailj,
+            h_hub=hh2j,
+            hubs=dp.hubs,
+            hub_slot=hub_slot2j,
+            host=_DirHost(s2, r2, g2, v2,
+                          h_send if hs2 is None else hs2,
+                          h_valid if hv2 is None else hv2,
+                          h_hub if hh2 is None else hh2,
+                          hub_slot if hub_slot2 is None else hub_slot2,
+                          hubs_np))
+
+    return parts, finish
 
 
 def extend_plan(plan: ShardPlan, new_src, new_dst, *,
@@ -669,13 +854,19 @@ def extend_plan(plan: ShardPlan, new_src, new_dst, *,
     m2 = plan.m + raw
     if src.size == 0:
         return plan._replace(m=m2)
+    fparts, ffin = _extend_dir(plan.fwd, src, dst, gid, n_loc, d,
+                               edge_granule, halo_granule)
+    bparts, bfin = _extend_dir(plan.bwd, dst, src, gid, n_loc, d,
+                               edge_granule, halo_granule)
+    # one batched device_put covering BOTH directions' updated tables —
+    # upload dispatch, not bandwidth, is the bare-op floor on small graphs
+    dev = list(jax.device_put(tuple(fparts + bparts)))
     return ShardPlan(
         plan.mesh, plan.n_cap, m2,
-        fwd=_extend_dir(plan.fwd, src, dst, gid, n_loc, d, edge_granule,
-                        halo_granule),
-        bwd=_extend_dir(plan.bwd, dst, src, gid, n_loc, d, edge_granule,
-                        halo_granule),
-        edge_granule=edge_granule, halo_granule=halo_granule)
+        fwd=ffin(dev[:len(fparts)]),
+        bwd=bfin(dev[len(fparts):]),
+        edge_granule=edge_granule, halo_granule=halo_granule,
+        hub_count=plan.hub_count)
 
 
 # ------------------------------------------------- sharded collectives
@@ -857,7 +1048,9 @@ def _halo_propagate_packed_impl(xw, frontier, live, e_slot, e_recv, e_gid,
 def halo_propagate(plan: ShardPlan, x: jax.Array, frontier: jax.Array,
                    live: jax.Array, *, reverse: bool = False,
                    max_iters: int = 256, monoid: str = "or",
-                   plane_repr: str = "bool") -> tuple[jax.Array, jax.Array]:
+                   plane_repr: str = "bool", halo_mode: str = "dense",
+                   telemetry=None, halo_caps: tuple[int, ...] | None = None
+                   ) -> tuple[jax.Array, jax.Array]:
     """Vertex-sharded twin of ``propagate.propagate``.
 
     Same contract: returns (labels, iters) with ``iters = max_iters + 1``
@@ -874,18 +1067,47 @@ def halo_propagate(plan: ShardPlan, x: jax.Array, frontier: jax.Array,
 
     ``monoid="min"`` relaxes int32 rank planes (the "il" plug-in family)
     with ``_halo_propagate_min_impl``; like the replicated engine it has
-    no packed form (min planes are ranks, not bit lanes)."""
+    no packed form (min planes are ranks, not bit lanes).
+
+    ``halo_mode="sparse"`` runs the compacted changed-row exchange
+    (``core.halo``): per-round, only the boundary rows whose value changed
+    travel, in power-of-two capacity buckets with a dense fallback on
+    overflow, hub rows ride a broadcast psum lane, and all-quiet pairs
+    skip their payload entirely — bitwise equal to the dense oracle in
+    every repr/monoid combination.  ``telemetry`` (a
+    ``core.halo.HaloTelemetry``) accumulates modeled halo bytes and round
+    counts for either mode; ``halo_caps`` overrides the sparse capacity
+    schedule (``halo.bucket_caps``)."""
     check_plane_repr(plane_repr)
+    check_halo_mode(halo_mode)
     if monoid not in ("or", "min"):
         raise ValueError(f"unknown monoid {monoid!r}")
+    if halo_mode == "sparse":
+        from . import halo as _halo
+        return _halo.sparse_halo_propagate(
+            plan, x, frontier, live, reverse=reverse, max_iters=max_iters,
+            monoid=monoid, plane_repr=plane_repr, telemetry=telemetry,
+            caps=halo_caps)
     dp = plan.bwd if reverse else plan.fwd
+    d = int(plan.mesh.devices.size)
+    H = dp.h_send.shape[2]
+
+    def _note(iters, row_bytes):
+        if telemetry is not None:
+            # dense byte model: every ordered pair ships its full H-row
+            # halo buffer (rows + send flags) every round
+            telemetry.add_dense(iters, d * (d - 1) * H * (row_bytes + 1),
+                                max_iters)
+
     if monoid == "min":
         if plane_repr == "packed":
             raise ValueError(
                 "plane_repr='packed' supports the OR monoid only")
-        return _halo_propagate_min_impl(
+        out, iters = _halo_propagate_min_impl(
             x, frontier, live, dp.e_slot, dp.e_recv, dp.e_gid, dp.e_valid,
             dp.h_send, dp.h_valid, mesh=plan.mesh, max_iters=max_iters)
+        _note(iters, 4 * x.shape[1])
+        return out, iters
     if plane_repr == "packed":
         k = x.shape[1]
         xw = PlaneStore.pack_rows(x)
@@ -893,10 +1115,13 @@ def halo_propagate(plan: ShardPlan, x: jax.Array, frontier: jax.Array,
             xw, frontier, live, dp.e_slot, dp.e_recv, dp.e_gid, dp.e_valid,
             dp.e_start, dp.e_tail, dp.h_send, dp.h_valid,
             mesh=plan.mesh, max_iters=max_iters, k=k)
+        _note(iters, 4 * bitset.n_words(k))
         return PlaneStore.unpack_rows(out_w, k, x.dtype), iters
-    return _halo_propagate_impl(x, frontier, live, dp.e_slot, dp.e_recv,
-                                dp.e_gid, dp.e_valid, dp.h_send, dp.h_valid,
-                                mesh=plan.mesh, max_iters=max_iters)
+    out, iters = _halo_propagate_impl(
+        x, frontier, live, dp.e_slot, dp.e_recv, dp.e_gid, dp.e_valid,
+        dp.h_send, dp.h_valid, mesh=plan.mesh, max_iters=max_iters)
+    _note(iters, x.shape[1])
+    return out, iters
 
 
 @functools.partial(jax.jit, static_argnames=("mesh",))

@@ -43,6 +43,13 @@ from . import bitset
 Monoid = Literal["or", "min"]
 PlaneRepr = Literal["bool", "packed"]
 
+#: How the vertex-sharded fixpoint exchanges boundary rows.  ``"dense"``
+#: ships every halo slot every round (the PR-5 oracle); ``"sparse"`` runs
+#: the compacted changed-row exchange with hub broadcast and quiescence
+#: gating (``core.halo``), bitwise equal to dense by construction.
+HaloMode = Literal["dense", "sparse"]
+HALO_MODES = ("dense", "sparse")
+
 _INT_MAX = jnp.iinfo(jnp.int32).max
 
 
@@ -50,6 +57,12 @@ def check_plane_repr(plane_repr: str) -> None:
     if plane_repr not in ("bool", "packed"):
         raise ValueError(
             f"plane_repr must be 'bool' or 'packed', got {plane_repr!r}")
+
+
+def check_halo_mode(halo_mode: str) -> None:
+    if halo_mode not in HALO_MODES:
+        raise ValueError(
+            f"halo_mode must be one of {HALO_MODES}, got {halo_mode!r}")
 
 
 def _step_or(labels, src, dst, live, frontier, n_cap):

@@ -151,6 +151,22 @@ def reach_vertex_shardings(mesh) -> tuple:
             NamedSharding(mesh, P()))
 
 
+def reach_halo_shardings(mesh) -> tuple:
+    """Placement contract of the sparse-halo regime driver's host-synced
+    accounting arrays (``core.halo``): ``(pair, replicated)`` — the (d, d)
+    per-(sender, receiver) changed-row / quiet-round count matrices come
+    out row-partitioned (each shard owns its sender row), the fixpoint
+    scalars (round counter, global frontier population, hub-activity flag)
+    replicated.  Exposed so tests and benches can assert the regime
+    kernels' out-shardings without reverse-engineering the shard_map
+    specs."""
+    if len(mesh.axis_names) != 1:
+        raise ValueError("vertex-sharded layout needs a 1-axis mesh, got "
+                         f"axes {mesh.axis_names}")
+    ax = mesh.axis_names[0]
+    return NamedSharding(mesh, P(ax, None)), NamedSharding(mesh, P())
+
+
 def gnn_shardings(state_shapes: Any, mesh) -> Any:
     """GNN params are small: replicate everything (grads all-reduce)."""
     return jax.tree.map(lambda _: NamedSharding(mesh, P()), state_shapes)

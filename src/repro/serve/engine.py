@@ -97,10 +97,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import halo as HL
 from repro.core import planes as PL
 from repro.core import query as Q
 from repro.core import update as U
-from repro.core.propagate import check_plane_repr
+from repro.core.propagate import check_halo_mode, check_plane_repr
 from repro.core.dbl import (DBLIndex, LabelSaturationWarning,
                             _saturation_message)
 from repro.kernels.dbl_query.ops import (StreamILFallbackWarning,
@@ -156,6 +157,14 @@ class EngineStats:
     policy_flushes: int = 0   # flushes initiated by the adaptive policy
     stale_lanes: int = 0      # residue lanes resolved across an epoch gap
     saturation_events: int = 0  # inserts whose label fixpoint hit max_iters
+    # vertex-sharded halo accounting, mirrored from the engine's
+    # HaloTelemetry by ``QueryEngine.halo_stats()`` (zero on replicated
+    # engines): modeled wire bytes / fixpoint rounds of every halo
+    # exchange the engine ran, and how many (pair, round) slots were
+    # skipped as all-quiet under the sparse exchange
+    halo_bytes: int = 0
+    halo_rounds: int = 0
+    quiet_pair_rounds: int = 0
     #: per-family prune attribution over every resolved lane: "dl" counts
     #: label positives (Lemma 1 + self-queries), "bl"/"il" count negative
     #: lanes charged to BL containment / interval containment (first
@@ -176,6 +185,9 @@ class EngineStats:
                 "policy_flushes": self.policy_flushes,
                 "stale_lanes": self.stale_lanes,
                 "saturation_events": self.saturation_events,
+                "halo_bytes": self.halo_bytes,
+                "halo_rounds": self.halo_rounds,
+                "quiet_pair_rounds": self.quiet_pair_rounds,
                 "prune_hits": dict(self.prune_hits)}
 
 
@@ -246,6 +258,9 @@ class QueryEngine:
                  frontier_dtype: str = "int8",
                  out_dtype: str = "int8",
                  plane_repr: str = "bool",
+                 halo_mode: str = "dense",
+                 hub_count: int = 0,
+                 halo_caps: tuple | None = None,
                  flush_policy: str | None = None,
                  flush_deadline_ms: float = 25.0,
                  flush_watermark: int = 256):
@@ -268,6 +283,13 @@ class QueryEngine:
             raise ValueError(f"unknown verdict out dtype {out_dtype!r}; "
                              "expected 'int8' or 'int32'")
         check_plane_repr(plane_repr)
+        check_halo_mode(halo_mode)
+        if hub_count < 0:
+            raise ValueError("hub_count must be non-negative")
+        if halo_caps is not None and (
+                not halo_caps or any(int(c) <= 0 for c in halo_caps)):
+            raise ValueError("halo_caps must be a non-empty tuple of "
+                             "positive bucket capacities (or None = auto)")
         if flush_policy not in FLUSH_POLICIES:
             raise ValueError(f"unknown flush policy {flush_policy!r}; "
                              f"expected one of {FLUSH_POLICIES}")
@@ -300,6 +322,18 @@ class QueryEngine:
         self.frontier_dtype = frontier_dtype
         self.out_dtype = out_dtype
         self.plane_repr = plane_repr
+        # halo-exchange knobs for the vertex-sharded fixpoints (inert on
+        # replicated engines, but always part of the engine config — and
+        # of the AOT cache key): "sparse" routes every insert/rebuild
+        # fixpoint through core.halo's compacted changed-row exchange,
+        # hub_count freezes that many top-cut-degree hub vertices on the
+        # shard plan for the broadcast lane, halo_caps overrides the
+        # power-of-two compaction capacities (None = halo.bucket_caps(H))
+        self.halo_mode = halo_mode
+        self.hub_count = int(hub_count)
+        self.halo_caps = None if halo_caps is None \
+            else tuple(int(c) for c in halo_caps)
+        self._halo_telemetry = HL.HaloTelemetry()
         self.bfs_kernel = bool(bfs_kernel)
         self.consistency = select_consistency(consistency)
         self.flush_policy = flush_policy
@@ -376,7 +410,8 @@ class QueryEngine:
             else:
                 self._plan = PL.shard_plan(idx.graph.src, idx.graph.dst,
                                            m_idx, idx.n_cap,
-                                           self.vertex_mesh)
+                                           self.vertex_mesh,
+                                           hub_count=self.hub_count)
         self._index = idx
         if idx is not None:
             self.epoch = int(np.asarray(idx.epoch))
@@ -919,7 +954,9 @@ class QueryEngine:
             # tables — the label planes stay put on their shards)
             idx2, self._plan, sat = D.insert_vertex_sharded(
                 idx, self._plan, ns, nd, max_iters=self.max_iters,
-                check="defer", plane_repr=self.plane_repr)
+                check="defer", plane_repr=self.plane_repr,
+                halo_mode=self.halo_mode, halo_caps=self.halo_caps,
+                telemetry=self._halo_telemetry)
             self._index = idx2._replace(epoch=jnp.int32(self.epoch + 1))
         else:
             g2, a, b, c, d, packed, epoch2, sat = self._insert_fn(
@@ -994,6 +1031,9 @@ class QueryEngine:
         build_kw.setdefault("plane_repr", self.plane_repr)
         if self.vertex_mesh is not None:
             from repro.core import distributed as D
+            build_kw.setdefault("halo_mode", self.halo_mode)
+            build_kw.setdefault("halo_caps", self.halo_caps)
+            build_kw.setdefault("telemetry", self._halo_telemetry)
             new_idx, plan, info = D.rebuild_vertex_sharded(
                 self._index, self._plan, mesh=self.vertex_mesh, **build_kw)
             self._plan_override = plan   # setter adopts it (no second pass)
@@ -1006,6 +1046,17 @@ class QueryEngine:
             self.stats.delta_rebuilds += 1
         self.last_rebuild_info = info
         return new_idx
+
+    def halo_stats(self) -> dict:
+        """Drain the halo telemetry (syncing any dense-mode pending round
+        counts) and mirror the headline numbers into ``stats``.  Returns
+        the full accounting dict — modeled wire bytes, round counts by
+        transport regime, quiet/non-quiet pair-round counters."""
+        d = self._halo_telemetry.as_dict()
+        self.stats.halo_bytes = d["halo_bytes"]
+        self.stats.halo_rounds = d["halo_rounds"]
+        self.stats.quiet_pair_rounds = d["quiet_pair_rounds"]
+        return d
 
     def check_saturation(self, *, warn: bool = True) -> int:
         """Drain the deferred per-insert saturation flags (syncs them) and
@@ -1051,6 +1102,10 @@ class QueryEngine:
                   "frontier_dtype": self.frontier_dtype,
                   "out_dtype": self.out_dtype,
                   "plane_repr": self.plane_repr,
+                  "halo_mode": self.halo_mode,
+                  "hub_count": self.hub_count,
+                  "halo_caps": None if self.halo_caps is None
+                  else list(self.halo_caps),
                   "families": list(index.families),
                   "il_dim": index.il_dim,
                   "il_seed": None if index.il_seed is None

@@ -259,6 +259,15 @@ class ReachabilityServer:
         d["last_rebuild"] = self.engine.last_rebuild_info
         d["layout"] = self.engine.layout
         d["flush_policy"] = self.engine.flush_policy
+        # halo-exchange accounting (all-zero on replicated engines):
+        # halo_stats() syncs the telemetry and mirrors the headline
+        # counters into stats, so as_dict() above may be one flush stale —
+        # overwrite with the freshly drained numbers
+        halo = self.engine.halo_stats()
+        d["halo"] = {**halo, "mode": self.engine.halo_mode,
+                     "hub_count": self.engine.hub_count}
+        d.update({k: halo[k] for k in
+                  ("halo_bytes", "halo_rounds", "quiet_pair_rounds")})
         if self.engine.aot_cache is not None:
             d["aot"] = {"hits": self.engine.aot_cache.hits,
                         "misses": self.engine.aot_cache.misses,

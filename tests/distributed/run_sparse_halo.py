@@ -1,0 +1,372 @@
+"""Sparse compressed halo exchange differential suite.  Runs in a
+subprocess with 4 forced host devices: the sparse changed-row exchange
+(``core.halo``) must be bitwise identical to the dense halo oracle at the
+``halo_propagate`` level (bool AND packed reprs, OR AND MIN monoids, with
+and without the hub broadcast lane), across the ENTIRE sharded index
+lifecycle (build -> hostile inserts incl. granule spills -> delete ->
+delta rebuild), through the engine's sparse-mode insert/rebuild path, and
+under the bucket-overflow dense fallback — while reporting strictly fewer
+modeled halo bytes on converging streams.
+
+Invoked by tests/test_sparse_halo.py; exits non-zero on mismatch.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import DBLIndex, make_graph  # noqa: E402
+from repro.core import distributed as D  # noqa: E402
+from repro.core import graph as G  # noqa: E402
+from repro.core import halo as HL  # noqa: E402
+from repro.core import planes as PL  # noqa: E402
+from repro.core.propagate import _INT_MAX  # noqa: E402
+from repro.graphs.generators import power_law  # noqa: E402
+from repro.launch.sharding import reach_halo_shardings  # noqa: E402
+from repro.serve.engine import QueryEngine  # noqa: E402
+from repro.serve.reach_server import ReachabilityServer  # noqa: E402
+
+K = dict(k=16, k_prime=16, max_iters=64)
+
+
+def assert_index_eq(ref, idx, what):
+    for name in ("dl_in", "dl_out", "bl_in", "bl_out", "landmarks",
+                 "bl_sources", "bl_sinks"):
+        a = np.asarray(getattr(ref, name))
+        b = np.asarray(getattr(idx, name))
+        assert (a == b).all(), f"{what}: {name} diverged"
+    for name in ("dl_in", "dl_out", "bl_in", "bl_out"):
+        a = np.asarray(getattr(ref.packed, name))
+        b = np.asarray(getattr(idx.packed, name))
+        assert (a == b).all(), f"{what}: packed {name} diverged"
+
+
+def _seed_planes(n, k, seeds):
+    """A bool seed plane + matching int32 rank plane (negative seed values
+    exercise the hub psum lane's exactness for MIN payloads < 0)."""
+    plane = jnp.zeros((n, k), jnp.uint8).at[
+        jnp.asarray(seeds), jnp.arange(len(seeds)) % k].set(1)
+    ranks = np.full((n, k), _INT_MAX, np.int32)
+    ranks[seeds, np.arange(len(seeds)) % k] = -(np.arange(len(seeds)) + 7)
+    frontier = jnp.zeros((n,), jnp.bool_).at[jnp.asarray(seeds)].set(True)
+    return plane, jnp.asarray(ranks), frontier
+
+
+def halo_level_parity():
+    """sparse == dense bitwise (labels AND iteration counts) for every
+    repr/monoid/direction/hub combination, with the sparse run reporting
+    strictly fewer modeled bytes; plus the reach_halo_shardings placement
+    contract of the regime driver's accounting arrays."""
+    n, m = 256, 1400
+    src, dst = power_law(n, m, seed=3)
+    g = make_graph(src, dst, n, m_cap=m + 64)
+    mesh = D.vertex_mesh(4)
+    live = G.edge_mask(g)
+    k = 20                                     # non-x32: pad-bit sweep
+    seeds = np.arange(16, dtype=np.int32) * 15  # one per shard region
+    plane, ranks, frontier = _seed_planes(n, k, seeds)
+    sh = D.vertex_index_shardings(mesh)
+    xs = jax.device_put(plane, sh.dl_in)
+    rs = jax.device_put(ranks, sh.dl_in)
+    for hub in (0, 8):
+        plan = PL.shard_plan(g.src, g.dst, m, n, mesh, hub_count=hub)
+        assert plan.hub_count == hub
+        for monoid, repr_, x in (("or", "bool", xs), ("or", "packed", xs),
+                                 ("min", "bool", rs)):
+            for rev in (False, True):
+                td, ts = HL.HaloTelemetry(), HL.HaloTelemetry()
+                want, it_w = PL.halo_propagate(
+                    plan, x, frontier, live, reverse=rev, max_iters=64,
+                    monoid=monoid, plane_repr=repr_, telemetry=td)
+                got, it_g = PL.halo_propagate(
+                    plan, x, frontier, live, reverse=rev, max_iters=64,
+                    monoid=monoid, plane_repr=repr_, halo_mode="sparse",
+                    telemetry=ts)
+                tag = (hub, monoid, repr_, rev)
+                assert (np.asarray(got) == np.asarray(want)).all(), \
+                    f"{tag}: sparse halo diverged from dense"
+                assert int(it_g) == int(it_w), (tag, int(it_g), int(it_w))
+                dd, ds = td.as_dict(), ts.as_dict()
+                assert ds["halo_rounds"] == dd["halo_rounds"], tag
+                assert ds["halo_bytes"] < dd["halo_bytes"], (
+                    f"{tag}: sparse not cheaper: {ds} vs {dd}")
+                assert ds["quiet_pair_rounds"] > 0, tag
+        # zero-frontier entry: no rounds, no bytes, identity output
+        t0 = HL.HaloTelemetry()
+        zf = jnp.zeros((n,), jnp.bool_)
+        out0, it0 = PL.halo_propagate(plan, xs, zf, live, max_iters=64,
+                                      halo_mode="sparse", telemetry=t0)
+        assert (np.asarray(out0) == np.asarray(plane)).all()
+        assert int(it0) == 0 and t0.as_dict()["halo_bytes"] == 0
+    # placement contract: the probe's (d, d) count matrix comes out
+    # row-partitioned, the scalars replicated — exactly what
+    # launch.sharding.reach_halo_shardings promises
+    dp = plan.fwd
+    dummy = jnp.zeros((1,), jnp.bool_)
+    cnt, front, hub_any = HL._probe_impl(
+        frontier, dp.h_send, dp.h_valid, dummy,
+        jnp.zeros((1,), jnp.int32), jnp.zeros((1,), jnp.int32),
+        mesh=mesh, use_hubs=False)
+    pair_sh, repl_sh = reach_halo_shardings(mesh)
+    assert cnt.sharding.is_equivalent_to(pair_sh, cnt.ndim), cnt.sharding
+    assert front.sharding.is_equivalent_to(repl_sh, front.ndim)
+    assert hub_any.sharding.is_equivalent_to(repl_sh, hub_any.ndim)
+    print("halo-level parity OK")
+
+
+def overflow_fallback_and_caps():
+    """Bucket overflow = regime transition: under tiny capacities the wide
+    early rounds MUST run dense and the converged tail sparse, bitwise
+    equal throughout; an all-overflowing cap schedule degrades to pure
+    dense; a capacity override threads end to end."""
+    n, m = 256, 1400
+    src, dst = power_law(n, m, seed=5)
+    g = make_graph(src, dst, n, m_cap=m + 64)
+    mesh = D.vertex_mesh(4)
+    live = G.edge_mask(g)
+    plan = PL.shard_plan(g.src, g.dst, m, n, mesh)
+    # wide frontier: every 2nd vertex seeds -> the early rounds' per-pair
+    # changed-row counts exceed the tiny caps below (the power-law cut
+    # concentrates on few high-degree rows, so the overflow threshold is
+    # single digits, not O(H))
+    seeds = np.arange(0, n, 2, dtype=np.int32)
+    plane, _, frontier = _seed_planes(n, 16, seeds)
+    xs = jax.device_put(plane, D.vertex_index_shardings(mesh).dl_in)
+    want, it_w = PL.halo_propagate(plan, xs, frontier, live, max_iters=64)
+    ts = HL.HaloTelemetry()
+    got, it_g = PL.halo_propagate(plan, xs, frontier, live, max_iters=64,
+                                  halo_mode="sparse", telemetry=ts,
+                                  halo_caps=(2, 8))
+    assert (np.asarray(got) == np.asarray(want)).all(), \
+        "overflow fallback diverged from dense"
+    assert int(it_g) == int(it_w)
+    d = ts.as_dict()
+    assert d["dense_rounds"] > 0, f"tiny caps never overflowed: {d}"
+    assert d["sparse_rounds"] > 0, f"converged tail never sparse: {d}"
+    assert d["halo_rounds"] == d["dense_rounds"] + d["sparse_rounds"] \
+        + d["local_rounds"], d
+    # the hub lane absorbs exactly the overflowing rows: the same stream
+    # under the same caps with the top-8 cut rows on the broadcast lane
+    # needs NO dense fallback round, and still matches bitwise
+    ph = PL.shard_plan(g.src, g.dst, m, n, mesh, hub_count=8)
+    th = HL.HaloTelemetry()
+    goth, _ = PL.halo_propagate(ph, xs, frontier, live, max_iters=64,
+                                halo_mode="sparse", telemetry=th,
+                                halo_caps=(2, 8))
+    assert (np.asarray(goth) == np.asarray(want)).all()
+    dh = th.as_dict()
+    assert dh["dense_rounds"] == 0 and dh["sparse_rounds"] > 0, dh
+    assert dh["halo_bytes"] < d["halo_bytes"], (dh, d)
+    # caps >= H are dropped by the sanitizer -> no sparse shapes at all ->
+    # every round dense, still bitwise equal
+    H = plan.fwd.h_send.shape[2]
+    t2 = HL.HaloTelemetry()
+    got2, _ = PL.halo_propagate(plan, xs, frontier, live, max_iters=64,
+                                halo_mode="sparse", telemetry=t2,
+                                halo_caps=(H, 4 * H))
+    assert (np.asarray(got2) == np.asarray(want)).all()
+    d2 = t2.as_dict()
+    assert d2["sparse_rounds"] == 0 and d2["dense_rounds"] > 0, d2
+    assert HL.bucket_caps(8) == ()
+    assert HL.bucket_caps(64) == (8, 16)
+    print("overflow fallback + caps override OK")
+
+
+def degenerate_plans():
+    """Degenerate shard plans under sparse mode: a cut-free (local-only)
+    graph must run pure local-regime rounds (no payload collective, tiny
+    byte count); a hub request on a graph with no cut-degree>=2 vertex
+    must produce the all-padding hub table and still match; H=0 hubs on
+    an empty-edge plan must not crash the probe."""
+    mesh = D.vertex_mesh(4)
+    n = 64
+    rng = np.random.default_rng(12)
+    # all edges inside shard 0's row range [0, 16): no cross-shard traffic
+    src = rng.integers(0, 16, 80).astype(np.int32)
+    dst = rng.integers(0, 16, 80).astype(np.int32)
+    g = make_graph(src, dst, n, m_cap=128)
+    live = G.edge_mask(g)
+    from repro.core import propagate as PROP
+    seeds = np.arange(12, dtype=np.int32)
+    plane, _, frontier = _seed_planes(n, 16, seeds)
+    want, it_w = PROP.propagate(plane, g.src, g.dst, live, frontier,
+                                n_cap=n, max_iters=32)
+    xs = jax.device_put(plane, D.vertex_index_shardings(mesh).dl_in)
+    for hub in (0, 4):
+        plan = PL.shard_plan(g.src, g.dst, len(src), n, mesh,
+                             hub_count=hub)
+        if hub:
+            # no cut edges at all -> hub selection finds nothing; the
+            # (hub,) table is pure n_cap padding, owned by no shard
+            assert int(np.asarray(plan.fwd.h_valid).sum()) == 0
+            assert (np.asarray(plan.fwd.hubs) == n).all()
+        ts = HL.HaloTelemetry()
+        got, it_g = PL.halo_propagate(plan, xs, frontier, live,
+                                      max_iters=32, halo_mode="sparse",
+                                      telemetry=ts)
+        assert (np.asarray(got) == np.asarray(want)).all(), \
+            f"hub={hub}: local-only sparse diverged"
+        assert int(it_g) == int(it_w)
+        d = ts.as_dict()
+        assert d["local_rounds"] == d["halo_rounds"] > 0, d
+        assert d["dense_rounds"] == 0 and d["sparse_rounds"] == 0, d
+        assert d["halo_bytes"] == d["halo_rounds"] * 4 * 4, d
+    # empty edge set: plan fabricates the dummy halo row; sparse entry
+    # must return the identity immediately
+    ge = make_graph(src[:0], dst[:0], n, m_cap=16)
+    pe = PL.shard_plan(ge.src, ge.dst, 0, n, mesh, hub_count=4)
+    oute, ite = PL.halo_propagate(pe, xs, frontier, G.edge_mask(ge),
+                                  max_iters=32, halo_mode="sparse")
+    assert (np.asarray(oute) == np.asarray(plane)).all()
+    assert int(ite) in (0, 1)
+    print("degenerate plans OK")
+
+
+def lifecycle_sparse_differential():
+    """The whole vertex-sharded lifecycle driven with halo_mode='sparse'
+    (hubs on) == the replicated oracle bitwise, bool AND packed reprs:
+    build -> hostile insert batches (new boundary vertices force halo
+    granule spills and plan extension) -> delete -> delta rebuild ->
+    post-delta insert."""
+    n, m = 256, 1400
+    # initial edges only among [0, 160): later batches hit fresh rows so
+    # extend_plan must grow halo granules mid-stream
+    rng = np.random.default_rng(7)
+    src = rng.integers(0, 160, m).astype(np.int32)
+    dst = rng.integers(0, 160, m).astype(np.int32)
+    g = make_graph(src, dst, n, m_cap=m + 512)
+    mesh = D.vertex_mesh(4)
+    for repr_ in ("bool", "packed"):
+        hk = dict(halo_mode="sparse", halo_caps=None)
+        ref = DBLIndex.build(g, n_cap=n, **K)
+        idx, plan = D.build_vertex_sharded(g, mesh, n_cap=n,
+                                           plane_repr=repr_, hub_count=8,
+                                           **hk, **K)
+        assert plan.hub_count == 8
+        assert_index_eq(ref, idx, f"{repr_} sparse build")
+        for r in range(3):
+            ns = rng.integers(0, n, 32).astype(np.int32)
+            nd = rng.integers(0, n, 32).astype(np.int32)
+            ref = ref.insert_edges(ns, nd, max_iters=64)
+            idx, plan, _ = D.insert_vertex_sharded(
+                idx, plan, ns, nd, max_iters=64, plane_repr=repr_, **hk)
+            assert_index_eq(ref, idx, f"{repr_} sparse insert round {r}")
+        # the spilled granules grew the halo: hubs must have survived the
+        # extension with their receiver slots remapped, not dropped
+        assert np.asarray(plan.fwd.hubs).shape[0] == 8
+        ds, dd = src[10:60], dst[10:60]
+        ref = ref.delete_edges(ds, dd)
+        idx = idx.delete_edges(ds, dd)
+        refd = ref.rebuild(mode="delta", max_iters=64)
+        idxd, pland, info = D.rebuild_vertex_sharded(
+            idx, plan, mode="delta", max_iters=64, plane_repr=repr_, **hk)
+        assert info["mode"] == "delta", info
+        assert_index_eq(refd, idxd, f"{repr_} sparse delta rebuild")
+        ns = rng.integers(0, n, 16).astype(np.int32)
+        nd = rng.integers(0, n, 16).astype(np.int32)
+        refd2 = refd.insert_edges(ns, nd, max_iters=64)
+        idxd2, _, _ = D.insert_vertex_sharded(
+            idxd, pland, ns, nd, max_iters=64, plane_repr=repr_, **hk)
+        assert_index_eq(refd2, idxd2, f"{repr_} post-delta sparse insert")
+    print("lifecycle sparse differential OK")
+
+
+def engine_telemetry_stream():
+    """Engine-level: a sparse-mode sharded engine answers bitwise equal to
+    a dense-mode one over a converging insert/query/rebuild stream while
+    reporting the SAME halo round count but STRICTLY fewer halo bytes;
+    the counters surface through engine.halo_stats() and
+    ReachabilityServer.engine_stats()."""
+    n, m = 256, 1400
+    src, dst = power_law(n, m, seed=9)
+    g = make_graph(src, dst, n, m_cap=m + 1024)
+    mesh = D.vertex_mesh(4)
+    ref = DBLIndex.build(g, n_cap=n, **K)
+    eng_d = QueryEngine(ref, bfs_chunk=64, max_iters=64, vertex_mesh=mesh)
+    eng_s = QueryEngine(ref, bfs_chunk=64, max_iters=64, vertex_mesh=mesh,
+                        halo_mode="sparse", hub_count=8)
+    rng = np.random.default_rng(4)
+    for r in range(6):
+        ns = rng.integers(0, n, 24).astype(np.int32)
+        nd = rng.integers(0, n, 24).astype(np.int32)
+        eng_d.insert(ns, nd)
+        eng_s.insert(ns, nd)
+        u = rng.integers(0, n, 96).astype(np.int32)
+        v = rng.integers(0, n, 96).astype(np.int32)
+        assert (eng_d.query(u, v) == eng_s.query(u, v)).all(), r
+    assert_index_eq(eng_d.index, eng_s.index, "engine sparse stream")
+    eng_d.delete(src[:30], dst[:30])
+    eng_s.delete(src[:30], dst[:30])
+    i1 = eng_d.rebuild(mode="auto")
+    i2 = eng_s.rebuild(mode="auto")
+    assert_index_eq(i1, i2, "engine sparse rebuild")
+    sd, ss = eng_d.halo_stats(), eng_s.halo_stats()
+    assert ss["fixpoints"] == sd["fixpoints"] > 0, (sd, ss)
+    assert ss["halo_rounds"] == sd["halo_rounds"] > 0, (sd, ss)
+    assert 0 < ss["halo_bytes"] < sd["halo_bytes"], (sd, ss)
+    assert ss["quiet_pair_rounds"] > 0
+    assert sd["sparse_rounds"] == 0 and ss["sparse_rounds"] > 0
+    # EngineStats mirror + server surfacing
+    assert eng_s.stats.halo_bytes == ss["halo_bytes"]
+    assert eng_s.stats.halo_rounds == ss["halo_rounds"]
+    srv = ReachabilityServer(None, engine=eng_s)
+    es = srv.engine_stats()
+    assert es["halo"]["mode"] == "sparse"
+    assert es["halo"]["hub_count"] == 8
+    assert es["halo_bytes"] == ss["halo_bytes"]
+    assert es["halo"]["sparse_rounds"] == ss["sparse_rounds"]
+    print("engine telemetry stream OK")
+
+
+def regime_hlo():
+    """Compiled-HLO inspection of the regime kernels: the sparse regime's
+    payload crosses the mesh via all-to-all (compacted buffers), never an
+    all-gather; the local regime compiles to NO all-to-all at all — the
+    zero-payload quiescent rounds really ship nothing but the liveness
+    psum."""
+    n, m = 256, 1400
+    src, dst = power_law(n, m, seed=1)
+    g = make_graph(src, dst, n, m_cap=m + 64)
+    mesh = D.vertex_mesh(4)
+    live = G.edge_mask(g)
+    plan = PL.shard_plan(g.src, g.dst, m, n, mesh, hub_count=8)
+    dp = plan.fwd
+    seeds = np.arange(8, dtype=np.int32)
+    plane, _, frontier = _seed_planes(n, 16, seeds)
+    xs = jax.device_put(plane, D.vertex_index_shardings(mesh).dl_in)
+    it0 = jnp.zeros((), jnp.int32)
+    texts = {}
+    for kind, cap in (("sparse", 8), ("local", 0)):
+        texts[kind] = HL._regime_impl.lower(
+            xs, frontier, live, it0, dp.e_slot, dp.e_recv, dp.e_gid,
+            dp.e_valid, dp.e_start, dp.e_tail, dp.h_send, dp.h_valid,
+            dp.h_hub, dp.hubs, dp.hub_slot, mesh=mesh, max_iters=64,
+            monoid="or", plane_repr="bool", k=16, kind=kind, cap=cap,
+            lo=0, use_hubs=(kind == "sparse")).compile().as_text()
+    assert "all-gather" not in texts["sparse"], \
+        "sparse regime lowered to an all-gather"
+    assert "all-to-all" in texts["sparse"], \
+        "expected the compacted-bucket all-to-all in the sparse regime"
+    assert "all-to-all" not in texts["local"], \
+        "local regime still ships a payload collective"
+    assert "all-gather" not in texts["local"]
+    print("regime HLO OK")
+
+
+def main():
+    assert len(jax.devices()) == 4, jax.devices()
+    halo_level_parity()
+    overflow_fallback_and_caps()
+    degenerate_plans()
+    lifecycle_sparse_differential()
+    engine_telemetry_stream()
+    regime_hlo()
+    print("SPARSE_HALO_OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -490,7 +490,8 @@ def test_aot_cache_key_includes_every_baked_knob(tmp_path):
     hit under different knobs would silently serve the old semantics
     (e.g. a stale frontier_dtype changing the BFS lane layout).  This
     regression-pins the config blob: frontier_dtype / out_dtype /
-    plane_repr / bfs_kernel / max_iters all key the entries."""
+    plane_repr / bfs_kernel / max_iters / halo_mode / hub_count /
+    halo_caps all key the entries."""
     idx, _, _ = _power_law_index(n=64, m=160, m_extra=8, max_iters=40)
     base_kw = dict(bfs_chunk=32, max_iters=40)
     e1 = QueryEngine(idx, **base_kw)
@@ -500,7 +501,10 @@ def test_aot_cache_key_includes_every_baked_knob(tmp_path):
                  dict(out_dtype="int32"),
                  dict(plane_repr="packed"),
                  dict(bfs_kernel=True),
-                 dict(max_iters=48)):
+                 dict(max_iters=48),
+                 dict(halo_mode="sparse"),
+                 dict(hub_count=8),
+                 dict(halo_caps=(8, 32))):
         e2 = QueryEngine(idx, **{**base_kw, **flip})
         e2.aot_warmup(idx, tmp_path)
         assert e2.aot_cache.hits == 0, f"stale AOT hit under {flip}"
